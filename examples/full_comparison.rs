@@ -1,0 +1,103 @@
+//! End-to-end validation driver (recorded in EXPERIMENTS.md): the full
+//! paper workload — 400 VMs over the Table 3 PM fleet, 5000 cloudlets,
+//! 288 scheduling intervals (24 h), Weibull fault injection — for START
+//! and all six baselines, 5 seeds each, reproducing the paper's §1
+//! headline (−13 % exec time, −11 % contention, −16 % energy, −19 % SLA
+//! violations vs the state of the art).
+//!
+//!     make artifacts && cargo run --release --example full_comparison
+//!
+//! Pass `--fast` for a scaled-down profile (~100 VMs).
+
+use anyhow::Result;
+use start_sim::config::Technique;
+use start_sim::coordinator::{run_many, Cell};
+use start_sim::experiments::{Profile, Table};
+use start_sim::sim::RunMetrics;
+
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let profile = if fast { Profile::Fast } else { Profile::Paper };
+    let base = profile.base_config();
+    let techniques = Technique::paper_set();
+    let seeds = [42u64, 43, 44, 45, 46];
+    println!(
+        "full comparison: {} VMs / {} PMs, {} cloudlets, {} intervals × {} techniques × {} seeds",
+        base.total_vms(),
+        base.total_pms(),
+        base.n_workloads,
+        base.n_intervals,
+        techniques.len(),
+        seeds.len()
+    );
+
+    let mut cells = Vec::new();
+    for &t in &techniques {
+        for &seed in &seeds {
+            let mut cfg = base.clone();
+            cfg.technique = t;
+            cfg.seed = seed;
+            cells.push(Cell { label: format!("{}|{seed}", t.name()), cfg });
+        }
+    }
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let t0 = std::time::Instant::now();
+    let results = run_many(cells, threads, start_sim::find_artifact_dir())?;
+    println!("{} runs in {:.1}s\n", results.len(), t0.elapsed().as_secs_f64());
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let mut table = Table::new(
+        "START vs baselines — paper workload (mean of 5 seeds)",
+        &["technique", "exec (s)", "contention", "energy (kWh)", "SLA viol %", "MAPE %", "spec", "rerun"],
+    );
+    let mut start_row: Option<[f64; 4]> = None;
+    let mut best = [f64::INFINITY; 4];
+    for t in &techniques {
+        let ms: Vec<&RunMetrics> = results
+            .iter()
+            .filter(|(l, _)| l.starts_with(&format!("{}|", t.name())))
+            .map(|(_, m)| m)
+            .collect();
+        let exec = mean(&ms.iter().map(|m| m.avg_execution_time()).collect::<Vec<_>>());
+        let cont = mean(&ms.iter().map(|m| m.avg_contention()).collect::<Vec<_>>());
+        let energy = mean(&ms.iter().map(|m| m.total_energy_kwh()).collect::<Vec<_>>());
+        let sla = mean(&ms.iter().map(|m| m.sla_violation_rate()).collect::<Vec<_>>());
+        let mape = mean(&ms.iter().map(|m| m.straggler_mape()).collect::<Vec<_>>());
+        let spec = mean(&ms.iter().map(|m| m.speculations as f64).collect::<Vec<_>>());
+        let rerun = mean(&ms.iter().map(|m| m.reruns as f64).collect::<Vec<_>>());
+        table.row(vec![
+            t.name().to_string(),
+            format!("{exec:.1}"),
+            format!("{cont:.2}"),
+            format!("{energy:.2}"),
+            format!("{:.2}", 100.0 * sla),
+            format!("{mape:.1}"),
+            format!("{spec:.0}"),
+            format!("{rerun:.0}"),
+        ]);
+        if t.name() == "START" {
+            start_row = Some([exec, cont, energy, sla]);
+        } else {
+            best[0] = best[0].min(exec);
+            best[1] = best[1].min(cont);
+            best[2] = best[2].min(energy);
+            best[3] = best[3].min(sla);
+        }
+    }
+    println!("{}", table.render());
+
+    if let Some(s) = start_row {
+        println!("START vs best baseline per metric (paper targets in parentheses):");
+        let names = [
+            "execution time   (paper −13 %)",
+            "contention       (paper −11 %)",
+            "energy           (paper −16 %)",
+            "SLA violations   (paper −19 %)",
+        ];
+        for i in 0..4 {
+            let delta = 100.0 * (s[i] - best[i]) / best[i].max(1e-12);
+            println!("  {:32}: {delta:+.1} %", names[i]);
+        }
+    }
+    Ok(())
+}

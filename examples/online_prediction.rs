@@ -1,0 +1,68 @@
+//! Online prediction: drive the simulator interval by interval and stream
+//! START's (α, β, E_S) predictions next to the eventual ground truth —
+//! i.e. the Straggler Prediction module of Fig. 1/4 observed live.
+//!
+//!     cargo run --release --example online_prediction
+
+use anyhow::Result;
+use start_sim::config::{SimConfig, Technique};
+use start_sim::coordinator::{build_manager, Models};
+use start_sim::predictor::{FeatureExtractor, StartPredictor};
+use start_sim::runtime::StartModel;
+use start_sim::scheduler;
+use start_sim::sim::engine::Simulation;
+use start_sim::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let models = Models::load_default()?;
+    let mut cfg = SimConfig::paper_defaults();
+    cfg.pm_counts = vec![4, 3, 2];
+    cfg.n_intervals = 30;
+    cfg.n_workloads = 150;
+    cfg.technique = Technique::Start;
+
+    // Separate predictor instance for observation (the manager inside the
+    // simulation owns its own).
+    let model = std::rc::Rc::new(StartModel::load(&models.runtime, &models.manifest)?);
+    let mut probe = StartPredictor::new(model, cfg.k_straggler);
+    let mut fx = FeatureExtractor::new(&models.manifest);
+
+    let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+    let manager = build_manager(cfg.technique, &models, &cfg)?;
+    let mut sim = Simulation::new(cfg.clone(), &models.manifest, sched, manager);
+
+    println!("interval |  active jobs | sample job:   alpha    beta     E_S   (q)");
+    println!("---------+--------------+------------------------------------------");
+    for interval in 0..cfg.n_intervals {
+        sim.step_interval(true);
+        fx.snapshot(&mut sim.world);
+        let active: Vec<_> =
+            sim.world.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        if let Some(&job) = active.first() {
+            let p = probe.predict(&sim.world, &fx, job)?;
+            let q = sim.world.jobs[job].tasks.len();
+            println!(
+                "{interval:8} | {:12} | job {job:4}: {:7.3} {:7.3} {:7.2}  ({q})",
+                active.len(),
+                p.alpha,
+                p.beta,
+                p.expected
+            );
+        } else {
+            println!("{interval:8} | {:12} |", active.len());
+        }
+    }
+
+    // Drain and score.
+    let metrics = {
+        let mut extra = 0;
+        while sim.world.jobs.iter().any(|j| j.is_active()) && extra < 100 {
+            sim.step_interval(false);
+            extra += 1;
+        }
+        sim.metrics
+    };
+    println!("\nfinal: {} jobs, straggler MAPE {:.1} % (Eq. 14), F1 {:.3}",
+        metrics.jobs_done, metrics.straggler_mape(), metrics.confusion.f1());
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT Encoder-LSTM, run a small simulated cloud
+//! with START managing stragglers, and report the QoS metrics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use start_sim::config::{SimConfig, Technique};
+use start_sim::coordinator::{run_one, Models};
+
+fn main() -> Result<()> {
+    // 1. Load the AOT artifacts (HLO text → PJRT executables).
+    let models = Models::load_default()?;
+    println!(
+        "loaded model: encoder ({}×{} hosts + {}×{} tasks) → 2×LSTM({}) → (α, β)",
+        models.manifest.n_hosts,
+        models.manifest.m_feats,
+        models.manifest.q_tasks,
+        models.manifest.p_feats,
+        models.manifest.hidden,
+    );
+    println!("PJRT platform: {}", models.runtime.platform());
+
+    // 2. A small cloud: ~100 VMs, 24 intervals, START managing stragglers.
+    let mut cfg = SimConfig::paper_defaults();
+    cfg.pm_counts = vec![6, 4, 2];
+    cfg.n_intervals = 24;
+    cfg.n_workloads = 300;
+    cfg.technique = Technique::Start;
+
+    println!(
+        "\nsimulating {} VMs / {} PMs, {} cloudlets, {} intervals …",
+        cfg.total_vms(),
+        cfg.total_pms(),
+        cfg.n_workloads,
+        cfg.n_intervals
+    );
+    let m = run_one(&cfg, &models)?;
+
+    // 3. Report.
+    println!("\n— results (technique = START) —");
+    println!("jobs completed     : {}", m.jobs_done);
+    println!("tasks completed    : {}", m.tasks_done);
+    println!("avg execution time : {:.1} s (Eq. 8)", m.avg_execution_time());
+    println!("energy             : {:.2} kWh (Eq. 7)", m.total_energy_kwh());
+    println!("SLA violation rate : {:.1} % (Eq. 13)", 100.0 * m.sla_violation_rate());
+    println!("straggler MAPE     : {:.1} % (Eq. 14)", m.straggler_mape());
+    println!("mitigations        : {} speculations, {} re-runs", m.speculations, m.reruns);
+    println!("prediction overhead: {:.0} ms total", 1e3 * m.manager_overhead_s);
+    Ok(())
+}

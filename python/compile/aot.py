@@ -1,0 +1,196 @@
+"""AOT compile path: train/load weights, bake, lower to HLO **text**.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+
+* ``start_step.hlo.txt``          (m_h, m_t, h1, c1, h2, c2) → (α, β, h1', c1', h2', c2')
+* ``start_rollout.hlo.txt``       (m_h_seq, m_t_seq) → (α, β)      [B = 1]
+* ``start_rollout_b8.hlo.txt``    batched rollout                  [B = 8]
+* ``igru_step.hlo.txt``           (m_t, h) → (pred, h')
+* ``manifest.json``               shapes + constants + artifact index
+* ``golden.json``                 pinned inputs/outputs for Rust parity tests
+* ``weights.npz``                 trained parameters (cache)
+
+Weights are baked into the computation as constants, so the Rust hot path
+marshals only the feature matrices.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dims, model, synth, train
+
+# train.py selects the differentiable jnp reference impl at import time;
+# the AOT artifacts must exercise the L1 Pallas kernels.
+model.set_impl(use_pallas=True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the baked weight
+    matrices must survive the text round-trip (the default elides anything
+    big as ``constant({...})``, which the Rust-side parser cannot restore).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_closures(start_params, igru_params):
+    """Bind trained weights as constants; return name → (fn, arg_specs)."""
+    B = 1
+    T = dims.ROLLOUT_STEPS
+    mh = (B, dims.N_HOSTS, dims.M_FEATS)
+    mt = (B, dims.Q_TASKS, dims.P_FEATS)
+    hid = (B, dims.HIDDEN)
+
+    def start_step_fn(m_h, m_t, h1, c1, h2, c2):
+        alpha, beta, (h1, c1, h2, c2) = model.start_step(
+            start_params, m_h, m_t, (h1, c1, h2, c2)
+        )
+        return alpha, beta, h1, c1, h2, c2
+
+    def rollout_fn(m_h_seq, m_t_seq):
+        return model.start_rollout(start_params, m_h_seq, m_t_seq)
+
+    def igru_fn(m_t, h):
+        return model.igru_step(igru_params, m_t, h)
+
+    B8 = 8
+    return {
+        "start_step": (
+            start_step_fn,
+            (_spec(mh), _spec(mt), _spec(hid), _spec(hid), _spec(hid), _spec(hid)),
+        ),
+        "start_rollout": (
+            rollout_fn,
+            (_spec((T,) + mh), _spec((T,) + mt)),
+        ),
+        "start_rollout_b8": (
+            rollout_fn,
+            (
+                _spec((T, B8, dims.N_HOSTS, dims.M_FEATS)),
+                _spec((T, B8, dims.Q_TASKS, dims.P_FEATS)),
+            ),
+        ),
+        "igru_step": (
+            igru_fn,
+            (_spec(mt), _spec((B, dims.IGRU_HIDDEN))),
+        ),
+    }
+
+
+def emit_golden(closures, out_dir):
+    """Pinned input/output vectors so Rust can verify PJRT numerics parity,
+    plus generative-model goldens pinning trace/generative.rs to synth.py."""
+    golden = {}
+    key = jax.random.PRNGKey(42)
+    for name, (fn, specs) in closures.items():
+        key, *ks = jax.random.split(key, len(specs) + 1)
+        args = [
+            jax.random.uniform(k, s.shape, dtype=s.dtype) for k, s in zip(ks, specs)
+        ]
+        outs = jax.jit(fn)(*args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        golden[name] = {
+            "inputs": [np.asarray(a).ravel().tolist() for a in args],
+            "input_shapes": [list(s.shape) for s in specs],
+            "outputs": [np.asarray(o).ravel().tolist() for o in outs],
+            "output_shapes": [list(np.asarray(o).shape) for o in outs],
+        }
+
+    # Generative-model parity pins (feature matrices → α*, β*).
+    kf = jax.random.PRNGKey(7)
+    m_h_seq, m_t_seq = synth.random_feature_sequences(kf, 8)
+    alpha, beta = synth.true_pareto_params(m_h_seq[-1], m_t_seq[-1])
+    golden["generative"] = {
+        "m_h": np.asarray(m_h_seq[-1]).ravel().tolist(),
+        "m_t": np.asarray(m_t_seq[-1]).ravel().tolist(),
+        "batch": 8,
+        "alpha": np.asarray(alpha).tolist(),
+        "beta": np.asarray(beta).tolist(),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def emit_manifest(out_dir, artifacts):
+    manifest = {
+        "n_hosts": dims.N_HOSTS,
+        "m_feats": dims.M_FEATS,
+        "q_tasks": dims.Q_TASKS,
+        "p_feats": dims.P_FEATS,
+        "hidden": dims.HIDDEN,
+        "igru_hidden": dims.IGRU_HIDDEN,
+        "rollout_steps": dims.ROLLOUT_STEPS,
+        "rollout_batch": 8,
+        "ema_weight": dims.EMA_WEIGHT,
+        "k_default": dims.K_DEFAULT,
+        "infer_period_s": dims.INFER_PERIOD_S,
+        "infer_window_s": dims.INFER_WINDOW_S,
+        "generative": synth.GEN,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=1500)
+    ap.add_argument("--igru-steps", type=int, default=800)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    weights_path = os.path.join(args.out_dir, "weights.npz")
+    if args.retrain or not os.path.exists(weights_path):
+        key = jax.random.PRNGKey(args.seed)
+        k1, k2 = jax.random.split(key)
+        start_params, _ = train.train_start(k1, steps=args.train_steps)
+        igru_params, _ = train.train_igru(k2, steps=args.igru_steps)
+        train.save_weights(weights_path, start_params, igru_params)
+        print(f"trained + saved weights → {weights_path}")
+    else:
+        start_params, igru_params = train.load_weights(weights_path)
+        print(f"loaded cached weights ← {weights_path}")
+
+    closures = build_closures(start_params, igru_params)
+    artifacts = {}
+    for name, (fn, specs) in closures.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = fname
+        print(f"lowered {name:18s} → {fname} ({len(text)} chars)")
+
+    emit_golden(closures, args.out_dir)
+    emit_manifest(args.out_dir, artifacts)
+    print("wrote manifest.json + golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Shared dimension / feature-layout constants for the START model stack.
+
+These constants are the single source of truth for the AOT interchange
+shapes.  `aot.py` serializes them into ``artifacts/manifest.json`` and the
+Rust coordinator (``rust/src/runtime/manifest.rs``) reads them back, so the
+feature vectors built on the Rust side line up bit-for-bit with what the
+network was trained on.
+
+Feature layouts (all values normalized to roughly [0, 1]):
+
+``M_H`` row (one per physical host slot, ``M_FEATS`` = 12)::
+
+    0  cpu_util      fraction of host MIPS in use
+    1  ram_util      fraction of host RAM in use
+    2  disk_util     fraction of host disk in use
+    3  bw_util       fraction of host bandwidth in use
+    4  cpu_cap       host MIPS / max MIPS in the fleet
+    5  ram_cap       host RAM / max RAM
+    6  disk_cap      host disk / max disk
+    7  bw_cap        host bandwidth / max bandwidth
+    8  power_frac    (P_max - P_min) / global max spread
+    9  cost_frac     $/interval, normalized
+    10 n_tasks_frac  active tasks on host / Q_TASKS
+    11 is_up         1.0 if the host is serviceable, else 0.0
+
+``M_T`` row (one per task slot of the job under prediction, ``P_FEATS`` = 8)::
+
+    0  cpu_req       task MIPS demand / host max MIPS
+    1  ram_req       task RAM demand / host max RAM
+    2  disk_req      task disk demand / host max disk
+    3  bw_req        task bandwidth demand / host max bandwidth
+    4  prev_host     host index the task ran on last interval / N_HOSTS
+    5  deadline      1.0 if the job is deadline-driven
+    6  progress      fraction of the task's work completed
+    7  active        1.0 for a real task row, 0.0 for zero-padding
+"""
+
+# Host-matrix shape (paper: n hosts x m features).
+N_HOSTS = 20
+M_FEATS = 12
+
+# Task-matrix shape (paper: q' = max tasks per job, p features).
+Q_TASKS = 10
+P_FEATS = 8
+
+# Encoder: |M_H| + |M_T| -> 128 -> 128 -> 32 (softplus, Sec. 3.2).
+ENC_IN = N_HOSTS * M_FEATS + Q_TASKS * P_FEATS
+ENC_H1 = 128
+ENC_H2 = 128
+ENC_OUT = 32
+
+# Two stacked LSTM layers of 32 units (Sec. 3.2).
+HIDDEN = 32
+
+# Pareto head: 32 -> 2 ((alpha, beta) after ReLU; +1 on alpha).
+HEAD_OUT = 2
+
+# START inference cadence (Sec. 3.2, grid-searched in Fig. 2).
+INFER_PERIOD_S = 1.0   # I
+INFER_WINDOW_S = 5.0   # T
+EMA_WEIGHT = 0.8       # weight on the latest resource matrix
+K_DEFAULT = 1.5        # straggler parameter multiple of the mean
+
+ROLLOUT_STEPS = 5      # T / I
+
+# IGRU-SD baseline: GRU over the flattened task matrix.
+IGRU_IN = Q_TASKS * P_FEATS
+IGRU_HIDDEN = 32
+IGRU_OUT = Q_TASKS     # predicted next-interval CPU demand per task slot

@@ -1,0 +1,64 @@
+"""Pallas fused GRU-cell kernel — compute core of the IGRU-SD baseline.
+
+Same fusion strategy as lstm.py: one wide ``(IN, 3H)`` input GEMM plus one
+``(H, 3H)`` recurrent GEMM, elementwise r/z/n epilogue on the VPU in the
+same VMEM block.  Note the GRU "new" gate needs the *ungated* recurrent
+product ``h @ Wh_n`` (PyTorch convention), so the input and recurrent GEMMs
+are kept separate rather than summed before the epilogue.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, ho_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    gx = jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32) + b_ref[
+        ...
+    ].astype(jnp.float32)
+    gh = jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+    hidden = h.shape[-1]
+    r = _sigmoid(gx[:, :hidden] + gh[:, :hidden])
+    z = _sigmoid(gx[:, hidden : 2 * hidden] + gh[:, hidden : 2 * hidden])
+    n = jnp.tanh(gx[:, 2 * hidden :] + r * gh[:, 2 * hidden :])
+    h_new = (1.0 - z) * n + z * h.astype(jnp.float32)
+    ho_ref[...] = h_new.astype(ho_ref.dtype)
+
+
+@jax.jit
+def gru_cell(x, h, wx, wh, b):
+    """Fused GRU cell: returns h'.
+
+    x: (B, IN), h: (B, H), wx: (IN, 3H), wh: (H, 3H), b: (3H,).
+    Gate order r, z, n (matches ref.gru_cell_ref).
+    """
+    batch, d_in = x.shape
+    hidden = h.shape[-1]
+    assert wx.shape == (d_in, 3 * hidden)
+    assert wh.shape == (hidden, 3 * hidden)
+    assert b.shape == (3 * hidden,)
+
+    return pl.pallas_call(
+        _gru_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, hidden), h.dtype),
+        interpret=True,
+    )(x, h, wx, wh, b)
+
+
+def vmem_bytes(batch, d_in, hidden, itemsize=4):
+    """Whole-cell VMEM footprint estimate (single block)."""
+    return itemsize * (
+        batch * d_in
+        + batch * hidden
+        + d_in * 3 * hidden
+        + hidden * 3 * hidden
+        + 3 * hidden
+        + 2 * batch * 3 * hidden
+        + batch * hidden
+    )

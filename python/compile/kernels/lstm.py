@@ -1,0 +1,80 @@
+"""Pallas fused LSTM-cell kernel.
+
+The paper's LSTM layers are 32-wide, so the classic MXU-utilization trick
+applies: fuse the four gate matmuls into a single ``(IN, 4H)`` matmul (and
+one ``(H, 4H)`` recurrent matmul) so the systolic array sees one wide GEMM
+instead of four skinny ones, then run the elementwise gate epilogue
+(sigmoid/tanh, Hadamard products) on the VPU inside the same block —
+nothing spills to HBM between the GEMM and the state update.
+
+Weights + state for a 32-unit cell are ~70 KB in f32: the entire cell fits
+in VMEM in one block, so the grid is trivial (1,) and the BlockSpecs are
+whole-array.  interpret=True is mandatory on CPU (see dense.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, ho_ref, co_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # One fused (B, 4H) gate GEMM pair.
+    gates = (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...].astype(jnp.float32)
+    )
+    hidden = h.shape[-1]
+    i = _sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    f = _sigmoid(gates[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = _sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    ho_ref[...] = h_new.astype(ho_ref.dtype)
+    co_ref[...] = c_new.astype(co_ref.dtype)
+
+
+@jax.jit
+def lstm_cell(x, h, c, wx, wh, b):
+    """Fused LSTM cell: returns (h', c').
+
+    x: (B, IN), h/c: (B, H), wx: (IN, 4H), wh: (H, 4H), b: (4H,).
+    Gate order i, f, g, o (matches ref.lstm_cell_ref).
+    """
+    batch, d_in = x.shape
+    hidden = h.shape[-1]
+    assert wx.shape == (d_in, 4 * hidden), (wx.shape, (d_in, 4 * hidden))
+    assert wh.shape == (hidden, 4 * hidden)
+    assert b.shape == (4 * hidden,)
+    assert c.shape == (batch, hidden)
+
+    h_new, c_new = pl.pallas_call(
+        _lstm_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, hidden), h.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), c.dtype),
+        ),
+        interpret=True,
+    )(x, h, c, wx, wh, b)
+    return h_new, c_new
+
+
+def vmem_bytes(batch, d_in, hidden, itemsize=4):
+    """Whole-cell VMEM footprint estimate (single block)."""
+    return itemsize * (
+        batch * d_in
+        + 2 * batch * hidden          # h, c in
+        + d_in * 4 * hidden           # wx
+        + hidden * 4 * hidden         # wh
+        + 4 * hidden                  # b
+        + batch * 4 * hidden          # gates scratch
+        + 2 * batch * hidden          # h', c'
+    )

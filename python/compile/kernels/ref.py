@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+The Pallas kernels in ``dense.py`` / ``lstm.py`` / ``gru.py`` are validated
+against these functions by ``python/tests/test_kernel.py`` (hypothesis
+sweeps over shapes and dtypes).  Keep these implementations boring: plain
+``jnp`` ops, no pallas, no tricks — they ARE the correctness definition.
+"""
+
+import jax.numpy as jnp
+
+
+def softplus(x):
+    """Numerically-stable softplus: log(1 + exp(x))."""
+    return jnp.logaddexp(x, 0.0)
+
+
+def dense_ref(x, w, b, activation="softplus"):
+    """y = act(x @ w + b).
+
+    x: (B, IN), w: (IN, OUT), b: (OUT,) -> (B, OUT)
+    """
+    y = x @ w + b
+    if activation == "softplus":
+        return softplus(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Standard LSTM cell (gate order i, f, g, o).
+
+    x: (B, IN), h/c: (B, H), wx: (IN, 4H), wh: (H, 4H), b: (4H,)
+    Returns (h', c').
+    """
+    hidden = h.shape[-1]
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i = jnp.clip(jnp.nan_to_num(1.0 / (1.0 + jnp.exp(-i))), 0.0, 1.0)
+    f = jnp.clip(jnp.nan_to_num(1.0 / (1.0 + jnp.exp(-f))), 0.0, 1.0)
+    o = jnp.clip(jnp.nan_to_num(1.0 / (1.0 + jnp.exp(-o))), 0.0, 1.0)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    assert h_new.shape[-1] == hidden
+    return h_new, c_new
+
+
+def gru_cell_ref(x, h, wx, wh, b):
+    """Standard GRU cell (gate order r, z, n).
+
+    x: (B, IN), h: (B, H), wx: (IN, 3H), wh: (H, 3H), b: (3H,)
+    Returns h'.
+    """
+    hidden = h.shape[-1]
+    gx = x @ wx + b
+    gh = h @ wh
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = 1.0 / (1.0 + jnp.exp(-(rx + rh)))
+    z = 1.0 / (1.0 + jnp.exp(-(zx + zh)))
+    n = jnp.tanh(nx + r * nh)
+    h_new = (1.0 - z) * n + z * h
+    assert h_new.shape[-1] == hidden
+    return h_new

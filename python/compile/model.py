@@ -1,0 +1,196 @@
+"""L2: the START Encoder-LSTM model and the IGRU-SD baseline model.
+
+Faithful to paper §3.2:
+
+* Encoder — 4 fully-connected layers with softplus activations:
+  input ``|M_H| + |M_T|`` → 128 → 128 → 32 (the input "layer" is the
+  flatten+concat of the two feature matrices).
+* LSTM — 2 stacked layers, 32 units each.  The cell consumes the encoder
+  output λ and the previous hidden state η_{t−1}: η_t = LSTM(η_{t−1}, λ).
+* Head — fully-connected 32 → 2, ReLU so (α, β) are positive, +1 on α so
+  the Pareto mean is defined (α > 1).
+
+All matmuls route through the Pallas kernels in ``kernels/`` so the AOT
+HLO exercises the L1 layer.  The exponential-moving-average smoothing of
+the input matrices (weight 0.8 on the latest matrix) is applied by the
+Rust feature extractor, which owns the history; the model sees smoothed
+matrices.
+
+Also defined here: the IGRU-SD baseline network (GRU over the flattened
+task matrix, predicting next-interval per-task CPU demand), used by the
+``baselines/igru`` module on the Rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import dims
+from .kernels import ref
+from .kernels.dense import dense as _dense_pallas
+from .kernels.gru import gru_cell as _gru_pallas
+from .kernels.lstm import lstm_cell as _lstm_pallas
+
+# Implementation switch: the Pallas kernels run under interpret=True, which
+# does not support reverse-mode autodiff, so training (train.py) routes
+# through the pure-jnp reference ops (bit-compatible — pinned by
+# tests/test_kernel.py) while AOT lowering uses the Pallas kernels.
+_USE_PALLAS = True
+
+
+def set_impl(use_pallas: bool):
+    """Select kernel implementation: Pallas (AOT path) or ref (training)."""
+    global _USE_PALLAS
+    _USE_PALLAS = use_pallas
+
+
+def dense(x, w, b, activation="softplus"):
+    if _USE_PALLAS:
+        return _dense_pallas(x, w, b, activation=activation)
+    return ref.dense_ref(x, w, b, activation=activation)
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    if _USE_PALLAS:
+        return _lstm_pallas(x, h, c, wx, wh, b)
+    return ref.lstm_cell_ref(x, h, c, wx, wh, b)
+
+
+def gru_cell(x, h, wx, wh, b):
+    if _USE_PALLAS:
+        return _gru_pallas(x, h, wx, wh, b)
+    return ref.gru_cell_ref(x, h, wx, wh, b)
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_start_params(key):
+    """Initialize Encoder-LSTM parameters as a flat dict of arrays."""
+    ks = jax.random.split(key, 12)
+    p = {
+        # Encoder MLP.
+        "enc_w1": _glorot(ks[0], (dims.ENC_IN, dims.ENC_H1)),
+        "enc_b1": jnp.zeros((dims.ENC_H1,), jnp.float32),
+        "enc_w2": _glorot(ks[1], (dims.ENC_H1, dims.ENC_H2)),
+        "enc_b2": jnp.zeros((dims.ENC_H2,), jnp.float32),
+        "enc_w3": _glorot(ks[2], (dims.ENC_H2, dims.ENC_OUT)),
+        "enc_b3": jnp.zeros((dims.ENC_OUT,), jnp.float32),
+        # LSTM layer 1 (input = encoder output).
+        "lstm1_wx": _glorot(ks[3], (dims.ENC_OUT, 4 * dims.HIDDEN)),
+        "lstm1_wh": _glorot(ks[4], (dims.HIDDEN, 4 * dims.HIDDEN)),
+        "lstm1_b": jnp.zeros((4 * dims.HIDDEN,), jnp.float32),
+        # LSTM layer 2.
+        "lstm2_wx": _glorot(ks[5], (dims.HIDDEN, 4 * dims.HIDDEN)),
+        "lstm2_wh": _glorot(ks[6], (dims.HIDDEN, 4 * dims.HIDDEN)),
+        "lstm2_b": jnp.zeros((4 * dims.HIDDEN,), jnp.float32),
+        # (α, β) head.  Bias starts at 0.5 so the ReLU head begins in its
+        # active region (a zero init leaves half the gradient paths dead).
+        "head_w": _glorot(ks[7], (dims.HIDDEN, dims.HEAD_OUT)),
+        "head_b": 0.5 * jnp.ones((dims.HEAD_OUT,), jnp.float32),
+    }
+    # Forget-gate bias = 1.0: standard LSTM trainability trick.
+    for name in ("lstm1_b", "lstm2_b"):
+        b = p[name]
+        p[name] = b.at[dims.HIDDEN : 2 * dims.HIDDEN].set(1.0)
+    return p
+
+
+def init_igru_params(key):
+    """Initialize the IGRU-SD baseline GRU parameters."""
+    ks = jax.random.split(key, 4)
+    return {
+        "gru_wx": _glorot(ks[0], (dims.IGRU_IN, 3 * dims.IGRU_HIDDEN)),
+        "gru_wh": _glorot(ks[1], (dims.IGRU_HIDDEN, 3 * dims.IGRU_HIDDEN)),
+        "gru_b": jnp.zeros((3 * dims.IGRU_HIDDEN,), jnp.float32),
+        "out_w": _glorot(ks[2], (dims.IGRU_HIDDEN, dims.IGRU_OUT)),
+        "out_b": jnp.zeros((dims.IGRU_OUT,), jnp.float32),
+    }
+
+
+def zero_state(batch=1):
+    """Initial LSTM state η_0 = 0 (paper §3.2)."""
+    z = jnp.zeros((batch, dims.HIDDEN), jnp.float32)
+    return (z, z, z, z)  # h1, c1, h2, c2
+
+
+# --------------------------------------------------------------------------
+# START Encoder-LSTM
+# --------------------------------------------------------------------------
+
+
+def encoder(params, m_h, m_t):
+    """Encoder MLP over flattened, concatenated feature matrices.
+
+    m_h: (B, N_HOSTS, M_FEATS), m_t: (B, Q_TASKS, P_FEATS) -> (B, ENC_OUT)
+    """
+    batch = m_h.shape[0]
+    x = jnp.concatenate(
+        [m_h.reshape(batch, -1), m_t.reshape(batch, -1)], axis=-1
+    )
+    # The paper applies softplus at the input layer too.
+    x = jnp.logaddexp(x, 0.0)
+    x = dense(x, params["enc_w1"], params["enc_b1"], activation="softplus")
+    x = dense(x, params["enc_w2"], params["enc_b2"], activation="softplus")
+    x = dense(x, params["enc_w3"], params["enc_b3"], activation="softplus")
+    return x
+
+
+def start_step(params, m_h, m_t, state):
+    """One START inference tick: (α, β) estimate + next LSTM state.
+
+    Returns ((B,) alpha, (B,) beta, state').  alpha > 1, beta >= 0.
+    """
+    h1, c1, h2, c2 = state
+    lam = encoder(params, m_h, m_t)
+    h1, c1 = lstm_cell(lam, h1, c1, params["lstm1_wx"], params["lstm1_wh"], params["lstm1_b"])
+    h2, c2 = lstm_cell(h1, h2, c2, params["lstm2_wx"], params["lstm2_wh"], params["lstm2_b"])
+    out = dense(h2, params["head_w"], params["head_b"], activation="relu")
+    alpha = out[:, 0] + 1.0 + 1e-3  # +1 so the Pareto mean is defined
+    beta = out[:, 1] + 1e-3         # strictly positive minimum time
+    return alpha, beta, (h1, c1, h2, c2)
+
+
+def start_rollout(params, m_h_seq, m_t_seq):
+    """Fused T-step rollout: scan start_step over the window, from η_0 = 0.
+
+    m_h_seq: (T, B, N_HOSTS, M_FEATS), m_t_seq: (T, B, Q_TASKS, P_FEATS).
+    Returns the (α, β) estimate after the final step.  This is the single
+    PJRT dispatch the Rust hot path uses (1 call instead of T).
+    """
+    batch = m_h_seq.shape[1]
+
+    def body(state, inputs):
+        m_h, m_t = inputs
+        alpha, beta, state = start_step(params, m_h, m_t, state)
+        return state, (alpha, beta)
+
+    state, (alphas, betas) = jax.lax.scan(
+        body, zero_state(batch), (m_h_seq, m_t_seq)
+    )
+    del state
+    return alphas[-1], betas[-1]
+
+
+# --------------------------------------------------------------------------
+# IGRU-SD baseline network
+# --------------------------------------------------------------------------
+
+
+def igru_step(params, m_t, h):
+    """One IGRU-SD tick: predicted next-interval per-task CPU demand.
+
+    m_t: (B, Q_TASKS, P_FEATS), h: (B, IGRU_HIDDEN).
+    Returns ((B, Q_TASKS) preds in [0, inf), h').
+    """
+    batch = m_t.shape[0]
+    x = m_t.reshape(batch, -1)
+    h = gru_cell(x, h, params["gru_wx"], params["gru_wh"], params["gru_b"])
+    pred = dense(h, params["out_w"], params["out_b"], activation="relu")
+    return pred, h

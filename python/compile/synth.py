@@ -1,0 +1,202 @@
+"""Shared synthetic workload generative model (Python ↔ Rust contract).
+
+The paper trains its Encoder-LSTM on PlanetLab-derived traces whose task
+response times empirically follow a Pareto distribution whose parameters
+depend on cluster state.  Those traces are not available offline, so we
+define an explicit generative model (DESIGN.md §5):
+
+    (α*, β*) = f(M_H, M_T)
+
+mapping the normalized feature matrices to ground-truth Pareto parameters.
+Heavier load / contention / heterogeneity → smaller α (heavier tail, more
+stragglers); larger task demand and load → larger β (slower minimum time).
+
+``true_pareto_params`` is mirrored *exactly* by
+``rust/src/trace/generative.rs`` — the Rust simulator samples task
+durations from the same distribution family, so the AOT-trained network is
+evaluated in-distribution.  ``aot.py`` emits golden input/output pairs for
+this function so the Rust mirror is pinned by tests.
+
+All constants live in ``GEN`` and are serialized into
+``artifacts/manifest.json``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dims
+
+# Generative-model constants (serialized to the manifest; mirrored in Rust).
+GEN = {
+    "alpha_min": 1.15,
+    "alpha_span": 2.85,
+    "alpha_gain": 4.0,
+    "alpha_mid": 0.65,
+    "contention_weight": 0.5,
+    "hetero_weight": 0.4,
+    "beta_base": 1.0,
+    "beta_demand_lo": 0.4,
+    "beta_demand_w": 1.2,
+    "beta_load_w": 0.8,
+    "contention_knee": 1.2,
+}
+
+# M_H column indices (see dims.py docstring).
+H_CPU_UTIL, H_RAM_UTIL, H_CPU_CAP, H_IS_UP = 0, 1, 4, 11
+# M_T column indices.
+T_CPU_REQ, T_ACTIVE = 0, 7
+
+
+def true_pareto_params(m_h, m_t):
+    """Ground-truth (α*, β*) for feature matrices.
+
+    m_h: (..., N_HOSTS, M_FEATS), m_t: (..., Q_TASKS, P_FEATS).
+    Returns (alpha, beta) with shape (...,).  Mirrored bit-for-bit by
+    ``rust/src/trace/generative.rs`` (golden-tested).
+    """
+    up = m_h[..., H_IS_UP]
+    n_up = jnp.maximum(up.sum(-1), 1e-6)
+    # Mean CPU load over serviceable hosts.
+    u = (m_h[..., H_CPU_UTIL] * up).sum(-1) / n_up
+    # Contention: CPU+RAM pressure beyond the knee, averaged over up hosts.
+    pressure = m_h[..., H_CPU_UTIL] + m_h[..., H_RAM_UTIL]
+    c = (jnp.maximum(pressure - GEN["contention_knee"], 0.0) * up).sum(-1) / n_up
+    # Capacity heterogeneity among serviceable hosts (population std).
+    cap = m_h[..., H_CPU_CAP]
+    cap_mean = (cap * up).sum(-1) / n_up
+    cap_var = (((cap - cap_mean[..., None]) ** 2) * up).sum(-1) / n_up
+    het = jnp.sqrt(jnp.maximum(cap_var, 0.0))
+    # Mean demand of active task rows.
+    act = m_t[..., T_ACTIVE]
+    n_act = jnp.maximum(act.sum(-1), 1e-6)
+    d = (m_t[..., T_CPU_REQ] * act).sum(-1) / n_act
+
+    z = GEN["alpha_gain"] * (
+        GEN["alpha_mid"]
+        - u
+        - GEN["contention_weight"] * c
+        - GEN["hetero_weight"] * het * u
+    )
+    alpha = GEN["alpha_min"] + GEN["alpha_span"] / (1.0 + jnp.exp(-z))
+    beta = (
+        GEN["beta_base"]
+        * (GEN["beta_demand_lo"] + GEN["beta_demand_w"] * d)
+        * (1.0 + GEN["beta_load_w"] * u)
+    )
+    return alpha, beta
+
+
+def pareto_mle(samples):
+    """MLE fit (Eq. 2–3): β̂ = min(X), α̂ = q / Σ log(X_i / β̂).
+
+    samples: (..., q).  Returns (alpha_hat, beta_hat).
+    """
+    beta = samples.min(-1)
+    q = samples.shape[-1]
+    denom = jnp.maximum(jnp.log(samples).sum(-1) - q * jnp.log(beta), 1e-6)
+    alpha = q / denom
+    return alpha, beta
+
+
+def _ar1(key, shape, rho=0.85, sigma=0.1):
+    """AR(1) sequence along axis 0 in [0, 1]-ish range."""
+    t = shape[0]
+    k0, k1 = jax.random.split(key)
+    x0 = jax.random.uniform(k0, shape[1:])
+    eps = sigma * jax.random.normal(k1, shape)
+
+    def step(x, e):
+        x = rho * x + (1 - rho) * 0.5 + e
+        return x, x
+
+    _, xs = jax.lax.scan(step, x0, eps)
+    return jnp.clip(xs, 0.0, 1.0)
+
+
+def random_feature_sequences(key, batch, steps=dims.ROLLOUT_STEPS):
+    """Plausible (M_H, M_T) sequences with temporal correlation.
+
+    Returns m_h_seq (T, B, N_HOSTS, M_FEATS) and m_t_seq (T, B, Q_TASKS,
+    P_FEATS), already EMA-smoothed the way the Rust feature extractor
+    smooths real matrices (weight 0.8 on the latest).
+    """
+    ks = jax.random.split(key, 8)
+    t, b = steps, batch
+
+    # Host utilizations: AR(1) per host, shared load regime per batch elem.
+    regime = jax.random.uniform(ks[0], (1, b, 1), minval=0.1, maxval=0.9)
+    util = _ar1(ks[1], (t, b, dims.N_HOSTS, 4), rho=0.85, sigma=0.08)
+    util = jnp.clip(0.6 * util + 0.55 * regime[..., None], 0.0, 1.0)
+
+    # Static host capacities / power / cost; sampled per batch element.
+    caps = jax.random.uniform(ks[2], (1, b, dims.N_HOSTS, 6), minval=0.15, maxval=1.0)
+    caps = jnp.broadcast_to(caps, (t, b, dims.N_HOSTS, 6))
+    ntasks = _ar1(ks[3], (t, b, dims.N_HOSTS, 1), rho=0.9, sigma=0.05)
+    is_up = (
+        jax.random.uniform(ks[4], (t, b, dims.N_HOSTS, 1)) > 0.05
+    ).astype(jnp.float32)
+    m_h = jnp.concatenate([util, caps, ntasks, is_up], axis=-1)
+
+    # Task rows: requirements + flags; a random prefix of rows is active.
+    reqs = _ar1(ks[5], (t, b, dims.Q_TASKS, 5), rho=0.9, sigma=0.05)
+    flags = (jax.random.uniform(ks[6], (1, b, dims.Q_TASKS, 2)) > 0.5).astype(
+        jnp.float32
+    )
+    flags = jnp.broadcast_to(flags, (t, b, dims.Q_TASKS, 2))
+    q_active = jax.random.randint(ks[7], (1, b, 1), 2, dims.Q_TASKS + 1)
+    row = jnp.arange(dims.Q_TASKS)[None, None, :]
+    active = (row < q_active).astype(jnp.float32)
+    active = jnp.broadcast_to(active, (t, b, dims.Q_TASKS))[..., None]
+    m_t = jnp.concatenate([reqs, flags[..., :1], flags[..., 1:] * 0.0, active], axis=-1)
+    m_t = m_t * active  # zero-pad inactive rows entirely
+
+    # EMA smoothing (weight on latest = dims.EMA_WEIGHT), as in Rust.
+    def ema_step(prev, cur):
+        sm = dims.EMA_WEIGHT * cur + (1.0 - dims.EMA_WEIGHT) * prev
+        return sm, sm
+
+    _, m_h_s = jax.lax.scan(ema_step, m_h[0], m_h)
+    _, m_t_s = jax.lax.scan(ema_step, m_t[0], m_t)
+    return m_h_s, m_t_s
+
+
+def make_dataset_jax(key, n, steps=dims.ROLLOUT_STEPS, q_fit=64):
+    """Jit-friendly core of make_dataset: returns jnp arrays.
+
+    Labels are the *MLE-fitted* (α̂, β̂) from ``q_fit`` task-time samples of
+    the ground-truth distribution at the window end — matching the paper's
+    procedure (fit Eq. 3 on observed response times, regress with MSE).
+    """
+    k1, k2 = jax.random.split(key)
+    m_h_seq, m_t_seq = random_feature_sequences(k1, n, steps)
+    alpha_t, beta_t = true_pareto_params(m_h_seq[-1], m_t_seq[-1])
+    # Sample task times X = β U^{-1/α} and fit.
+    u = jax.random.uniform(k2, (n, q_fit), minval=1e-6, maxval=1.0)
+    x = beta_t[:, None] * u ** (-1.0 / alpha_t[:, None])
+    alpha_l, beta_l = pareto_mle(x)
+    return {
+        "m_h_seq": m_h_seq,
+        "m_t_seq": m_t_seq,
+        "alpha": alpha_l,
+        "beta": beta_l,
+        "alpha_true": alpha_t,
+        "beta_true": beta_t,
+    }
+
+
+def make_dataset(key, n, steps=dims.ROLLOUT_STEPS, q_fit=64):
+    """Training set for the Encoder-LSTM (numpy view of make_dataset_jax)."""
+    return {k: np.asarray(v) for k, v in make_dataset_jax(key, n, steps, q_fit).items()}
+
+
+def make_igru_dataset(key, n, steps=dims.ROLLOUT_STEPS + 1):
+    """Training set for the IGRU-SD baseline: predict next-step CPU demand.
+
+    Returns (m_t_seq (T,B,Q,P), target (B, Q_TASKS)) where target is the
+    CPU-requirement column at the final step and the network sees steps
+    0..T-2.
+    """
+    _, m_t_seq = random_feature_sequences(key, n, steps)
+    target = m_t_seq[-1][..., T_CPU_REQ]
+    return np.asarray(m_t_seq[:-1]), np.asarray(target)

@@ -1,0 +1,170 @@
+"""Build-time training of the START Encoder-LSTM and the IGRU-SD baseline.
+
+Runs once under ``make artifacts`` (cached in ``artifacts/weights.npz``).
+Matches the paper's §4.4: MSE loss between the network's (α, β) and the
+MLE fit of observed task response times, Adam optimizer.  The paper quotes
+lr = 1e-5 for its multi-week trace corpus; on our synthetic corpus the
+same schedule converges with lr = 1e-3 and ~1.5k steps (documented in
+EXPERIMENTS.md §Training).
+
+Adam is implemented by hand — no optax on this image.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dims, model, synth
+
+# Training differentiates through the model; interpret-mode Pallas has no
+# reverse-mode autodiff, so route through the jnp reference ops (identical
+# numerics, pinned by tests/test_kernel.py).
+model.set_impl(use_pallas=False)
+
+# --------------------------------------------------------------------------
+# Minimal Adam (optax is unavailable offline)
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# START training
+# --------------------------------------------------------------------------
+
+
+def start_loss(params, m_h_seq, m_t_seq, alpha_l, beta_l):
+    """MSE between rollout (α, β) and MLE labels (paper §4.4)."""
+    alpha, beta = model.start_rollout(params, m_h_seq, m_t_seq)
+    return jnp.mean((alpha - alpha_l) ** 2 + (beta - beta_l) ** 2)
+
+
+def train_start(key, steps=1500, batch=128, lr=3e-3, log_every=150, log=print):
+    """Train the Encoder-LSTM; returns (params, history).
+
+    Data synthesis + grad + Adam update are fused under a single jit so the
+    per-step cost is milliseconds after the first compile.
+    """
+    # Re-assert the differentiable impl: another module (e.g. the AOT path
+    # or a test) may have switched the process-global impl to Pallas.
+    model.set_impl(use_pallas=False)
+    kp, kd = jax.random.split(key)
+    params = model.init_start_params(kp)
+    opt = adam_init(params)
+
+    @jax.jit
+    def train_step(params, opt, key):
+        ds = synth.make_dataset_jax(key, batch)
+        loss, grads = jax.value_and_grad(start_loss)(
+            params, ds["m_h_seq"], ds["m_t_seq"], ds["alpha"], ds["beta"]
+        )
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        kd, kb = jax.random.split(kd)
+        params, opt, loss = train_step(params, opt, kb)
+        if step % log_every == 0 or step == steps - 1:
+            history.append((step, float(loss)))
+            log(f"[train start] step {step:5d} loss {float(loss):.5f} ({time.time()-t0:.1f}s)")
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# IGRU-SD training
+# --------------------------------------------------------------------------
+
+
+def igru_loss(params, m_t_seq, target):
+    def body(h, m_t):
+        pred, h = model.igru_step(params, m_t, h)
+        return h, pred
+
+    h0 = jnp.zeros((m_t_seq.shape[1], dims.IGRU_HIDDEN), jnp.float32)
+    _, preds = jax.lax.scan(body, h0, m_t_seq)
+    return jnp.mean((preds[-1] - target) ** 2)
+
+
+def train_igru(key, steps=800, batch=128, lr=3e-3, log_every=100, log=print):
+    model.set_impl(use_pallas=False)
+    kp, kd = jax.random.split(key)
+    params = model.init_igru_params(kp)
+    opt = adam_init(params)
+
+    @jax.jit
+    def train_step(params, opt, key):
+        steps_t = dims.ROLLOUT_STEPS + 1
+        _, m_t_seq = synth.random_feature_sequences(key, batch, steps_t)
+        target = m_t_seq[-1][..., synth.T_CPU_REQ]
+        loss, grads = jax.value_and_grad(igru_loss)(params, m_t_seq[:-1], target)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        kd, kb = jax.random.split(kd)
+        params, opt, loss = train_step(params, opt, kb)
+        if step % log_every == 0 or step == steps - 1:
+            history.append((step, float(loss)))
+            log(f"[train igru ] step {step:5d} loss {float(loss):.5f} ({time.time()-t0:.1f}s)")
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# Weight persistence
+# --------------------------------------------------------------------------
+
+
+def save_weights(path, start_params, igru_params):
+    flat = {f"start.{k}": np.asarray(v) for k, v in start_params.items()}
+    flat.update({f"igru.{k}": np.asarray(v) for k, v in igru_params.items()})
+    np.savez(path, **flat)
+
+
+def load_weights(path):
+    data = np.load(path)
+    start_params = {
+        k[len("start.") :]: jnp.asarray(data[k]) for k in data.files if k.startswith("start.")
+    }
+    igru_params = {
+        k[len("igru.") :]: jnp.asarray(data[k]) for k in data.files if k.startswith("igru.")
+    }
+    return start_params, igru_params
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/weights.npz")
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--igru-steps", type=int, default=800)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(args.seed)
+    k1, k2 = jax.random.split(key)
+    start_params, _ = train_start(k1, steps=args.steps)
+    igru_params, _ = train_igru(k2, steps=args.igru_steps)
+    save_weights(args.out, start_params, igru_params)
+    print(f"saved weights to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

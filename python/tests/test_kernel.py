@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.  This is
+the CORE correctness signal for the compute layer — everything the Rust
+binary executes via PJRT is built from these three kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.dense import dense
+from compile.kernels.gru import gru_cell
+from compile.kernels.lstm import lstm_cell
+
+ACTIVATIONS = ["softplus", "relu", "tanh", "none"]
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# dense
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    d_in=st.integers(1, 300),
+    d_out=st.integers(1, 300),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(batch, d_in, d_out, act, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(ks[0], (batch, d_in), jnp.float32)
+    w = _rand(ks[1], (d_in, d_out), jnp.float32) * 0.1
+    b = _rand(ks[2], (d_out,), jnp.float32) * 0.1
+    got = dense(x, w, b, activation=act)
+    want = ref.dense_ref(x, w, b, activation=act)
+    assert got.shape == (batch, d_out)
+    assert got.dtype == x.dtype
+    assert_allclose(np.asarray(got), np.asarray(want), **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_dense_dtypes(dtype, act):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = _rand(ks[0], (2, 64), dtype)
+    w = _rand(ks[1], (64, 96), dtype) * 0.1
+    b = _rand(ks[2], (96,), dtype) * 0.1
+    got = dense(x, w, b, activation=act)
+    want = ref.dense_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32), activation=act
+    )
+    assert got.dtype == dtype
+    assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), **_tol(dtype)
+    )
+
+
+def test_dense_exact_tile_boundary():
+    """d_out exactly TILE_N and a multiple of it — no padding path."""
+    for d_out in (128, 256):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        x = _rand(ks[0], (1, 540), jnp.float32)
+        w = _rand(ks[1], (540, d_out), jnp.float32) * 0.05
+        b = jnp.zeros((d_out,))
+        got = dense(x, w, b, activation="softplus")
+        want = ref.dense_ref(x, w, b, activation="softplus")
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_rejects_bad_activation():
+    x = jnp.zeros((1, 4))
+    w = jnp.zeros((4, 4))
+    b = jnp.zeros((4,))
+    with pytest.raises(ValueError):
+        dense(x, w, b, activation="gelu")
+
+
+# --------------------------------------------------------------------------
+# lstm_cell
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    d_in=st.integers(1, 64),
+    hidden=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_matches_ref(batch, d_in, hidden, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = _rand(ks[0], (batch, d_in), jnp.float32)
+    h = _rand(ks[1], (batch, hidden), jnp.float32)
+    c = _rand(ks[2], (batch, hidden), jnp.float32)
+    wx = _rand(ks[3], (d_in, 4 * hidden), jnp.float32) * 0.2
+    wh = _rand(ks[4], (hidden, 4 * hidden), jnp.float32) * 0.2
+    b = _rand(ks[5], (4 * hidden,), jnp.float32) * 0.2
+    h2, c2 = lstm_cell(x, h, c, wx, wh, b)
+    hr, cr = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+    assert h2.shape == (batch, hidden) and c2.shape == (batch, hidden)
+    assert_allclose(np.asarray(h2), np.asarray(hr), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(c2), np.asarray(cr), rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_state_bounded():
+    """|h| <= 1 always (tanh(c) * sigmoid gate)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = 10.0 * _rand(ks[0], (4, 32), jnp.float32)
+    h = _rand(ks[1], (4, 32), jnp.float32)
+    c = 10.0 * _rand(ks[2], (4, 32), jnp.float32)
+    wx = _rand(ks[3], (32, 128), jnp.float32)
+    wh = _rand(ks[4], (32, 128), jnp.float32)
+    b = _rand(ks[5], (128,), jnp.float32)
+    h2, _ = lstm_cell(x, h, c, wx, wh, b)
+    assert np.all(np.abs(np.asarray(h2)) <= 1.0 + 1e-6)
+
+
+# --------------------------------------------------------------------------
+# gru_cell
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    d_in=st.integers(1, 96),
+    hidden=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gru_matches_ref(batch, d_in, hidden, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _rand(ks[0], (batch, d_in), jnp.float32)
+    h = _rand(ks[1], (batch, hidden), jnp.float32)
+    wx = _rand(ks[2], (d_in, 3 * hidden), jnp.float32) * 0.2
+    wh = _rand(ks[3], (hidden, 3 * hidden), jnp.float32) * 0.2
+    b = _rand(ks[4], (3 * hidden,), jnp.float32) * 0.2
+    got = gru_cell(x, h, wx, wh, b)
+    want = ref.gru_cell_ref(x, h, wx, wh, b)
+    assert got.shape == (batch, hidden)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_gru_interpolates_toward_h():
+    """With z → 1 (huge update-gate bias) h' ≈ h."""
+    batch, d_in, hidden = 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = _rand(ks[0], (batch, d_in), jnp.float32)
+    h = _rand(ks[1], (batch, hidden), jnp.float32)
+    wx = jnp.zeros((d_in, 3 * hidden))
+    wh = jnp.zeros((hidden, 3 * hidden))
+    b = jnp.zeros((3 * hidden,)).at[hidden : 2 * hidden].set(50.0)
+    got = gru_cell(x, h, wx, wh, b)
+    assert_allclose(np.asarray(got), np.asarray(h), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,138 @@
+"""L2 correctness: model shapes, output constraints, rollout semantics,
+Pallas-vs-ref implementation parity at the full-model level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import dims, model, synth
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_start_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def igru_params():
+    return model.init_igru_params(jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def seqs():
+    return synth.random_feature_sequences(jax.random.PRNGKey(2), 4)
+
+
+def test_step_shapes_and_constraints(params, seqs):
+    m_h_seq, m_t_seq = seqs
+    alpha, beta, state = model.start_step(params, m_h_seq[0], m_t_seq[0], model.zero_state(4))
+    assert alpha.shape == (4,) and beta.shape == (4,)
+    # Paper: ReLU head, +1 on alpha -> Pareto mean defined, beta positive.
+    assert np.all(np.asarray(alpha) > 1.0)
+    assert np.all(np.asarray(beta) > 0.0)
+    assert len(state) == 4
+    for s in state:
+        assert s.shape == (4, dims.HIDDEN)
+        assert np.all(np.isfinite(np.asarray(s)))
+
+
+def test_rollout_equals_unrolled_steps(params, seqs):
+    """start_rollout(scan) must equal manually chaining start_step."""
+    m_h_seq, m_t_seq = seqs
+    state = model.zero_state(4)
+    for t in range(m_h_seq.shape[0]):
+        alpha_u, beta_u, state = model.start_step(params, m_h_seq[t], m_t_seq[t], state)
+    alpha_r, beta_r = model.start_rollout(params, m_h_seq, m_t_seq)
+    assert_allclose(np.asarray(alpha_r), np.asarray(alpha_u), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(beta_r), np.asarray(beta_u), rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_and_ref_impl_agree(params, seqs):
+    """Full-model parity between the Pallas kernels and the jnp reference —
+    this is what justifies training through ref and lowering Pallas."""
+    m_h_seq, m_t_seq = seqs
+    try:
+        model.set_impl(use_pallas=True)
+        a_p, b_p = model.start_rollout(params, m_h_seq, m_t_seq)
+        model.set_impl(use_pallas=False)
+        a_r, b_r = model.start_rollout(params, m_h_seq, m_t_seq)
+    finally:
+        model.set_impl(use_pallas=True)
+    assert_allclose(np.asarray(a_p), np.asarray(a_r), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(b_p), np.asarray(b_r), rtol=1e-5, atol=1e-6)
+
+
+def test_state_propagates(params, seqs):
+    """Different initial states must change the output (LSTM is stateful)."""
+    m_h_seq, m_t_seq = seqs
+    a0, b0, _ = model.start_step(params, m_h_seq[0], m_t_seq[0], model.zero_state(4))
+    ones = tuple(jnp.ones((4, dims.HIDDEN)) for _ in range(4))
+    a1, b1, _ = model.start_step(params, m_h_seq[0], m_t_seq[0], ones)
+    assert not np.allclose(np.asarray(a0), np.asarray(a1))
+    del b0, b1
+
+
+def test_igru_shapes(igru_params, seqs):
+    _, m_t_seq = seqs
+    h = jnp.zeros((4, dims.IGRU_HIDDEN))
+    pred, h2 = model.igru_step(igru_params, m_t_seq[0], h)
+    assert pred.shape == (4, dims.IGRU_OUT)
+    assert h2.shape == (4, dims.IGRU_HIDDEN)
+    assert np.all(np.asarray(pred) >= 0.0)  # ReLU output
+
+
+def test_encoder_permutation_sensitivity(params, seqs):
+    """Encoder is not permutation invariant over hosts — host identity
+    (capacity heterogeneity) matters, per the paper's critique of IGRU-SD."""
+    m_h_seq, m_t_seq = seqs
+    m_h = m_h_seq[0]
+    perm = m_h[:, ::-1, :]
+    e1 = model.encoder(params, m_h, m_t_seq[0])
+    e2 = model.encoder(params, perm, m_t_seq[0])
+    assert not np.allclose(np.asarray(e1), np.asarray(e2))
+
+
+# --------------------------------------------------------------------------
+# Generative model / MLE invariants (python side of the Rust contract)
+# --------------------------------------------------------------------------
+
+
+def test_true_params_ranges(seqs):
+    m_h_seq, m_t_seq = seqs
+    alpha, beta = synth.true_pareto_params(m_h_seq[-1], m_t_seq[-1])
+    a, b = np.asarray(alpha), np.asarray(beta)
+    assert np.all(a >= synth.GEN["alpha_min"] - 1e-6)
+    assert np.all(a <= synth.GEN["alpha_min"] + synth.GEN["alpha_span"] + 1e-6)
+    assert np.all(b > 0)
+
+
+def test_alpha_decreases_with_load():
+    """Heavier load ⇒ heavier tail (smaller α) — the core generative story."""
+    m_h = np.zeros((2, dims.N_HOSTS, dims.M_FEATS), np.float32)
+    m_t = np.zeros((2, dims.Q_TASKS, dims.P_FEATS), np.float32)
+    m_h[..., synth.H_IS_UP] = 1.0
+    m_t[..., synth.T_ACTIVE] = 1.0
+    m_t[..., synth.T_CPU_REQ] = 0.5
+    m_h[0, :, synth.H_CPU_UTIL] = 0.2
+    m_h[1, :, synth.H_CPU_UTIL] = 0.9
+    alpha, _ = synth.true_pareto_params(jnp.asarray(m_h), jnp.asarray(m_t))
+    assert float(alpha[0]) > float(alpha[1])
+
+
+def test_pareto_mle_recovers_params():
+    """Sample → fit round-trip: MLE close to truth for large q."""
+    key = jax.random.PRNGKey(5)
+    alpha_t, beta_t = 2.5, 1.3
+    u = jax.random.uniform(key, (20000,), minval=1e-9, maxval=1.0)
+    x = beta_t * u ** (-1.0 / alpha_t)
+    alpha_h, beta_h = synth.pareto_mle(x[None, :])
+    assert abs(float(alpha_h[0]) - alpha_t) < 0.1
+    assert abs(float(beta_h[0]) - beta_t) < 0.01
+
+
+def test_mle_beta_is_min():
+    x = jnp.asarray([[3.0, 1.5, 2.0, 9.0]])
+    _, beta = synth.pareto_mle(x)
+    assert float(beta[0]) == 1.5

@@ -1,0 +1,168 @@
+//! Benchmark harness (`cargo bench`).  Criterion is unavailable offline,
+//! so this is a self-contained harness with warmup, repetition, and
+//! p50/p95 reporting — one benchmark group per paper table/figure plus
+//! micro-benchmarks of the hot paths (DESIGN.md §4, §8).
+//!
+//! Figure benches run the *fast profile* so `cargo bench` completes in
+//! minutes; `start-sim experiment <fig> --paper` regenerates the
+//! paper-scale numbers.
+
+use start_sim::config::{SimConfig, Technique};
+use start_sim::coordinator::{run_one, Models};
+use start_sim::experiments::{figures, Profile};
+use start_sim::pareto::Pareto;
+use start_sim::predictor::{FeatureExtractor, StartPredictor};
+use start_sim::runtime::StartModel;
+use start_sim::sim::engine::{NullManager, Simulation};
+use start_sim::sim::World;
+use start_sim::util::rng::Pcg;
+use start_sim::util::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` with warmup; returns per-iteration seconds (sorted samples).
+fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "bench {name:42} iters {iters:4}  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}",
+        secs(s.mean),
+        secs(s.p50),
+        secs(s.p95)
+    );
+    s
+}
+
+fn secs(s: f64) -> std::time::Duration {
+    std::time::Duration::from_secs_f64(s.max(0.0))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let filter = args.first().cloned().unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+    println!("start-sim bench harness (filter: {filter:?})\n");
+
+    // ---------------------------------------------------- micro benches
+    if run("micro") {
+        micro_benches();
+    }
+    // ------------------------------------------- per-figure regenerators
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let art = start_sim::find_artifact_dir();
+    type FigFn = fn(Profile, usize, &std::path::PathBuf) -> anyhow::Result<start_sim::experiments::ExperimentResult>;
+    let figs: Vec<(&str, FigFn)> = vec![
+        ("fig2", figures::fig2 as FigFn),
+        ("fig5", figures::fig5 as FigFn),
+        ("fig6", figures::fig6 as FigFn),
+        ("fig7", figures::fig7 as FigFn),
+        ("fig8", figures::fig8 as FigFn),
+        ("fig9", figures::fig9 as FigFn),
+        ("fig10", figures::fig10 as FigFn),
+        ("headline", figures::headline as FigFn),
+    ];
+    for (name, f) in figs {
+        if !run(name) {
+            continue;
+        }
+        let t0 = Instant::now();
+        match f(Profile::Fast, threads, &art) {
+            Ok(result) => {
+                result.print();
+                println!("bench {name}: regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("bench {name}: FAILED: {e:#}"),
+        }
+    }
+}
+
+fn micro_benches() {
+    let models = Models::load_default().expect("artifacts (run `make artifacts`)");
+    let manifest = &models.manifest;
+
+    // Pareto MLE over a large sample (the per-job fitting path).
+    let mut rng = Pcg::seeded(1);
+    let samples: Vec<f64> = (0..10_000).map(|_| rng.pareto(2.0, 1.0)).collect();
+    bench("pareto_mle_10k", 3, 50, || {
+        let p = Pareto::mle(&samples).unwrap();
+        std::hint::black_box(p);
+    });
+
+    // Feature extraction on the paper-scale fleet.
+    let cfg = SimConfig::paper_defaults();
+    let mut world = World::new(&cfg);
+    let mut fx = FeatureExtractor::new(manifest);
+    bench("feature_snapshot_47pm", 3, 100, || {
+        fx.snapshot(&mut world);
+    });
+
+    // PJRT dispatch: single-step, fused rollout, batched rollout.
+    let mh = vec![0.3f32; manifest.mh_len()];
+    let mt = vec![0.2f32; manifest.mt_len()];
+    let state = start_sim::runtime::LstmState::zeros(manifest.hidden);
+    let model2 = StartModel::load(&models.runtime, manifest).unwrap();
+    bench("pjrt_start_step", 5, 200, || {
+        let out = model2.step(&mh, &mt, &state).unwrap();
+        std::hint::black_box(out);
+    });
+    let mh_seq = vec![0.3f32; manifest.rollout_steps * manifest.mh_len()];
+    let mt_seq = vec![0.2f32; manifest.rollout_steps * manifest.mt_len()];
+    bench("pjrt_start_rollout_T5", 5, 200, || {
+        let out = model2.rollout(&mh_seq, &mt_seq).unwrap();
+        std::hint::black_box(out);
+    });
+    let mh_b = vec![0.3f32; manifest.rollout_steps * manifest.rollout_batch * manifest.mh_len()];
+    let mt_b = vec![0.2f32; manifest.rollout_steps * manifest.rollout_batch * manifest.mt_len()];
+    bench("pjrt_start_rollout_T5_B8", 5, 200, || {
+        let out = model2.rollout_batch(&mh_b, &mt_b).unwrap();
+        std::hint::black_box(out);
+    });
+
+    // Full predictor path (features + marshalling + dispatch) per job.
+    let model3 = std::rc::Rc::new(StartModel::load(&models.runtime, manifest).unwrap());
+    let mut predictor = StartPredictor::new(model3, 1.5);
+    fx.snapshot(&mut world);
+    world.jobs.push(start_sim::sim::Job {
+        id: 0,
+        tasks: vec![],
+        submit_t: 0.0,
+        deadline_driven: true,
+        sla_deadline: 1e9,
+        sla_weight: 1.0,
+        state: start_sim::sim::JobState::Active,
+        true_alpha: 2.0,
+        true_beta: 1.0,
+    });
+    bench("predict_one_job_end_to_end", 3, 100, || {
+        let p = predictor.predict(&world, &fx, 0).unwrap();
+        std::hint::black_box(p);
+    });
+
+    // Simulator throughput on the fast profile, no manager.
+    let mut fast = Profile::Fast.base_config();
+    fast.n_intervals = 12;
+    fast.n_workloads = 200;
+    bench("sim_12_intervals_200_tasks", 1, 10, || {
+        let sched = start_sim::scheduler::build(fast.scheduler, Pcg::seeded(7));
+        let sim = Simulation::new(fast.clone(), &models.manifest, sched, Box::new(NullManager));
+        std::hint::black_box(sim.run().tasks_done);
+    });
+
+    // One full START cell (the experiment unit of work).
+    let mut cell = Profile::Fast.base_config();
+    cell.n_intervals = 12;
+    cell.n_workloads = 200;
+    cell.technique = Technique::Start;
+    bench("start_cell_12_intervals", 1, 5, || {
+        let m = run_one(&cell, &models).unwrap();
+        std::hint::black_box(m.tasks_done);
+    });
+    println!();
+}

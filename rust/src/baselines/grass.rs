@@ -1,0 +1,73 @@
+//! GRASS [8]: Greedy and Resource-Aware Speculative Scheduling.
+//!
+//! Reactive speculation: once a job has completed siblings, any running
+//! task whose elapsed time exceeds `spec_factor ×` the sibling median is
+//! greedily speculated, deadline-bound jobs first, subject to a
+//! resource-aware cap on concurrent speculative copies (a fraction of
+//! idle VMs).
+
+use crate::baselines::{elapsed, sibling_stats};
+use crate::mitigation::Action;
+use crate::predictor::FeatureExtractor;
+use crate::sim::engine::Manager;
+use crate::sim::types::*;
+use crate::sim::world::World;
+
+pub struct GrassManager {
+    /// Speculate when elapsed > factor × sibling median.
+    pub spec_factor: f64,
+    /// Max live clones as a fraction of total VMs.
+    pub budget_frac: f64,
+}
+
+impl GrassManager {
+    pub fn new() -> Self {
+        Self { spec_factor: 1.5, budget_frac: 0.1 }
+    }
+
+    fn live_clones(w: &World) -> usize {
+        w.tasks.iter().filter(|t| t.speculative_of.is_some() && t.is_active()).count()
+    }
+}
+
+impl Default for GrassManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Manager for GrassManager {
+    fn name(&self) -> &'static str {
+        "GRASS"
+    }
+
+    fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        let budget = ((w.vms.len() as f64 * self.budget_frac) as usize)
+            .saturating_sub(Self::live_clones(w));
+        if budget == 0 {
+            return Vec::new();
+        }
+        // Candidate slow tasks: (deadline priority, slowness) ordered.
+        let mut candidates: Vec<(bool, f64, TaskId)> = Vec::new();
+        for job in w.jobs.iter().filter(|j| j.is_active()) {
+            let stats = sibling_stats(w, job.id);
+            if stats.completed.is_empty() {
+                continue; // greedy: needs an observed baseline first
+            }
+            for &t in &job.tasks {
+                let task = &w.tasks[t];
+                if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
+                    let e = elapsed(w, t);
+                    if e > self.spec_factor * stats.median {
+                        candidates.push((job.deadline_driven, e / stats.median.max(1e-9), t));
+                    }
+                }
+            }
+        }
+        // Deadline-bound jobs first, then slowest (greedy order).
+        candidates.sort_by(|a, b| {
+            b.0.cmp(&a.0).then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        candidates.into_iter().take(budget).map(|(_, _, t)| Action::Speculate(t)).collect()
+    }
+}

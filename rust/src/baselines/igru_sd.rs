@@ -1,0 +1,83 @@
+//! IGRU-SD manager [22]: the GRU resource-request predictor plus the same
+//! re-run/speculation mitigation as START (paper §4.6: "we use the same
+//! re-run and speculation strategy (based on deadline requirements) for
+//! fair comparison").
+
+use crate::mitigation::Action;
+use crate::predictor::{FeatureExtractor, IgruPredictor};
+use crate::sim::engine::Manager;
+use crate::sim::types::*;
+use crate::sim::world::World;
+use std::collections::HashMap;
+
+pub struct IgruSdManager {
+    predictor: IgruPredictor,
+    /// Latest E_S per active job.
+    predictions: HashMap<JobId, f64>,
+    /// Final prediction per job (kept for MAPE after completion).
+    final_predictions: HashMap<JobId, f64>,
+}
+
+impl IgruSdManager {
+    pub fn new(predictor: IgruPredictor) -> Self {
+        Self { predictor, predictions: HashMap::new(), final_predictions: HashMap::new() }
+    }
+}
+
+impl Manager for IgruSdManager {
+    fn name(&self) -> &'static str {
+        "IGRU-SD"
+    }
+
+    fn on_interval(&mut self, w: &World, fx: &FeatureExtractor) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let active: Vec<JobId> =
+            w.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        for job in active {
+            let (es, _flagged) = match self.predictor.expected_stragglers(w, fx, job) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            self.predictions.insert(job, es);
+            self.final_predictions.insert(job, es);
+            // Same mitigation strategy as START (paper §4.6), but the
+            // trigger works off IGRU-SD's demand forecasts + a reactive
+            // sibling-median check — it has no per-job distribution, so
+            // its detection remains later/noisier than START's.
+            let q = w.jobs[job].tasks.len();
+            let done = w.completed_tasks(job);
+            let es_round = es.round() as usize;
+            let endgame = es_round > 0 && done + es_round >= q;
+            let stats = crate::baselines::sibling_stats(w, job);
+            for &t in &w.jobs[job].tasks {
+                let task = &w.tasks[t];
+                if !task.is_running() || task.speculative_of.is_some() || task.mitigated {
+                    continue;
+                }
+                let reactive = !stats.completed.is_empty()
+                    && (w.now - task.submit_t) > 1.5 * stats.median;
+                if !(endgame && reactive) {
+                    continue;
+                }
+                actions.push(if w.jobs[job].deadline_driven || task.progress() > 0.5 {
+                    Action::Speculate(t)
+                } else {
+                    Action::Rerun(t)
+                });
+            }
+        }
+        actions
+    }
+
+    fn on_task_complete(&mut self, w: &World, task: TaskId) {
+        let job = w.tasks[task].job;
+        if !w.jobs[job].is_active() {
+            self.predictor.forget(job);
+            self.predictions.remove(&job);
+        }
+    }
+
+    fn predicted_stragglers(&mut self, job: JobId) -> Option<f64> {
+        self.final_predictions.remove(&job)
+    }
+}

@@ -1,0 +1,86 @@
+//! LATE [29]: Longest Approximate Time to End.
+//!
+//! Estimates each running task's time-to-end from its progress rate and
+//! speculatively executes a copy of the slowest task per job (the one
+//! with the longest ETA) on a fast node, provided its ETA clearly exceeds
+//! its siblings' (threshold factor) and a speculation cap is respected.
+
+use crate::mitigation::Action;
+use crate::predictor::FeatureExtractor;
+use crate::sim::engine::Manager;
+use crate::sim::types::*;
+use crate::sim::world::World;
+
+pub struct LateManager {
+    pub factor: f64,
+    /// Cap on live speculative copies (fraction of VMs).
+    pub budget_frac: f64,
+}
+
+impl LateManager {
+    pub fn new() -> Self {
+        Self { factor: 1.5, budget_frac: 0.1 }
+    }
+
+    /// ETA from observed progress: elapsed / progress − elapsed.
+    fn eta(w: &World, task: TaskId) -> Option<f64> {
+        let t = &w.tasks[task];
+        let started = t.first_start_t?;
+        let elapsed = w.now - started;
+        let p = t.progress();
+        if p < 0.01 || elapsed <= 0.0 {
+            return None;
+        }
+        Some(elapsed / p - elapsed)
+    }
+}
+
+impl Default for LateManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Manager for LateManager {
+    fn name(&self) -> &'static str {
+        "LATE"
+    }
+
+    fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        let live_clones =
+            w.tasks.iter().filter(|t| t.speculative_of.is_some() && t.is_active()).count();
+        let mut budget =
+            ((w.vms.len() as f64 * self.budget_frac) as usize).saturating_sub(live_clones);
+        let mut actions = Vec::new();
+        for job in w.jobs.iter().filter(|j| j.is_active()) {
+            if budget == 0 {
+                break;
+            }
+            // ETA of each running task; speculate the longest if it is
+            // `factor ×` above the job median ETA.
+            let mut etas: Vec<(f64, TaskId)> = job
+                .tasks
+                .iter()
+                .filter_map(|&t| {
+                    let task = &w.tasks[t];
+                    if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
+                        Self::eta(w, t).map(|e| (e, t))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            if etas.len() < 2 {
+                continue;
+            }
+            etas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let median = etas[etas.len() / 2].0;
+            let (worst_eta, worst) = *etas.last().unwrap();
+            if worst_eta > self.factor * median.max(1.0) {
+                actions.push(Action::Speculate(worst));
+                budget -= 1;
+            }
+        }
+        actions
+    }
+}

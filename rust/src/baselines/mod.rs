@@ -1,0 +1,180 @@
+//! Baseline straggler-management techniques (paper §4.6, Table 1).
+//!
+//! Every baseline implements `sim::Manager` and runs on the same
+//! scheduler and simulator as START, as in the paper's methodology.
+//! A shared `JobTracker` provides the observable signals reactive
+//! techniques use (sibling response statistics, progress rates).
+
+pub mod dolly;
+pub mod grass;
+pub mod igru_sd;
+pub mod late;
+pub mod nearestfit;
+pub mod rpps_manager;
+pub mod sgc;
+pub mod wrangler;
+
+pub use dolly::DollyManager;
+pub use grass::GrassManager;
+pub use igru_sd::IgruSdManager;
+pub use late::LateManager;
+pub use nearestfit::NearestFitManager;
+pub use rpps_manager::RppsManager;
+pub use sgc::SgcManager;
+pub use wrangler::WranglerManager;
+
+use crate::sim::types::*;
+use crate::sim::world::World;
+
+/// Observable per-job statistics for reactive detection (no access to
+/// ground-truth Pareto parameters).
+pub struct SiblingStats {
+    /// Completed siblings' response times (seconds).
+    pub completed: Vec<f64>,
+    pub median: f64,
+}
+
+/// Response statistics of a job's completed tasks.
+pub fn sibling_stats(w: &World, job: JobId) -> SiblingStats {
+    let mut completed: Vec<f64> = w.jobs[job]
+        .tasks
+        .iter()
+        .filter_map(|&t| {
+            let task = &w.tasks[t];
+            match task.state {
+                TaskState::Completed { t: tc } => Some(tc - task.submit_t),
+                _ => None,
+            }
+        })
+        .collect();
+    completed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if completed.is_empty() {
+        0.0
+    } else {
+        completed[completed.len() / 2]
+    };
+    SiblingStats { completed, median }
+}
+
+/// Elapsed time of a running task.
+pub fn elapsed(w: &World, task: TaskId) -> f64 {
+    w.now - w.tasks[task].submit_t
+}
+
+/// Capability flags (Table 1) — asserted in tests so the qualitative
+/// comparison table stays truthful in code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    pub detection: bool,
+    pub mitigation: bool,
+    pub proactive: bool,
+    pub prediction: bool,
+    pub dynamic: bool,
+    pub heterogeneous: bool,
+}
+
+/// Table 1, one row per technique.
+pub fn capabilities(name: &str) -> Capabilities {
+    match name {
+        "START" => Capabilities {
+            detection: true,
+            mitigation: true,
+            proactive: true,
+            prediction: true,
+            dynamic: true,
+            heterogeneous: true,
+        },
+        "IGRU-SD" => Capabilities {
+            detection: true,
+            mitigation: true,
+            proactive: true,
+            prediction: true,
+            dynamic: true,
+            heterogeneous: false,
+        },
+        "SGC" => Capabilities {
+            detection: true,
+            mitigation: true,
+            proactive: true,
+            prediction: true,
+            dynamic: true,
+            heterogeneous: false,
+        },
+        "Wrangler" => Capabilities {
+            detection: false,
+            mitigation: true,
+            proactive: true,
+            prediction: false,
+            dynamic: true,
+            heterogeneous: false,
+        },
+        "GRASS" => Capabilities {
+            detection: false,
+            mitigation: true,
+            proactive: true,
+            prediction: false,
+            dynamic: false,
+            heterogeneous: false,
+        },
+        "Dolly" => Capabilities {
+            detection: false,
+            mitigation: true,
+            proactive: true,
+            prediction: false,
+            dynamic: false,
+            heterogeneous: true,
+        },
+        "NearestFit" => Capabilities {
+            detection: true,
+            mitigation: false,
+            proactive: false,
+            prediction: false,
+            dynamic: true,
+            heterogeneous: false,
+        },
+        "LATE" => Capabilities {
+            detection: false,
+            mitigation: true,
+            proactive: true,
+            prediction: false,
+            dynamic: false,
+            heterogeneous: true,
+        },
+        _ => Capabilities {
+            detection: false,
+            mitigation: false,
+            proactive: false,
+            prediction: false,
+            dynamic: false,
+            heterogeneous: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_start_dominates() {
+        let start = capabilities("START");
+        for other in ["IGRU-SD", "SGC", "Wrangler", "GRASS", "Dolly", "NearestFit", "LATE"] {
+            let c = capabilities(other);
+            // START has every capability any baseline has (Table 1).
+            assert!(start.detection >= c.detection, "{other}");
+            assert!(start.mitigation >= c.mitigation, "{other}");
+            assert!(start.proactive >= c.proactive, "{other}");
+            assert!(start.prediction >= c.prediction, "{other}");
+            assert!(start.dynamic >= c.dynamic, "{other}");
+            assert!(start.heterogeneous >= c.heterogeneous, "{other}");
+        }
+    }
+
+    #[test]
+    fn only_prediction_methods_predict() {
+        assert!(capabilities("START").prediction);
+        assert!(capabilities("IGRU-SD").prediction);
+        assert!(!capabilities("GRASS").prediction);
+        assert!(!capabilities("Dolly").prediction);
+    }
+}

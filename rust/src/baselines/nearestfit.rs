@@ -1,0 +1,82 @@
+//! NearestFit [6]: statistical progress profiling via a `a + b·x^c` fit of
+//! response time against task input size, fully online.
+//!
+//! Vanilla NearestFit only *detects* (it is a progress indicator); per the
+//! paper's §4.6 we add speculation on the detected tasks for a fair
+//! comparison.  Detection: a running task whose elapsed time exceeds
+//! `factor ×` the fitted prediction for its size is a straggler.  Note the
+//! profile is global — NearestFit does not differentiate hosts by
+//! computational capacity, the weakness the paper calls out.
+
+use crate::mitigation::Action;
+use crate::ml::PowerFit;
+use crate::predictor::FeatureExtractor;
+use crate::sim::engine::Manager;
+use crate::sim::types::*;
+use crate::sim::world::World;
+
+pub struct NearestFitManager {
+    /// (input size, response) observations from completed tasks.
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    fit: Option<PowerFit>,
+    pub factor: f64,
+    /// Refit cadence (observations between refits).
+    refit_every: usize,
+    since_refit: usize,
+}
+
+impl NearestFitManager {
+    pub fn new() -> Self {
+        Self { xs: Vec::new(), ys: Vec::new(), fit: None, factor: 1.6, refit_every: 25, since_refit: 0 }
+    }
+
+    /// Predicted response time for a task size (None before first fit).
+    pub fn predict(&self, size: f64) -> Option<f64> {
+        self.fit.as_ref().map(|f| f.predict(size))
+    }
+}
+
+impl Default for NearestFitManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Manager for NearestFitManager {
+    fn name(&self) -> &'static str {
+        "NearestFit"
+    }
+
+    fn on_task_complete(&mut self, w: &World, task: TaskId) {
+        let t = &w.tasks[task];
+        self.xs.push(t.length_mi);
+        self.ys.push(w.now - t.submit_t);
+        if self.xs.len() > 2000 {
+            self.xs.drain(..1000);
+            self.ys.drain(..1000);
+        }
+        self.since_refit += 1;
+        if self.since_refit >= self.refit_every && self.xs.len() >= 8 {
+            self.fit = PowerFit::fit(&self.xs, &self.ys).or(self.fit.take());
+            self.since_refit = 0;
+        }
+    }
+
+    fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        let Some(fit) = &self.fit else { return Vec::new() };
+        let mut actions = Vec::new();
+        for job in w.jobs.iter().filter(|j| j.is_active()) {
+            for &t in &job.tasks {
+                let task = &w.tasks[t];
+                if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
+                    let expected = fit.predict(task.length_mi).max(1.0);
+                    if w.now - task.submit_t > self.factor * expected {
+                        actions.push(Action::Speculate(t));
+                    }
+                }
+            }
+        }
+        actions
+    }
+}

@@ -1,0 +1,71 @@
+//! RPPS manager [23]: ARIMA workload forecasting + the shared mitigation
+//! strategy.  The paper compares RPPS only on prediction accuracy
+//! (Fig. 9); wiring it as a full manager also lets it participate in
+//! ablations.
+
+use crate::mitigation::Action;
+use crate::predictor::{FeatureExtractor, RppsPredictor};
+use crate::sim::engine::Manager;
+use crate::sim::types::*;
+use crate::sim::world::World;
+use std::collections::HashMap;
+
+pub struct RppsManager {
+    pub predictor: RppsPredictor,
+    final_predictions: HashMap<JobId, f64>,
+}
+
+impl RppsManager {
+    pub fn new() -> Self {
+        Self { predictor: RppsPredictor::new(), final_predictions: HashMap::new() }
+    }
+}
+
+impl Default for RppsManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Manager for RppsManager {
+    fn name(&self) -> &'static str {
+        "RPPS"
+    }
+
+    fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        self.predictor.observe(w);
+        let mut actions = Vec::new();
+        let active: Vec<JobId> =
+            w.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        for job in active {
+            let es = self.predictor.expected_stragglers(w, job);
+            self.final_predictions.insert(job, es);
+            let q = w.jobs[job].tasks.len();
+            let done = w.completed_tasks(job);
+            let es_round = es.round() as usize;
+            let endgame = es_round > 0 && done + es_round >= q;
+            let stats = crate::baselines::sibling_stats(w, job);
+            for &t in &w.jobs[job].tasks {
+                let task = &w.tasks[t];
+                if !task.is_running() || task.speculative_of.is_some() || task.mitigated {
+                    continue;
+                }
+                let reactive = !stats.completed.is_empty()
+                    && (w.now - task.submit_t) > 1.5 * stats.median;
+                if !(endgame && reactive) {
+                    continue;
+                }
+                actions.push(if w.jobs[job].deadline_driven || task.progress() > 0.5 {
+                    Action::Speculate(t)
+                } else {
+                    Action::Rerun(t)
+                });
+            }
+        }
+        actions
+    }
+
+    fn predicted_stragglers(&mut self, job: JobId) -> Option<f64> {
+        self.final_predictions.remove(&job)
+    }
+}

@@ -1,0 +1,65 @@
+//! SGC [9]: Stochastic Gradient Coding — approximate redundancy via a
+//! pair-wise balanced scheme.
+//!
+//! In SGC each data point is shared with a partner worker so the
+//! aggregator tolerates stragglers without waiting.  Mapped onto
+//! bag-of-tasks execution: tasks are paired (i, i+1) within a job and one
+//! member of every pair receives a redundant copy up-front — static,
+//! distribution-agnostic redundancy, which is exactly why SGC burns more
+//! resources at equal mitigation quality in the paper's figures.
+
+use crate::mitigation::Action;
+use crate::predictor::FeatureExtractor;
+use crate::sim::engine::Manager;
+use crate::sim::world::World;
+
+pub struct SgcManager {
+    /// Redundancy ratio: fraction of each job's tasks receiving a clone.
+    pub redundancy: f64,
+}
+
+impl SgcManager {
+    pub fn new() -> Self {
+        Self { redundancy: 0.5 }
+    }
+}
+
+impl Default for SgcManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Manager for SgcManager {
+    fn name(&self) -> &'static str {
+        "SGC"
+    }
+
+    fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        let mut actions = Vec::new();
+        for job in w.jobs.iter().filter(|j| j.is_active()) {
+            let clones_target = (job.tasks.len() as f64 * self.redundancy).round() as usize;
+            let mut cloned = job
+                .tasks
+                .iter()
+                .filter(|&&t| w.tasks[t].mitigated)
+                .count();
+            // Pair-wise balance: clone the first member of each (2i, 2i+1)
+            // pair, in order, until the redundancy target is met.
+            for (idx, &t) in job.tasks.iter().enumerate() {
+                if cloned >= clones_target {
+                    break;
+                }
+                if idx % 2 != 0 {
+                    continue;
+                }
+                let task = &w.tasks[t];
+                if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
+                    actions.push(Action::Speculate(t));
+                    cloned += 1;
+                }
+            }
+        }
+        actions
+    }
+}

@@ -1,0 +1,107 @@
+//! Wrangler [17]: proactive straggler avoidance via a linear model with
+//! confidence bounds on node utilization counters.
+//!
+//! A recursive-least-squares linear model (ml::linreg) maps host
+//! utilization features to an observable straggler indicator (task
+//! response ≫ sibling median).  Before each placement the engine consults
+//! `filter_placement`: if the model is confident (`uncertainty` below a
+//! bound) that the target node will straggle, the task is delayed — the
+//! paper's "delay the execution of tasks on nodes with straggler
+//! confidence above a threshold".
+
+use crate::mitigation::Action;
+use crate::ml::OnlineLinReg;
+use crate::predictor::FeatureExtractor;
+use crate::sim::engine::Manager;
+use crate::sim::types::*;
+use crate::sim::world::World;
+
+const N_FEAT: usize = 5;
+
+pub struct WranglerManager {
+    model: OnlineLinReg,
+    /// Straggler-probability threshold above which placement is delayed.
+    pub threshold: f64,
+    /// Required confidence (max predictive uncertainty) to act.
+    pub conf_bound: f64,
+    /// Minimum observations before vetoing anything.
+    pub warmup: u64,
+    /// Per-interval cap on delays (avoid starving the queue).
+    pub max_delays_per_interval: usize,
+    delays_this_interval: usize,
+}
+
+impl WranglerManager {
+    pub fn new() -> Self {
+        Self {
+            model: OnlineLinReg::new(N_FEAT, 1.0),
+            threshold: 0.45,
+            conf_bound: 0.5,
+            warmup: 50,
+            max_delays_per_interval: 16,
+            delays_this_interval: 0,
+        }
+    }
+
+    fn host_features(w: &World, host: HostId) -> [f64; N_FEAT] {
+        [
+            w.host_cpu_util(host),
+            w.host_ram_util(host),
+            w.host_bw_util(host),
+            (w.host_task_count(host) as f64 / 16.0).min(1.0),
+            1.0,
+        ]
+    }
+
+    /// Observable straggler label: response > 1.5× sibling median.
+    fn label(w: &World, task: TaskId, t_complete: f64) -> Option<f64> {
+        let t = &w.tasks[task];
+        let stats = super::sibling_stats(w, t.job);
+        if stats.completed.len() < 2 {
+            return None;
+        }
+        Some(if (t_complete - t.submit_t) > 1.5 * stats.median { 1.0 } else { 0.0 })
+    }
+}
+
+impl Default for WranglerManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Manager for WranglerManager {
+    fn name(&self) -> &'static str {
+        "Wrangler"
+    }
+
+    fn on_interval(&mut self, _w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        self.delays_this_interval = 0;
+        Vec::new() // Wrangler acts at placement time, not per interval.
+    }
+
+    fn on_task_complete(&mut self, w: &World, task: TaskId) {
+        let Some(vm) = w.tasks[task].last_vm else { return };
+        let host = w.vms[vm].host;
+        if let Some(y) = Self::label(w, task, w.now) {
+            self.model.update(&Self::host_features(w, host), y);
+        }
+    }
+
+    fn filter_placement(&mut self, w: &World, _task: TaskId, vm: VmId) -> bool {
+        if self.model.n() < self.warmup
+            || self.delays_this_interval >= self.max_delays_per_interval
+        {
+            return true;
+        }
+        let x = Self::host_features(w, w.vms[vm].host);
+        let pred = self.model.predict(&x);
+        let unc = self.model.uncertainty(&x);
+        if pred > self.threshold && unc < self.conf_bound {
+            self.delays_this_interval += 1;
+            false // delay: leave pending for a later interval
+        } else {
+            true
+        }
+    }
+}

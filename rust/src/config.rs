@@ -1,0 +1,384 @@
+//! Configuration system: simulation parameters from Tables 3–4 of the
+//! paper, overridable from JSON config files (`configs/*.json`) and CLI
+//! flags.  Every experiment in `experiments/` starts from
+//! `SimConfig::paper_defaults()` and tweaks the swept parameter only.
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One physical-machine type (Table 3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PmType {
+    pub name: String,
+    /// Per-core MIPS (paper: CPU IPS 2000 million, scaled by clock).
+    pub mips_per_core: f64,
+    pub cores: usize,
+    pub ram_gb: f64,
+    pub disk_gb: f64,
+    /// VMs hosted per PM of this type (Table 3 "Number of Virtual Nodes").
+    pub vms_per_pm: usize,
+    /// Idle / peak power draw in watts (Table 4 ranges, SPEC-style).
+    pub power_idle_w: f64,
+    pub power_peak_w: f64,
+    /// Cost in C$ per interval (Table 4: workload cost 3–5 C$).
+    pub cost_per_interval: f64,
+    /// Network bandwidth per host in KB/s (Table 4: 1–2 KB/s).
+    pub bw_kbps: f64,
+}
+
+/// Straggler-management technique selector (paper §4.6 + START).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Technique {
+    Start,
+    IgruSd,
+    Wrangler,
+    Grass,
+    Dolly,
+    Sgc,
+    NearestFit,
+    /// LATE (Table 1 extra baseline).
+    Late,
+    /// RPPS (ARIMA; compared on prediction accuracy in Fig. 9).
+    Rpps,
+    /// No straggler management at all (ablation floor).
+    None,
+}
+
+impl Technique {
+    pub fn parse(s: &str) -> Result<Technique> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "start" => Technique::Start,
+            "igru-sd" | "igru_sd" | "igru" => Technique::IgruSd,
+            "wrangler" => Technique::Wrangler,
+            "grass" => Technique::Grass,
+            "dolly" => Technique::Dolly,
+            "sgc" => Technique::Sgc,
+            "nearestfit" | "nearest-fit" => Technique::NearestFit,
+            "late" => Technique::Late,
+            "rpps" => Technique::Rpps,
+            "none" => Technique::None,
+            other => anyhow::bail!("unknown technique {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Technique::Start => "START",
+            Technique::IgruSd => "IGRU-SD",
+            Technique::Wrangler => "Wrangler",
+            Technique::Grass => "GRASS",
+            Technique::Dolly => "Dolly",
+            Technique::Sgc => "SGC",
+            Technique::NearestFit => "NearestFit",
+            Technique::Late => "LATE",
+            Technique::Rpps => "RPPS",
+            Technique::None => "None",
+        }
+    }
+
+    /// All techniques compared in the paper's figures, in plot order.
+    pub fn paper_set() -> Vec<Technique> {
+        vec![
+            Technique::Start,
+            Technique::IgruSd,
+            Technique::Sgc,
+            Technique::Wrangler,
+            Technique::Grass,
+            Technique::Dolly,
+            Technique::NearestFit,
+        ]
+    }
+}
+
+/// Scheduling policy underneath every technique (paper §4.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// A3C-R2N2 surrogate: online actor-critic over host/task features.
+    A3c,
+    /// Uniform random placement (used to generate diverse training data).
+    Random,
+    RoundRobin,
+    /// Min-min heuristic (classic cloud baseline).
+    MinMin,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "a3c" | "a3c-r2n2" => SchedulerKind::A3c,
+            "random" => SchedulerKind::Random,
+            "roundrobin" | "round-robin" | "rr" => SchedulerKind::RoundRobin,
+            "minmin" | "min-min" => SchedulerKind::MinMin,
+            other => anyhow::bail!("unknown scheduler {other:?}"),
+        })
+    }
+}
+
+/// Full simulation configuration (defaults = paper Tables 3–4).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// PM counts per type in `pm_types` order.
+    pub pm_counts: Vec<usize>,
+    pub pm_types: Vec<PmType>,
+    /// Total workloads (cloudlets) to generate (Table 4: 5000).
+    pub n_workloads: usize,
+    /// Scheduling-interval length in seconds (PlanetLab: 300 s).
+    pub interval_s: f64,
+    /// Number of scheduling intervals to simulate (paper: 288 = 24 h).
+    pub n_intervals: usize,
+    /// Poisson arrival rate of jobs per interval (paper §4.2: λ = 1.2).
+    pub job_lambda: f64,
+    /// Tasks per job: uniform in [min, max] (paper: 2..10).
+    pub tasks_per_job: (usize, usize),
+    /// Fraction of jobs that are deadline-driven (paper: 0.5).
+    pub deadline_fraction: f64,
+    /// Reserved (blocked) utilization fraction, the Fig. 6/8 sweep knob.
+    pub reserved_util: f64,
+    /// Straggler parameter k (paper: 1.5, dynamically adapted).
+    pub k_straggler: f64,
+    /// START inference cadence in intervals (Fig. 2's I sweep; 1 = every
+    /// interval).
+    pub predict_every: usize,
+    /// START history window length in steps (Fig. 2's T sweep; 0 = the
+    /// full rollout window baked into the artifact).
+    pub window_steps: usize,
+    /// Adapt k online from observed false-positive/negative balance.
+    pub dynamic_k: bool,
+    /// Weibull fault model (Eq. 15): shape, scale (paper: 1.5, 2).
+    pub fault_shape: f64,
+    pub fault_scale: f64,
+    /// Mean faults injected per interval across the fleet.
+    pub fault_rate: f64,
+    /// Max host downtime, in intervals (paper: ephemeral, ≤ 4).
+    pub max_downtime_intervals: usize,
+    /// Technique under test.
+    pub technique: Technique,
+    pub scheduler: SchedulerKind,
+    /// SLA deadline slack: deadline = submit + slack · expected duration.
+    pub sla_slack: f64,
+    /// Speculation/rerun mitigation wait bound M_time, in seconds.
+    pub m_time_s: f64,
+    /// Workload trace shape (PlanetLab-like synthetic generator).
+    pub trace_diurnal_amp: f64,
+    pub trace_noise: f64,
+    pub trace_spike_prob: f64,
+}
+
+impl SimConfig {
+    /// Paper defaults (Tables 3–4, §4).
+    pub fn paper_defaults() -> SimConfig {
+        SimConfig {
+            seed: 42,
+            // 25×12 + 14×6 + 8×2 = 400 VMs (Table 4).
+            pm_counts: vec![25, 14, 8],
+            pm_types: vec![
+                PmType {
+                    name: "Core2Duo-2.4GHz".into(),
+                    mips_per_core: 2000.0 * 2.4 / 2.2,
+                    cores: 2,
+                    ram_gb: 6.0,
+                    disk_gb: 320.0,
+                    vms_per_pm: 12,
+                    power_idle_w: 108.0,
+                    power_peak_w: 273.0,
+                    cost_per_interval: 3.0,
+                    bw_kbps: 1.5,
+                },
+                PmType {
+                    name: "i5-2310-2.9GHz".into(),
+                    mips_per_core: 2000.0 * 2.9 / 2.2,
+                    cores: 4,
+                    ram_gb: 4.0,
+                    disk_gb: 160.0,
+                    vms_per_pm: 6,
+                    power_idle_w: 120.0,
+                    power_peak_w: 250.0,
+                    cost_per_interval: 4.0,
+                    bw_kbps: 2.0,
+                },
+                PmType {
+                    name: "XeonE5-2407-2.2GHz".into(),
+                    mips_per_core: 2000.0,
+                    cores: 4,
+                    ram_gb: 2.0,
+                    disk_gb: 160.0,
+                    vms_per_pm: 2,
+                    power_idle_w: 130.0,
+                    power_peak_w: 240.0,
+                    cost_per_interval: 5.0,
+                    bw_kbps: 2.0,
+                },
+            ],
+            n_workloads: 5000,
+            interval_s: 300.0,
+            n_intervals: 288,
+            job_lambda: 1.2,
+            tasks_per_job: (2, 10),
+            deadline_fraction: 0.5,
+            reserved_util: 0.0,
+            k_straggler: 1.5,
+            predict_every: 1,
+            window_steps: 0,
+            dynamic_k: true,
+            fault_shape: 1.5,
+            fault_scale: 2.0,
+            fault_rate: 0.6,
+            max_downtime_intervals: 4,
+            technique: Technique::Start,
+            scheduler: SchedulerKind::A3c,
+            sla_slack: 2.0,
+            m_time_s: 600.0,
+            trace_diurnal_amp: 0.25,
+            trace_noise: 0.08,
+            trace_spike_prob: 0.02,
+        }
+    }
+
+    /// Smaller configuration for fast tests / CI.
+    pub fn test_defaults() -> SimConfig {
+        let mut c = Self::paper_defaults();
+        c.pm_counts = vec![4, 3, 2];
+        c.n_workloads = 300;
+        c.n_intervals = 24;
+        c
+    }
+
+    /// Total VM count implied by the PM fleet.
+    pub fn total_vms(&self) -> usize {
+        self.pm_counts
+            .iter()
+            .zip(&self.pm_types)
+            .map(|(&n, t)| n * t.vms_per_pm)
+            .sum()
+    }
+
+    /// Total PM count.
+    pub fn total_pms(&self) -> usize {
+        self.pm_counts.iter().sum()
+    }
+
+    /// Apply overrides from a parsed JSON object (unknown keys rejected).
+    pub fn apply_json(&mut self, v: &Json) -> Result<()> {
+        let obj = v.as_obj().context("config root must be an object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "seed" => self.seed = val.as_f64().context("seed")? as u64,
+                "pm_counts" => {
+                    self.pm_counts = val
+                        .as_arr()
+                        .context("pm_counts")?
+                        .iter()
+                        .map(|x| x.as_usize().context("pm_counts entry"))
+                        .collect::<Result<_>>()?
+                }
+                "n_workloads" => self.n_workloads = val.as_usize().context("n_workloads")?,
+                "interval_s" => self.interval_s = val.as_f64().context("interval_s")?,
+                "n_intervals" => self.n_intervals = val.as_usize().context("n_intervals")?,
+                "job_lambda" => self.job_lambda = val.as_f64().context("job_lambda")?,
+                "deadline_fraction" => {
+                    self.deadline_fraction = val.as_f64().context("deadline_fraction")?
+                }
+                "reserved_util" => self.reserved_util = val.as_f64().context("reserved_util")?,
+                "k_straggler" => self.k_straggler = val.as_f64().context("k_straggler")?,
+                "predict_every" => self.predict_every = val.as_usize().context("predict_every")?,
+                "window_steps" => self.window_steps = val.as_usize().context("window_steps")?,
+                "dynamic_k" => self.dynamic_k = val.as_bool().context("dynamic_k")?,
+                "fault_rate" => self.fault_rate = val.as_f64().context("fault_rate")?,
+                "fault_shape" => self.fault_shape = val.as_f64().context("fault_shape")?,
+                "fault_scale" => self.fault_scale = val.as_f64().context("fault_scale")?,
+                "max_downtime_intervals" => {
+                    self.max_downtime_intervals = val.as_usize().context("max_downtime")?
+                }
+                "technique" => {
+                    self.technique = Technique::parse(val.as_str().context("technique")?)?
+                }
+                "scheduler" => {
+                    self.scheduler = SchedulerKind::parse(val.as_str().context("scheduler")?)?
+                }
+                "sla_slack" => self.sla_slack = val.as_f64().context("sla_slack")?,
+                "m_time_s" => self.m_time_s = val.as_f64().context("m_time_s")?,
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON file.
+    pub fn apply_file(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        self.apply_json(&json::parse(&text)?)
+    }
+
+    /// Apply CLI overrides (flags shared by all subcommands).
+    pub fn apply_cli(&mut self, args: &Args) -> Result<()> {
+        if let Some(path) = args.opt_str("config") {
+            self.apply_file(path)?;
+        }
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.n_workloads = args.usize_or("workloads", self.n_workloads)?;
+        self.n_intervals = args.usize_or("intervals", self.n_intervals)?;
+        self.reserved_util = args.f64_or("reserved-util", self.reserved_util)?;
+        self.k_straggler = args.f64_or("k", self.k_straggler)?;
+        self.fault_rate = args.f64_or("fault-rate", self.fault_rate)?;
+        if let Some(t) = args.opt_str("technique") {
+            self.technique = Technique::parse(t)?;
+        }
+        if let Some(s) = args.opt_str("scheduler") {
+            self.scheduler = SchedulerKind::parse(s)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table4() {
+        let c = SimConfig::paper_defaults();
+        assert_eq!(c.total_vms(), 400);
+        assert_eq!(c.n_workloads, 5000);
+        assert_eq!(c.n_intervals, 288);
+        assert_eq!(c.job_lambda, 1.2);
+        assert_eq!(c.k_straggler, 1.5);
+        assert_eq!(c.fault_shape, 1.5);
+        assert_eq!(c.fault_scale, 2.0);
+        assert_eq!(c.pm_types.len(), 3);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = SimConfig::paper_defaults();
+        let v = json::parse(
+            r#"{"seed": 7, "n_workloads": 100, "technique": "dolly",
+                "pm_counts": [1, 1, 1], "reserved_util": 0.4}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.n_workloads, 100);
+        assert_eq!(c.technique, Technique::Dolly);
+        assert_eq!(c.total_vms(), 12 + 6 + 2);
+        assert_eq!(c.reserved_util, 0.4);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SimConfig::paper_defaults();
+        let v = json::parse(r#"{"n_worloads": 5}"#).unwrap();
+        assert!(c.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn technique_parse_roundtrip() {
+        for t in Technique::paper_set() {
+            assert_eq!(Technique::parse(t.name()).unwrap(), t);
+        }
+        assert!(Technique::parse("quantum").is_err());
+    }
+}

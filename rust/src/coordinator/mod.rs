@@ -1,0 +1,141 @@
+//! The START coordinator (L3 leader): wires the AOT models, scheduler,
+//! technique manager and simulator together; runs experiment cells on a
+//! worker-thread pool (one PJRT client per worker — executables are not
+//! shared across threads).
+
+pub mod start_manager;
+
+pub use start_manager::StartManager;
+
+use crate::baselines::*;
+use crate::config::{SimConfig, Technique};
+use crate::predictor::{IgruPredictor, StartPredictor};
+use crate::runtime::{IgruModel, Manifest, PjrtRuntime, StartModel};
+
+use crate::sim::engine::{Manager, NullManager, Simulation};
+use crate::sim::metrics::RunMetrics;
+use crate::util::rng::Pcg;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Per-worker model bundle (PJRT client + compiled executables).
+pub struct Models {
+    pub runtime: PjrtRuntime,
+    pub manifest: Manifest,
+    /// Compiled executables are shared (Rc) across every manager built on
+    /// this worker — re-parsing + re-compiling the 1.1 MB HLO text per
+    /// experiment cell cost ~1 s/cell before this (EXPERIMENTS.md §Perf).
+    pub start: Rc<StartModel>,
+    pub igru: Rc<IgruModel>,
+}
+
+impl Models {
+    /// Load everything from an artifact directory.
+    pub fn load(art_dir: impl Into<PathBuf>) -> Result<Models> {
+        let dir = art_dir.into();
+        let manifest = Manifest::load(&dir).context("loading manifest")?;
+        let runtime = PjrtRuntime::new(&dir)?;
+        let start = Rc::new(StartModel::load(&runtime, &manifest)?);
+        let igru = Rc::new(IgruModel::load(&runtime, &manifest)?);
+        Ok(Models { runtime, manifest, start, igru })
+    }
+
+    /// Load from the default artifact location.
+    pub fn load_default() -> Result<Models> {
+        Self::load(crate::find_artifact_dir())
+    }
+}
+
+/// Instantiate the manager for a technique.
+///
+/// Prediction-based techniques (START, IGRU-SD) consume the AOT models;
+/// the reactive baselines are model-free.
+pub fn build_manager(technique: Technique, models: &Models, cfg: &SimConfig) -> Result<Box<dyn Manager>> {
+    Ok(match technique {
+        Technique::Start => {
+            let mut predictor = StartPredictor::new(Rc::clone(&models.start), cfg.k_straggler);
+            if cfg.window_steps > 0 {
+                predictor.window_steps = cfg.window_steps;
+            }
+            let mut mgr = StartManager::new(predictor);
+            mgr.predict_every = cfg.predict_every.max(1);
+            Box::new(mgr)
+        }
+        Technique::IgruSd => {
+            Box::new(IgruSdManager::new(IgruPredictor::new(Rc::clone(&models.igru), 1.15)))
+        }
+        Technique::Wrangler => Box::new(WranglerManager::new()),
+        Technique::Grass => Box::new(GrassManager::new()),
+        Technique::Dolly => Box::new(DollyManager::new()),
+        Technique::Sgc => Box::new(SgcManager::new()),
+        Technique::NearestFit => Box::new(NearestFitManager::new()),
+        Technique::Late => Box::new(LateManager::new()),
+        Technique::Rpps => Box::new(RppsManager::new()),
+        Technique::None => Box::new(NullManager),
+    })
+}
+
+/// Run one simulation cell (one technique, one config) end to end.
+pub fn run_one(cfg: &SimConfig, models: &Models) -> Result<RunMetrics> {
+    let scheduler = crate::scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+    let manager = build_manager(cfg.technique, models, cfg)?;
+    let sim = Simulation::new(cfg.clone(), &models.manifest, scheduler, manager);
+    Ok(sim.run())
+}
+
+/// A labelled experiment cell.
+#[derive(Clone)]
+pub struct Cell {
+    pub label: String,
+    pub cfg: SimConfig,
+}
+
+/// Run cells on a worker pool.  Each worker owns its own PJRT client (the
+/// leader/worker topology: the leader distributes cells over an mpsc
+/// queue and collects `(label, metrics)` results).
+pub fn run_many(cells: Vec<Cell>, threads: usize, art_dir: PathBuf) -> Result<Vec<(String, RunMetrics)>> {
+    let threads = threads.max(1).min(cells.len().max(1));
+    let (work_tx, work_rx) = mpsc::channel::<Cell>();
+    let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+    let (res_tx, res_rx) = mpsc::channel::<Result<(String, RunMetrics)>>();
+    let n_cells = cells.len();
+    for cell in cells {
+        work_tx.send(cell).unwrap();
+    }
+    drop(work_tx);
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let rx = Arc::clone(&work_rx);
+        let tx = res_tx.clone();
+        let dir = art_dir.clone();
+        handles.push(std::thread::spawn(move || {
+            let models = match Models::load(dir) {
+                Ok(m) => m,
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    return;
+                }
+            };
+            loop {
+                let cell = { rx.lock().unwrap().recv() };
+                let Ok(cell) = cell else { break };
+                let result = run_one(&cell.cfg, &models).map(|m| (cell.label, m));
+                if tx.send(result).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(res_tx);
+    let mut out = Vec::with_capacity(n_cells);
+    for r in res_rx {
+        out.push(r?);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(out)
+}

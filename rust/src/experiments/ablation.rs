@@ -1,0 +1,77 @@
+//! Ablations of START's design choices (DESIGN.md §4, beyond the paper's
+//! own figures):
+//!
+//! * dynamic k adaptation on/off (paper §4.3 "dynamically change k")
+//! * underlying scheduler (A3C-R2N2 surrogate vs random/RR/min-min —
+//!   paper §4.5 argues the scheduler choice matters)
+//! * mitigation strategy: full START vs speculation-only vs re-run-only
+//!   (paper §3.3 motivates having both)
+//! * fused-rollout window: T = 5 vs T = 1 (does the LSTM memory help?)
+
+use crate::config::{SchedulerKind, SimConfig, Technique};
+use crate::coordinator::{run_many, Cell};
+use crate::experiments::common::*;
+use crate::experiments::report::Table;
+use anyhow::Result;
+use std::path::PathBuf;
+
+pub fn ablation(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+    let mut base = profile.base_config();
+    base.technique = Technique::Start;
+    let seeds = [42u64, 43, 44];
+
+    let variants: Vec<(&str, Box<dyn Fn(&mut SimConfig)>)> = vec![
+        ("START (full)", Box::new(|_: &mut SimConfig| {})),
+        ("no dynamic k", Box::new(|c: &mut SimConfig| c.dynamic_k = false)),
+        ("k = 1.0", Box::new(|c: &mut SimConfig| {
+            c.dynamic_k = false;
+            c.k_straggler = 1.0;
+        })),
+        ("k = 2.0", Box::new(|c: &mut SimConfig| {
+            c.dynamic_k = false;
+            c.k_straggler = 2.0;
+        })),
+        ("window T = 1", Box::new(|c: &mut SimConfig| c.window_steps = 1)),
+        ("predict every 5", Box::new(|c: &mut SimConfig| c.predict_every = 5)),
+        ("sched: random", Box::new(|c: &mut SimConfig| c.scheduler = SchedulerKind::Random)),
+        ("sched: round-robin", Box::new(|c: &mut SimConfig| c.scheduler = SchedulerKind::RoundRobin)),
+        ("sched: min-min", Box::new(|c: &mut SimConfig| c.scheduler = SchedulerKind::MinMin)),
+        ("no mitigation", Box::new(|c: &mut SimConfig| c.technique = Technique::None)),
+    ];
+
+    let mut cells = Vec::new();
+    for (label, apply) in &variants {
+        for &seed in &seeds {
+            let mut cfg = base.clone();
+            cfg.seed = seed;
+            apply(&mut cfg);
+            cells.push(Cell { label: format!("{label}|START|{seed}"), cfg });
+        }
+    }
+    let results = run_many(cells, threads, art_dir.clone())?;
+
+    let exec = group_results(&results, |m| m.avg_execution_time());
+    let sla = group_results(&results, |m| m.sla_violation_rate());
+    let f1 = group_results(&results, |m| m.confusion.f1());
+    let mape = group_results(&results, |m| m.straggler_mape());
+
+    let mut table = Table::new(
+        "Ablation — START design choices (mean of 3 seeds)",
+        &["variant", "exec (s)", "SLA viol %", "F1", "MAPE %"],
+    );
+    for (label, _) in &variants {
+        let key = label.to_string();
+        let get = |g: &std::collections::BTreeMap<String, std::collections::BTreeMap<String, f64>>| {
+            g.get(&key).and_then(|m| m.get("START")).copied().unwrap_or(f64::NAN)
+        };
+        table.row(vec![
+            key.clone(),
+            format!("{:.1}", get(&exec)),
+            format!("{:.2}", 100.0 * get(&sla)),
+            format!("{:.3}", get(&f1)),
+            format!("{:.1}", get(&mape)),
+        ]);
+    }
+    let raw = results.iter().map(|(l, m)| (l.clone(), metrics_json(m))).collect();
+    Ok(ExperimentResult { id: "ablation", tables: vec![table], raw })
+}

@@ -1,0 +1,205 @@
+//! Shared plumbing for the per-figure experiment modules: profile scaling
+//! (fast vs paper-scale), technique sweeps, result persistence.
+
+use crate::config::{SimConfig, Technique};
+use crate::coordinator::Cell;
+use crate::experiments::report::Table;
+use crate::sim::metrics::RunMetrics;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Experiment size profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Scaled-down cloud (~100 VMs, 48 intervals): minutes, same shape.
+    Fast,
+    /// Paper scale (400 VMs, 288 intervals = 24 h, 5000 cloudlets).
+    Paper,
+}
+
+impl Profile {
+    pub fn base_config(self) -> SimConfig {
+        match self {
+            Profile::Paper => SimConfig::paper_defaults(),
+            Profile::Fast => {
+                let mut cfg = SimConfig::paper_defaults();
+                cfg.pm_counts = vec![6, 4, 2]; // 6·12+4·6+2·2 = 100 VMs
+                cfg.n_intervals = 48;
+                cfg.n_workloads = 600;
+                cfg
+            }
+        }
+    }
+
+    /// Workload sweep points for Fig. 7 (scaled for the profile).
+    pub fn workload_points(self) -> Vec<usize> {
+        match self {
+            Profile::Paper => vec![1000, 2000, 3000, 4000, 5000],
+            Profile::Fast => vec![150, 300, 450, 600, 750],
+        }
+    }
+
+    /// Reserved-utilization sweep for Figs. 6/8.  The fast profile's
+    /// smaller fleet saturates (capacity floor) beyond ~40 % reservation,
+    /// compressing all techniques together, so its sweep stays below the
+    /// knee; `--paper` uses the paper's 20–80 %.
+    pub fn reserved_points(self) -> Vec<f64> {
+        match self {
+            Profile::Paper => vec![0.2, 0.4, 0.6, 0.8],
+            Profile::Fast => vec![0.1, 0.2, 0.3, 0.4],
+        }
+    }
+}
+
+/// Results of one experiment: rendered tables + raw per-cell metrics.
+pub struct ExperimentResult {
+    pub id: &'static str,
+    pub tables: Vec<Table>,
+    /// label → selected scalar metrics for the JSON dump.
+    pub raw: BTreeMap<String, Json>,
+}
+
+impl ExperimentResult {
+    pub fn print(&self) {
+        for t in &self.tables {
+            println!("{}", t.render());
+        }
+    }
+
+    /// Persist to `<out_dir>/<id>.json`.
+    pub fn save(&self, out_dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating {}", out_dir.display()))?;
+        let path = out_dir.join(format!("{}.json", self.id));
+        let doc = Json::obj(vec![
+            ("id", Json::str(self.id)),
+            ("tables", Json::Arr(self.tables.iter().map(|t| t.to_json()).collect())),
+            ("raw", Json::Obj(self.raw.clone())),
+        ]);
+        std::fs::write(&path, doc.dump())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Standard scalar extraction for the JSON dump.
+pub fn metrics_json(m: &RunMetrics) -> Json {
+    let (cpu, ram, disk, net) = m.avg_utils();
+    Json::obj(vec![
+        ("jobs_done", Json::Num(m.jobs_done as f64)),
+        ("tasks_done", Json::Num(m.tasks_done as f64)),
+        ("avg_exec_time_s", Json::Num(m.avg_execution_time())),
+        ("energy_kwh", Json::Num(m.total_energy_kwh())),
+        ("contention", Json::Num(m.avg_contention())),
+        ("sla_violation_rate", Json::Num(m.sla_violation_rate())),
+        ("cpu_util", Json::Num(cpu)),
+        ("ram_util", Json::Num(ram)),
+        ("disk_util", Json::Num(disk)),
+        ("net_util", Json::Num(net)),
+        ("mape", Json::Num(m.straggler_mape())),
+        ("f1", Json::Num(m.confusion.f1())),
+        ("overhead_s", Json::Num(m.manager_overhead_s)),
+        ("speculations", Json::Num(m.speculations as f64)),
+        ("reruns", Json::Num(m.reruns as f64)),
+        ("exec_var", Json::Num(m.exec_summary().variance())),
+        ("exec_p95", Json::Num(m.exec_summary().p95)),
+    ])
+}
+
+/// Build the (technique × sweep) cell grid used by Figs. 6–8.
+pub fn technique_sweep_cells(
+    base: &SimConfig,
+    techniques: &[Technique],
+    sweep: &[(String, Box<dyn Fn(&mut SimConfig)>)],
+    seeds: &[u64],
+) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for (sweep_label, apply) in sweep {
+        for &t in techniques {
+            for &seed in seeds {
+                let mut cfg = base.clone();
+                cfg.technique = t;
+                cfg.seed = seed;
+                apply(&mut cfg);
+                cells.push(Cell {
+                    label: format!("{sweep_label}|{}|{seed}", t.name()),
+                    cfg,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// Group `label = "<sweep>|<technique>|<seed>"` results, averaging seeds.
+/// Returns sweep → technique → averaged metric map.
+pub fn group_results(
+    results: &[(String, RunMetrics)],
+    metric: impl Fn(&RunMetrics) -> f64,
+) -> BTreeMap<String, BTreeMap<String, f64>> {
+    let mut acc: BTreeMap<String, BTreeMap<String, (f64, usize)>> = BTreeMap::new();
+    for (label, m) in results {
+        let parts: Vec<&str> = label.split('|').collect();
+        let (sweep, tech) = (parts[0].to_string(), parts[1].to_string());
+        let e = acc.entry(sweep).or_default().entry(tech).or_insert((0.0, 0));
+        e.0 += metric(m);
+        e.1 += 1;
+    }
+    acc.into_iter()
+        .map(|(s, ts)| {
+            (s, ts.into_iter().map(|(t, (sum, n))| (t, sum / n as f64)).collect())
+        })
+        .collect()
+}
+
+/// Render a sweep × technique table for one metric.
+pub fn sweep_table(
+    title: &str,
+    sweep_order: &[String],
+    techniques: &[Technique],
+    grouped: &BTreeMap<String, BTreeMap<String, f64>>,
+    fmt: impl Fn(f64) -> String,
+) -> Table {
+    let mut headers = vec!["sweep".to_string()];
+    headers.extend(techniques.iter().map(|t| t.name().to_string()));
+    let mut table = Table::new(title, &headers.iter().map(String::as_str).collect::<Vec<_>>());
+    for s in sweep_order {
+        let mut row = vec![s.clone()];
+        for t in techniques {
+            let v = grouped.get(s).and_then(|m| m.get(t.name())).copied().unwrap_or(f64::NAN);
+            row.push(fmt(v));
+        }
+        table.row(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_scale() {
+        let fast = Profile::Fast.base_config();
+        let paper = Profile::Paper.base_config();
+        assert!(fast.total_vms() < paper.total_vms());
+        assert_eq!(paper.total_vms(), 400);
+        assert_eq!(fast.total_vms(), 100);
+    }
+
+    #[test]
+    fn grouping_averages_seeds() {
+        let mut m1 = RunMetrics::default();
+        m1.exec_times = vec![10.0];
+        let mut m2 = RunMetrics::default();
+        m2.exec_times = vec![20.0];
+        let results = vec![
+            ("20%|START|1".to_string(), m1),
+            ("20%|START|2".to_string(), m2),
+        ];
+        let g = group_results(&results, |m| m.avg_execution_time());
+        assert!((g["20%"]["START"] - 15.0).abs() < 1e-12);
+    }
+}

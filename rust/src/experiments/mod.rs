@@ -1,0 +1,49 @@
+//! Experiment harness — regenerates every table and figure in the paper's
+//! evaluation (DESIGN.md §4).  `start-sim experiment <fig2|fig5|fig6|fig7|
+//! fig8|fig9|fig10|headline|all> [--paper] [--threads N] [--out results]`.
+pub mod ablation;
+pub mod common;
+pub mod figures;
+pub mod report;
+pub use common::{ExperimentResult, Profile};
+pub use report::Table;
+
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Dispatch `start-sim experiment <id>`.
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let profile = if args.flag("paper") { Profile::Paper } else { Profile::Fast };
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )?;
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let art_dir = crate::find_artifact_dir();
+    let ids: Vec<&str> = if which == "all" {
+        vec!["fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "headline", "ablation"]
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let result = match id {
+            "fig2" => figures::fig2(profile, threads, &art_dir)?,
+            "fig5" => figures::fig5(profile, threads, &art_dir)?,
+            "fig6" => figures::fig6(profile, threads, &art_dir)?,
+            "fig7" => figures::fig7(profile, threads, &art_dir)?,
+            "fig8" => figures::fig8(profile, threads, &art_dir)?,
+            "fig9" => figures::fig9(profile, threads, &art_dir)?,
+            "fig10" => figures::fig10(profile, threads, &art_dir)?,
+            "headline" => figures::headline(profile, threads, &art_dir)?,
+            "ablation" => ablation::ablation(profile, threads, &art_dir)?,
+            other => anyhow::bail!("unknown experiment {other:?}"),
+        };
+        result.print();
+        let path = result.save(&out_dir)?;
+        println!("[{id}] saved {} ({:.1}s)\n", path.display(), t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! # start-sim
+//!
+//! Full-system reproduction of *START: Straggler Prediction and Mitigation
+//! for Cloud Computing Environments using Encoder LSTM Networks* (Tuli et
+//! al., 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — the Encoder-LSTM (and IGRU-SD baseline)
+//!   authored in JAX over Pallas kernels, trained and AOT-lowered to HLO
+//!   text by `make artifacts` (`python/compile/`).
+//! * **L3 (runtime, this crate)** — a CloudSim-style event-driven cloud
+//!   simulator, Weibull fault injection, PlanetLab-like trace generation,
+//!   the START coordinator (prediction via PJRT + speculation/re-run
+//!   mitigation, Algorithm 1), six baseline straggler managers, and the
+//!   experiment harness regenerating every figure in the paper's
+//!   evaluation (see DESIGN.md §4).
+//!
+//! Python never runs on the request path: the binary is self-contained
+//! once `artifacts/` is built.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod mitigation;
+pub mod ml;
+pub mod pareto;
+pub mod predictor;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$START_SIM_ARTIFACTS`, CWD, or walking
+/// up from the current directory (so `cargo test`/`cargo bench` work
+/// anywhere in the workspace).
+pub fn find_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("START_SIM_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return DEFAULT_ARTIFACT_DIR.into();
+        }
+    }
+}
+
+/// CLI entrypoint (see `main.rs`); lives here so examples can reuse it.
+pub fn launcher_main() -> anyhow::Result<()> {
+    let args = util::cli::Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("info") | None => {
+            let dir = find_artifact_dir();
+            println!("start-sim — START reproduction (see DESIGN.md)");
+            println!("artifact dir: {}", dir.display());
+            let manifest = runtime::Manifest::load(&dir)?;
+            println!(
+                "model: encoder({}x{}+{}x{}) -> lstm {}x2 -> (alpha,beta); T={} I-batch={}",
+                manifest.n_hosts, manifest.m_feats, manifest.q_tasks, manifest.p_feats,
+                manifest.hidden, manifest.rollout_steps, manifest.rollout_batch
+            );
+            Ok(())
+        }
+        Some("simulate") => {
+            let mut cfg = config::SimConfig::paper_defaults();
+            cfg.apply_cli(&args)?;
+            let models = coordinator::Models::load_default()?;
+            let m = coordinator::run_one(&cfg, &models)?;
+            println!("technique={} jobs={} tasks={}", cfg.technique.name(), m.jobs_done, m.tasks_done);
+            println!("avg exec time      : {:.1} s", m.avg_execution_time());
+            println!("energy             : {:.2} kWh", m.total_energy_kwh());
+            println!("contention         : {:.3}", m.avg_contention());
+            println!("SLA violation rate : {:.3}", m.sla_violation_rate());
+            println!("straggler MAPE     : {:.1} %", m.straggler_mape());
+            println!("F1                 : {:.3}", m.confusion.f1());
+            println!("overhead           : {:.2} s ({} spec, {} rerun)",
+                m.manager_overhead_s, m.speculations, m.reruns);
+            Ok(())
+        }
+        Some("experiment") => experiments::run_from_cli(&args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?} (try: info, simulate, experiment)"),
+    }
+}

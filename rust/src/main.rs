@@ -1,0 +1,6 @@
+//! start-sim launcher: simulate / experiment / info subcommands.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    start_sim::launcher_main()
+}

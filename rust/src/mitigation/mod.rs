@@ -1,0 +1,239 @@
+//! Straggler mitigation engine (paper §3.3, Algorithm 1 lines 14–19).
+//!
+//! Two strategies:
+//! * **Speculation** — launch a copy of the task on a different node and
+//!   take whichever result arrives first (deadline-driven jobs).
+//! * **Re-run** — kill the task and restart it fresh on a different node
+//!   (non-deadline jobs; one copy at a time saves energy).
+//!
+//! Target nodes are chosen as the serviceable VM on the host with the
+//! lowest moving average of straggler counts (Alg. 1 / §3.3), excluding
+//! the task's current host.
+
+use crate::sim::types::*;
+use crate::sim::world::World;
+
+/// A mitigation decision produced by a straggler manager.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Run a copy elsewhere; first finisher wins.
+    Speculate(TaskId),
+    /// Kill + restart elsewhere.
+    Rerun(TaskId),
+    /// Delay a not-yet-started task until `t` (Wrangler).
+    Hold(TaskId, f64),
+}
+
+/// Outcome counters for metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MitigationStats {
+    pub speculations: u64,
+    pub reruns: u64,
+    pub holds: u64,
+    pub skipped: u64,
+}
+
+/// Launch a speculative copy of `task`.  Returns the clone's id, or None
+/// if no target VM exists or the task is no longer running.
+pub fn speculate(w: &mut World, task: TaskId, slowdown: f64) -> Option<TaskId> {
+    if !w.tasks[task].is_running() || w.tasks[task].speculative_of.is_some() {
+        return None;
+    }
+    // A task races at most one live clone at a time.
+    if find_clone(w, task).is_some() {
+        return None;
+    }
+    let exclude = w.tasks[task].vm.map(|v| w.vms[v].host);
+    let target = w.best_mitigation_vm(exclude)?;
+    let orig = &w.tasks[task];
+    let clone_id = w.tasks.len();
+    let clone = Task {
+        id: clone_id,
+        job: orig.job,
+        length_mi: orig.length_mi,
+        demand: orig.demand,
+        state: TaskState::Pending,
+        vm: None,
+        last_vm: None,
+        remaining_mi: orig.length_mi,
+        submit_t: w.now,
+        first_start_t: None,
+        restart_time: 0.0,
+        restarts: 0,
+        slowdown: 1.0,
+        speculative_of: Some(task),
+        mitigated: true,
+    };
+    w.tasks.push(clone);
+    w.tasks[task].mitigated = true;
+    w.start_task(clone_id, target, slowdown);
+    Some(clone_id)
+}
+
+/// Kill `task` and restart it on a different node.  Returns the target VM.
+pub fn rerun(w: &mut World, task: TaskId, slowdown: f64, restart_penalty_s: f64) -> Option<VmId> {
+    if !w.tasks[task].is_running() {
+        return None;
+    }
+    let exclude = w.tasks[task].vm.map(|v| w.vms[v].host);
+    let target = w.best_mitigation_vm(exclude)?;
+    w.reset_task(task, restart_penalty_s);
+    w.tasks[task].mitigated = true;
+    w.start_task(task, target, slowdown);
+    Some(target)
+}
+
+/// Put a pending task on hold until `t` (Wrangler-style delaying).
+pub fn hold(w: &mut World, task: TaskId, until: f64) -> bool {
+    if w.tasks[task].state == TaskState::Pending {
+        w.tasks[task].state = TaskState::Held { until };
+        w.tasks[task].mitigated = true;
+        true
+    } else {
+        false
+    }
+}
+
+/// Release held tasks whose hold expired (back to Pending for placement).
+pub fn release_held(w: &mut World) -> usize {
+    let now = w.now;
+    let mut released = 0;
+    for t in 0..w.tasks.len() {
+        if let TaskState::Held { until } = w.tasks[t].state {
+            if now + 1e-9 >= until {
+                w.tasks[t].state = TaskState::Pending;
+                released += 1;
+            }
+        }
+    }
+    released
+}
+
+/// The live speculative clone of `task`, if any.
+pub fn find_clone(w: &World, task: TaskId) -> Option<TaskId> {
+    // Clones are appended after their original; scan backwards.
+    w.tasks
+        .iter()
+        .rev()
+        .find(|t| t.speculative_of == Some(task) && t.is_active())
+        .map(|t| t.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn world_with_running_task() -> (World, TaskId) {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let id = 0;
+        w.tasks.push(Task {
+            id,
+            job: 0,
+            length_mi: 1000.0,
+            demand: TaskDemand { mips: 100.0, ram_gb: 0.2, disk_gb: 0.5, bw_kbps: 0.1 },
+            state: TaskState::Pending,
+            vm: None,
+            last_vm: None,
+            remaining_mi: 1000.0,
+            submit_t: 0.0,
+            first_start_t: None,
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        });
+        w.start_task(id, 0, 4.0); // slow original
+        (w, id)
+    }
+
+    #[test]
+    fn speculate_creates_racing_clone_on_other_host() {
+        let (mut w, t) = world_with_running_task();
+        let clone = speculate(&mut w, t, 1.0).unwrap();
+        assert_eq!(w.tasks[clone].speculative_of, Some(t));
+        assert!(w.tasks[clone].is_running());
+        let (h1, h2) = (w.vms[w.tasks[t].vm.unwrap()].host, w.vms[w.tasks[clone].vm.unwrap()].host);
+        assert_ne!(h1, h2, "clone must land on a different host");
+        assert!(w.tasks[t].mitigated);
+        // Second speculation on the same task is refused.
+        assert!(speculate(&mut w, t, 1.0).is_none());
+        assert_eq!(find_clone(&w, t), Some(clone));
+    }
+
+    #[test]
+    fn clone_outruns_slow_original() {
+        let (mut w, t) = world_with_running_task();
+        let clone = speculate(&mut w, t, 1.0).unwrap();
+        // original: rate 100/4 = 25 → eta 40 s; clone: 100 → eta 10 s.
+        let eta = w.next_finish_time().unwrap();
+        let done = w.advance(eta);
+        assert_eq!(done, vec![clone]);
+    }
+
+    #[test]
+    fn rerun_moves_and_resets() {
+        let (mut w, t) = world_with_running_task();
+        w.advance(4.0);
+        let old_vm = w.tasks[t].vm.unwrap();
+        let new_vm = rerun(&mut w, t, 1.0, 30.0).unwrap();
+        assert_ne!(w.vms[new_vm].host, w.vms[old_vm].host);
+        assert_eq!(w.tasks[t].remaining_mi, 1000.0);
+        assert_eq!(w.tasks[t].restarts, 1);
+        assert!(w.tasks[t].is_running());
+    }
+
+    #[test]
+    fn hold_and_release() {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let id = 0;
+        w.tasks.push(Task {
+            id,
+            job: 0,
+            length_mi: 100.0,
+            demand: TaskDemand::default(),
+            state: TaskState::Pending,
+            vm: None,
+            last_vm: None,
+            remaining_mi: 100.0,
+            submit_t: 0.0,
+            first_start_t: None,
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        });
+        assert!(hold(&mut w, id, 50.0));
+        assert_eq!(release_held(&mut w), 0);
+        w.now = 50.0;
+        assert_eq!(release_held(&mut w), 1);
+        assert_eq!(w.tasks[id].state, TaskState::Pending);
+    }
+
+    #[test]
+    fn mitigation_refused_for_non_running() {
+        let mut w = World::new(&SimConfig::test_defaults());
+        w.tasks.push(Task {
+            id: 0,
+            job: 0,
+            length_mi: 100.0,
+            demand: TaskDemand::default(),
+            state: TaskState::Completed { t: 1.0 },
+            vm: None,
+            last_vm: None,
+            remaining_mi: 0.0,
+            submit_t: 0.0,
+            first_start_t: Some(0.0),
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        });
+        assert!(speculate(&mut w, 0, 1.0).is_none());
+        assert!(rerun(&mut w, 0, 1.0, 0.0).is_none());
+        assert!(!hold(&mut w, 0, 10.0));
+    }
+}

@@ -1,0 +1,224 @@
+//! ARIMA(p, d, q) forecaster — the substrate of the RPPS baseline [23],
+//! which predicts future workload characteristics with ARIMA.
+//!
+//! Fitting: the series is differenced `d` times, AR coefficients are
+//! estimated by solving the Yule–Walker equations (Levinson–Durbin), and
+//! the MA part is approximated by fitting the AR residuals' innovations
+//! (conditional least squares with a fixed-point pass).  That matches how
+//! lightweight embedded ARIMA implementations behave and is plenty for the
+//! short utilization windows RPPS uses.
+
+/// ARIMA(p, d, q) model fit over a window.
+#[derive(Clone, Debug)]
+pub struct Arima {
+    pub p: usize,
+    pub d: usize,
+    pub q: usize,
+    ar: Vec<f64>,
+    ma: Vec<f64>,
+    mean: f64,
+}
+
+impl Arima {
+    /// Fit on a series.  Returns None if the series is too short.
+    pub fn fit(series: &[f64], p: usize, d: usize, q: usize) -> Option<Arima> {
+        if series.len() < p + d + q + 3 {
+            return None;
+        }
+        let diffed = difference(series, d);
+        let mean = diffed.iter().sum::<f64>() / diffed.len() as f64;
+        let centered: Vec<f64> = diffed.iter().map(|x| x - mean).collect();
+        let ar = if p > 0 { yule_walker(&centered, p)? } else { Vec::new() };
+        // Residuals of the AR fit.
+        let mut resid = vec![0.0; centered.len()];
+        for t in p..centered.len() {
+            let mut pred = 0.0;
+            for (j, &a) in ar.iter().enumerate() {
+                pred += a * centered[t - 1 - j];
+            }
+            resid[t] = centered[t] - pred;
+        }
+        // MA: regress residual on its own lags (one CLS pass).
+        let ma = if q > 0 { fit_ma(&resid[p..], q) } else { Vec::new() };
+        Some(Arima { p, d, q, ar, ma, mean })
+    }
+
+    /// One-step-ahead forecast given the original (undifferenced) series.
+    pub fn forecast(&self, series: &[f64]) -> f64 {
+        let diffed = difference(series, self.d);
+        let centered: Vec<f64> = diffed.iter().map(|x| x - self.mean).collect();
+        let n = centered.len();
+        let mut pred = 0.0;
+        for (j, &a) in self.ar.iter().enumerate() {
+            if n > j {
+                pred += a * centered[n - 1 - j];
+            }
+        }
+        // Approximate innovations by AR residuals for the MA terms.
+        for (j, &m) in self.ma.iter().enumerate() {
+            if n > j + self.p {
+                let t = n - 1 - j;
+                let mut ar_pred = 0.0;
+                for (i, &a) in self.ar.iter().enumerate() {
+                    if t > i {
+                        ar_pred += a * centered[t - 1 - i];
+                    }
+                }
+                pred += m * (centered[t] - ar_pred);
+            }
+        }
+        let next_diff = pred + self.mean;
+        undifference(series, self.d, next_diff)
+    }
+}
+
+/// d-th order differencing.
+fn difference(series: &[f64], d: usize) -> Vec<f64> {
+    let mut cur = series.to_vec();
+    for _ in 0..d {
+        cur = cur.windows(2).map(|w| w[1] - w[0]).collect();
+    }
+    cur
+}
+
+/// Invert differencing for a one-step forecast.
+fn undifference(series: &[f64], d: usize, next_diff: f64) -> f64 {
+    // next value = next_diff + sum of the last values of each differencing
+    // level; reconstruct by cumulative addition.
+    let mut levels = Vec::with_capacity(d + 1);
+    let mut cur = series.to_vec();
+    levels.push(*cur.last().unwrap());
+    for _ in 0..d {
+        cur = cur.windows(2).map(|w| w[1] - w[0]).collect();
+        if cur.is_empty() {
+            break;
+        }
+        levels.push(*cur.last().unwrap());
+    }
+    // For d=0: forecast = next_diff; d=1: last + next_diff; d=2: …
+    let mut val = next_diff;
+    for lvl in levels.iter().take(d).rev() {
+        val += lvl;
+    }
+    val
+}
+
+/// Levinson–Durbin solve of the Yule–Walker equations.
+fn yule_walker(x: &[f64], p: usize) -> Option<Vec<f64>> {
+    let n = x.len();
+    if n <= p {
+        return None;
+    }
+    let mut r = vec![0.0; p + 1];
+    for (k, rk) in r.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for t in k..n {
+            acc += x[t] * x[t - k];
+        }
+        *rk = acc / n as f64;
+    }
+    if r[0] <= 1e-12 {
+        return Some(vec![0.0; p]); // constant series
+    }
+    let mut a = vec![0.0; p];
+    let mut e = r[0];
+    for k in 0..p {
+        let mut acc = r[k + 1];
+        for j in 0..k {
+            acc -= a[j] * r[k - j];
+        }
+        let kappa = acc / e;
+        a[k] = kappa;
+        for j in 0..k / 2 + k % 2 {
+            let tmp = a[j] - kappa * a[k - 1 - j];
+            a[k - 1 - j] -= kappa * a[j];
+            a[j] = tmp;
+        }
+        e *= 1.0 - kappa * kappa;
+        if e <= 1e-12 {
+            break;
+        }
+    }
+    Some(a)
+}
+
+/// Least-squares fit of residual on its own lags (MA approximation).
+fn fit_ma(resid: &[f64], q: usize) -> Vec<f64> {
+    let n = resid.len();
+    if n <= q + 1 {
+        return vec![0.0; q];
+    }
+    let mut coef = vec![0.0; q];
+    for (j, cj) in coef.iter_mut().enumerate() {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for t in (j + 1)..n {
+            num += resid[t] * resid[t - 1 - j];
+            den += resid[t - 1 - j] * resid[t - 1 - j];
+        }
+        *cj = if den > 1e-12 { (num / den).clamp(-0.98, 0.98) } else { 0.0 };
+    }
+    coef
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn constant_series_forecasts_constant() {
+        let xs = vec![5.0; 30];
+        let m = Arima::fit(&xs, 2, 0, 1).unwrap();
+        let f = m.forecast(&xs);
+        assert!((f - 5.0).abs() < 1e-6, "{f}");
+    }
+
+    #[test]
+    fn linear_trend_with_d1() {
+        let xs: Vec<f64> = (0..40).map(|i| 2.0 * i as f64 + 1.0).collect();
+        let m = Arima::fit(&xs, 1, 1, 0).unwrap();
+        let f = m.forecast(&xs);
+        assert!((f - 81.0).abs() < 0.5, "{f}"); // next = 2·40+1
+    }
+
+    #[test]
+    fn ar1_recovers_coefficient() {
+        let mut rng = Pcg::seeded(1);
+        let phi = 0.7;
+        let mut xs = vec![0.0];
+        for _ in 0..3000 {
+            let prev = *xs.last().unwrap();
+            xs.push(phi * prev + rng.normal());
+        }
+        let m = Arima::fit(&xs, 1, 0, 0).unwrap();
+        assert!((m.ar[0] - phi).abs() < 0.08, "ar {:?}", m.ar);
+    }
+
+    #[test]
+    fn forecast_beats_naive_on_ar_series() {
+        let mut rng = Pcg::seeded(2);
+        let phi = 0.85;
+        let mut xs = vec![0.0];
+        for _ in 0..500 {
+            let prev = *xs.last().unwrap();
+            xs.push(phi * prev + rng.normal());
+        }
+        let mut err_arima = 0.0;
+        let mut err_naive = 0.0;
+        for t in 100..499 {
+            let window = &xs[..t];
+            if let Some(m) = Arima::fit(window, 2, 0, 1) {
+                let f = m.forecast(window);
+                err_arima += (f - xs[t]).powi(2);
+                err_naive += (0.0 - xs[t]).powi(2); // mean-predictor baseline
+            }
+        }
+        assert!(err_arima < 0.7 * err_naive, "arima {err_arima} naive {err_naive}");
+    }
+
+    #[test]
+    fn too_short_series_returns_none() {
+        assert!(Arima::fit(&[1.0, 2.0], 2, 1, 1).is_none());
+    }
+}

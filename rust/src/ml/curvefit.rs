@@ -1,0 +1,177 @@
+//! Nonlinear least-squares fit of `y = a + b·x^c` — the progress-profile
+//! model of the NearestFit baseline [6] (x = task input size, y = time).
+//!
+//! Gauss–Newton with a log-space initialization for `c` and damped steps.
+
+/// Fitted power-law profile.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerFit {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl PowerFit {
+    /// Fit `y = a + b·x^c` over samples (x > 0).
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Option<PowerFit> {
+        if xs.len() != ys.len() || xs.len() < 3 || xs.iter().any(|&x| x <= 0.0) {
+            return None;
+        }
+        // Initialize: a ≈ min(y) · 0.9, slope in log space for b, c.
+        let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut a = 0.9 * ymin;
+        let (mut b, mut c) = log_init(xs, ys, a).unwrap_or((1.0, 1.0));
+        for _ in 0..60 {
+            // Residuals r_i = y_i − (a + b x^c); Jacobian columns:
+            // ∂/∂a = 1, ∂/∂b = x^c, ∂/∂c = b x^c ln x.
+            let mut jtj = [[0.0f64; 3]; 3];
+            let mut jtr = [0.0f64; 3];
+            for (&x, &y) in xs.iter().zip(ys) {
+                let xc = x.powf(c);
+                let j = [1.0, xc, b * xc * x.ln()];
+                let r = y - (a + b * xc);
+                for p in 0..3 {
+                    jtr[p] += j[p] * r;
+                    for q in 0..3 {
+                        jtj[p][q] += j[p] * j[q];
+                    }
+                }
+            }
+            // Levenberg damping.
+            for (p, row) in jtj.iter_mut().enumerate() {
+                row[p] += 1e-6 + 1e-3 * row[p];
+            }
+            let delta = solve3(&jtj, &jtr)?;
+            a += delta[0];
+            b += delta[1];
+            c = (c + delta[2]).clamp(-3.0, 3.0);
+            if delta.iter().all(|d| d.abs() < 1e-10) {
+                break;
+            }
+        }
+        (a.is_finite() && b.is_finite() && c.is_finite()).then_some(PowerFit { a, b, c })
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        self.a + self.b * x.powf(self.c)
+    }
+
+    /// Root-mean-square error over a sample.
+    pub fn rmse(&self, xs: &[f64], ys: &[f64]) -> f64 {
+        let sse: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(&x, &y)| {
+                let e = y - self.predict(x);
+                e * e
+            })
+            .sum();
+        (sse / xs.len() as f64).sqrt()
+    }
+}
+
+fn log_init(xs: &[f64], ys: &[f64], a: f64) -> Option<(f64, f64)> {
+    // log(y − a) = log b + c log x  →  least squares on logs.
+    let mut sx = 0.0;
+    let mut sy = 0.0;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut n = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let r = y - a;
+        if r <= 0.0 {
+            continue;
+        }
+        let lx = x.ln();
+        let ly = r.ln();
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+        n += 1.0;
+    }
+    if n < 2.0 {
+        return None;
+    }
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let c = (n * sxy - sx * sy) / denom;
+    let logb = (sy - c * sx) / n;
+    Some((logb.exp(), c))
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(m: &[[f64; 3]; 3], rhs: &[f64; 3]) -> Option<[f64; 3]> {
+    let mut a = *m;
+    let mut b = *rhs;
+    for col in 0..3 {
+        let piv = (col..3).max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())?;
+        if a[piv][col].abs() < 1e-14 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for col in (0..3).rev() {
+        let mut acc = b[col];
+        for k in col + 1..3 {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn exact_recovery_noiseless() {
+        let (a, b, c) = (2.0, 0.5, 1.3);
+        let xs: Vec<f64> = (1..40).map(|i| i as f64 * 0.5).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| a + b * x.powf(c)).collect();
+        let fit = PowerFit::fit(&xs, &ys).unwrap();
+        assert!((fit.a - a).abs() < 0.05, "a {}", fit.a);
+        assert!((fit.b - b).abs() < 0.05, "b {}", fit.b);
+        assert!((fit.c - c).abs() < 0.05, "c {}", fit.c);
+    }
+
+    #[test]
+    fn noisy_recovery_close() {
+        let mut rng = Pcg::seeded(4);
+        let (a, b, c) = (1.0, 2.0, 0.7);
+        let xs: Vec<f64> = (1..200).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|&x| a + b * x.powf(c) + 0.05 * rng.normal()).collect();
+        let fit = PowerFit::fit(&xs, &ys).unwrap();
+        assert!(fit.rmse(&xs, &ys) < 0.1);
+        assert!((fit.c - c).abs() < 0.1, "c {}", fit.c);
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        assert!(PowerFit::fit(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+        assert!(PowerFit::fit(&[0.0, 1.0, 2.0], &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn linear_special_case() {
+        // c = 1 reduces to a line.
+        let xs: Vec<f64> = (1..30).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 3.0 + 2.0 * x).collect();
+        let fit = PowerFit::fit(&xs, &ys).unwrap();
+        assert!((fit.predict(50.0) - 103.0).abs() < 1.0);
+    }
+}

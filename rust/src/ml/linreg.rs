@@ -1,0 +1,145 @@
+//! Online ridge-regularized linear regression with confidence bounds — the
+//! substrate of the Wrangler baseline [17], which fits a linear model on
+//! node utilization counters and delays tasks whose straggler confidence
+//! exceeds a threshold.
+//!
+//! Implementation: recursive least squares (Sherman–Morrison update of the
+//! inverse Gram matrix), which also yields the predictive variance
+//! xᵀ A⁻¹ x used as the confidence bound — the same quantity a Bayesian
+//! linear model would report.
+
+/// Online linear model y ≈ wᵀx with ridge prior.
+#[derive(Clone, Debug)]
+pub struct OnlineLinReg {
+    dim: usize,
+    /// Inverse Gram matrix A⁻¹ (row-major), initialized to I/λ.
+    a_inv: Vec<f64>,
+    /// Accumulated Xᵀy.
+    b: Vec<f64>,
+    /// Cached weights (recomputed on update).
+    w: Vec<f64>,
+    n: u64,
+}
+
+impl OnlineLinReg {
+    pub fn new(dim: usize, ridge: f64) -> Self {
+        let mut a_inv = vec![0.0; dim * dim];
+        for i in 0..dim {
+            a_inv[i * dim + i] = 1.0 / ridge.max(1e-9);
+        }
+        Self { dim, a_inv, b: vec![0.0; dim], w: vec![0.0; dim], n: 0 }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Rank-one update with observation (x, y).
+    pub fn update(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.dim);
+        let d = self.dim;
+        // v = A⁻¹ x
+        let mut v = vec![0.0; d];
+        for i in 0..d {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += self.a_inv[i * d + j] * x[j];
+            }
+            v[i] = acc;
+        }
+        let denom = 1.0 + dot(x, &v);
+        // A⁻¹ ← A⁻¹ − v vᵀ / denom   (Sherman–Morrison)
+        for i in 0..d {
+            for j in 0..d {
+                self.a_inv[i * d + j] -= v[i] * v[j] / denom;
+            }
+        }
+        for i in 0..d {
+            self.b[i] += x[i] * y;
+        }
+        // w = A⁻¹ b
+        for i in 0..d {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += self.a_inv[i * d + j] * self.b[j];
+            }
+            self.w[i] = acc;
+        }
+        self.n += 1;
+    }
+
+    /// Point prediction wᵀx.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x)
+    }
+
+    /// Predictive uncertainty sqrt(xᵀ A⁻¹ x) — Wrangler's confidence bound.
+    pub fn uncertainty(&self, x: &[f64]) -> f64 {
+        let d = self.dim;
+        let mut acc = 0.0;
+        for i in 0..d {
+            let mut row = 0.0;
+            for j in 0..d {
+                row += self.a_inv[i * d + j] * x[j];
+            }
+            acc += x[i] * row;
+        }
+        acc.max(0.0).sqrt()
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.w
+    }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn recovers_linear_function() {
+        let mut rng = Pcg::seeded(1);
+        let mut m = OnlineLinReg::new(3, 1e-3);
+        let w_true = [2.0, -1.0, 0.5];
+        for _ in 0..500 {
+            let x = [rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), 1.0];
+            let y = dot(&w_true, &x) + 0.01 * rng.normal();
+            m.update(&x, y);
+        }
+        for (got, want) in m.weights().iter().zip(&w_true) {
+            assert!((got - want).abs() < 0.05, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn uncertainty_shrinks_with_data() {
+        let mut rng = Pcg::seeded(2);
+        let mut m = OnlineLinReg::new(2, 1.0);
+        let x = [1.0, 0.5];
+        let before = m.uncertainty(&x);
+        for _ in 0..100 {
+            let xi = [rng.range(0.0, 2.0), rng.range(0.0, 1.0)];
+            m.update(&xi, xi[0] + xi[1]);
+        }
+        let after = m.uncertainty(&x);
+        assert!(after < 0.2 * before, "before {before} after {after}");
+    }
+
+    #[test]
+    fn uncertainty_higher_off_distribution() {
+        let mut rng = Pcg::seeded(3);
+        let mut m = OnlineLinReg::new(2, 1.0);
+        for _ in 0..200 {
+            let xi = [rng.range(0.0, 1.0), 1.0];
+            m.update(&xi, xi[0]);
+        }
+        let in_dist = m.uncertainty(&[0.5, 1.0]);
+        let out_dist = m.uncertainty(&[10.0, 1.0]);
+        assert!(out_dist > 5.0 * in_dist);
+    }
+}

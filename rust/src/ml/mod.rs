@@ -1,0 +1,11 @@
+//! Classic-ML substrates used by the baseline techniques: ARIMA (RPPS),
+//! online linear regression (Wrangler), and nonlinear least-squares curve
+//! fitting (NearestFit).  All from scratch — no external crates.
+
+pub mod arima;
+pub mod curvefit;
+pub mod linreg;
+
+pub use arima::Arima;
+pub use curvefit::PowerFit;
+pub use linreg::OnlineLinReg;

@@ -1,0 +1,171 @@
+//! Pareto distribution model of task execution times (paper §3.1).
+//!
+//! `F_X(x) = 1 − (x/β)^(−α)` for x ≥ β.  MLE fitting (Eqs. 2–3), the
+//! straggler threshold `K = k·αβ/(α−1)` (a multiple of the distribution
+//! mean), and the expected straggler count `E_S = q·(K/β)^(−α)` (Eq. 4).
+
+use anyhow::{ensure, Result};
+
+/// Fitted / predicted Pareto parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pareto {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Pareto {
+    pub fn new(alpha: f64, beta: f64) -> Result<Self> {
+        ensure!(alpha > 0.0 && beta > 0.0, "Pareto requires α, β > 0 (got α={alpha}, β={beta})");
+        Ok(Self { alpha, beta })
+    }
+
+    /// Maximum-likelihood fit (Eq. 3): β̂ = min(X), α̂ = q / Σ log(X_i/β̂).
+    pub fn mle(samples: &[f64]) -> Result<Self> {
+        ensure!(!samples.is_empty(), "MLE needs at least one sample");
+        ensure!(samples.iter().all(|&x| x > 0.0), "task times must be positive");
+        let beta = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let q = samples.len() as f64;
+        let log_sum: f64 = samples.iter().map(|&x| (x / beta).ln()).sum();
+        // All-equal samples give log_sum = 0 (degenerate, infinite α); clamp.
+        let alpha = if log_sum <= 1e-12 { 1e6 } else { q / log_sum };
+        Ok(Self { alpha, beta })
+    }
+
+    /// CDF (Eq. 1).
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x < self.beta {
+            0.0
+        } else {
+            1.0 - (x / self.beta).powf(-self.alpha)
+        }
+    }
+
+    /// Mean αβ/(α−1); defined only for α > 1.
+    pub fn mean(&self) -> Option<f64> {
+        (self.alpha > 1.0).then(|| self.alpha * self.beta / (self.alpha - 1.0))
+    }
+
+    /// Straggler threshold `K = k · mean` (paper §3.1, k = 1.5 default).
+    /// For α ≤ 1 the mean is undefined; the threshold degrades to k·β·10
+    /// (a deep-tail cutoff) so mitigation still engages on pathological
+    /// fits instead of dividing by zero.
+    pub fn straggler_threshold(&self, k: f64) -> f64 {
+        match self.mean() {
+            Some(mean) => k * mean,
+            None => k * self.beta * 10.0,
+        }
+    }
+
+    /// Expected number of stragglers among `q` tasks (Eq. 4):
+    /// `E_S = q · (K/β)^(−α)` = q · P(X > K).
+    pub fn expected_stragglers(&self, q: usize, k: f64) -> f64 {
+        let kk = self.straggler_threshold(k);
+        if kk <= self.beta {
+            return q as f64; // threshold below support: everything "straggles"
+        }
+        q as f64 * (kk / self.beta).powf(-self.alpha)
+    }
+
+    /// Tail probability P(X > x).
+    pub fn tail(&self, x: f64) -> f64 {
+        1.0 - self.cdf(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn mle_exact_beta() {
+        let p = Pareto::mle(&[3.0, 1.5, 2.0, 9.0]).unwrap();
+        assert_eq!(p.beta, 1.5);
+        assert!(p.alpha > 0.0);
+    }
+
+    #[test]
+    fn mle_rejects_empty_and_nonpositive() {
+        assert!(Pareto::mle(&[]).is_err());
+        assert!(Pareto::mle(&[1.0, -2.0]).is_err());
+    }
+
+    #[test]
+    fn mle_degenerate_all_equal() {
+        let p = Pareto::mle(&[2.0, 2.0, 2.0]).unwrap();
+        assert!(p.alpha >= 1e5); // effectively a point mass
+        assert_eq!(p.beta, 2.0);
+    }
+
+    #[test]
+    fn cdf_support_and_monotone() {
+        let p = Pareto::new(2.0, 1.0).unwrap();
+        assert_eq!(p.cdf(0.5), 0.0);
+        assert_eq!(p.cdf(1.0), 0.0);
+        assert!((p.cdf(2.0) - 0.75).abs() < 1e-12);
+        assert!(p.cdf(3.0) > p.cdf(2.0));
+    }
+
+    #[test]
+    fn mean_matches_formula() {
+        let p = Pareto::new(3.0, 2.0).unwrap();
+        assert!((p.mean().unwrap() - 3.0).abs() < 1e-12);
+        assert!(Pareto::new(0.9, 1.0).unwrap().mean().is_none());
+    }
+
+    #[test]
+    fn expected_stragglers_eq4() {
+        // α=2, β=1 → mean 2, K = 1.5·2 = 3, E_S = q·3^{−2} = q/9.
+        let p = Pareto::new(2.0, 1.0).unwrap();
+        let es = p.expected_stragglers(90, 1.5);
+        assert!((es - 10.0).abs() < 1e-9, "{es}");
+    }
+
+    #[test]
+    fn expected_stragglers_monotone_in_k() {
+        let p = Pareto::new(2.5, 1.0).unwrap();
+        let e1 = p.expected_stragglers(100, 1.2);
+        let e2 = p.expected_stragglers(100, 1.5);
+        let e3 = p.expected_stragglers(100, 2.0);
+        assert!(e1 > e2 && e2 > e3, "{e1} {e2} {e3}");
+    }
+
+    #[test]
+    fn property_mle_roundtrip() {
+        // sample → fit recovers parameters within tolerance for large q.
+        ptest::check("pareto-mle-roundtrip", 25, |rng: &mut Pcg| {
+            let alpha = rng.range(1.3, 4.0);
+            let beta = rng.range(0.2, 5.0);
+            let samples: Vec<f64> = (0..8000).map(|_| rng.pareto(alpha, beta)).collect();
+            let fit = Pareto::mle(&samples).map_err(|e| e.to_string())?;
+            if (fit.alpha - alpha).abs() > 0.25 * alpha {
+                return Err(format!("alpha {alpha} fit {}", fit.alpha));
+            }
+            if (fit.beta - beta).abs() > 0.05 * beta {
+                return Err(format!("beta {beta} fit {}", fit.beta));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_expected_stragglers_matches_empirical() {
+        // E_S/q ≈ empirical fraction of samples above K.
+        ptest::check("es-empirical", 15, |rng: &mut Pcg| {
+            let alpha = rng.range(1.5, 3.5);
+            let beta = rng.range(0.5, 2.0);
+            let p = Pareto::new(alpha, beta).unwrap();
+            let k = 1.5;
+            let threshold = p.straggler_threshold(k);
+            let n = 40000;
+            let hits = (0..n).filter(|_| rng.pareto(alpha, beta) > threshold).count();
+            let expect = p.expected_stragglers(n, k);
+            let diff = (hits as f64 - expect).abs() / n as f64;
+            if diff > 0.01 {
+                return Err(format!("empirical {hits} vs expected {expect}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,313 @@
+//! Feature extraction (paper Fig. 3): host matrix M_H (n × m) and task
+//! matrix M_T (q′ × p), EMA-smoothed with weight 0.8 on the latest matrix
+//! (§3.2), plus the sliding T-step window the rollout artifact consumes.
+//!
+//! Column layouts must match `python/compile/dims.py` — the indices are
+//! imported from `trace::generative` which is golden-pinned to Python.
+
+use crate::runtime::Manifest;
+use crate::sim::types::*;
+use crate::sim::world::World;
+use crate::trace::generative::*;
+use std::collections::VecDeque;
+
+/// Builds and smooths feature matrices from the live world.
+pub struct FeatureExtractor {
+    pub n_hosts: usize,
+    pub m_feats: usize,
+    pub q_tasks: usize,
+    pub p_feats: usize,
+    rollout_steps: usize,
+    ema_weight: f64,
+    /// EMA-smoothed M_H and its last `rollout_steps` snapshots.
+    ema_m_h: Vec<f32>,
+    history: VecDeque<Vec<f32>>,
+    /// Scratch for raw snapshot (avoids per-tick allocation).
+    scratch: Vec<f32>,
+    initialized: bool,
+}
+
+impl FeatureExtractor {
+    pub fn new(manifest: &Manifest) -> Self {
+        Self {
+            n_hosts: manifest.n_hosts,
+            m_feats: manifest.m_feats,
+            q_tasks: manifest.q_tasks,
+            p_feats: manifest.p_feats,
+            rollout_steps: manifest.rollout_steps,
+            ema_weight: manifest.ema_weight,
+            ema_m_h: vec![0.0; manifest.mh_len()],
+            history: VecDeque::with_capacity(manifest.rollout_steps + 1),
+            scratch: vec![0.0; manifest.mh_len()],
+            initialized: false,
+        }
+    }
+
+    /// Build the raw (unsmoothed) M_H from the world.  Physical hosts are
+    /// aggregated onto `n_hosts` slots (`host.id % n_hosts`): utilizations
+    /// and capacities are averaged, task counts summed — the paper's n-host
+    /// abstraction over a larger VM fleet.
+    pub fn build_m_h(&self, w: &World, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_hosts * self.m_feats);
+        out.fill(0.0);
+        let (max_mips, max_ram, max_disk, max_bw) = w.fleet_max();
+        let mut slot_count = vec![0.0f32; self.n_hosts];
+        for h in &w.hosts {
+            let slot = h.id % self.n_hosts;
+            let row = &mut out[slot * self.m_feats..(slot + 1) * self.m_feats];
+            let up = h.is_up(w.now);
+            slot_count[slot] += 1.0;
+            if up {
+                row[H_CPU_UTIL] += w.host_cpu_util(h.id) as f32;
+                row[H_RAM_UTIL] += w.host_ram_util(h.id) as f32;
+                row[H_DISK_UTIL] += w.host_disk_util(h.id) as f32;
+                row[H_BW_UTIL] += w.host_bw_util(h.id) as f32;
+                row[H_IS_UP] += 1.0;
+            }
+            row[H_CPU_CAP] += (h.mips_total / max_mips) as f32;
+            row[H_RAM_CAP] += (h.ram_gb / max_ram) as f32;
+            row[H_DISK_CAP] += (h.disk_gb / max_disk) as f32;
+            row[H_BW_CAP] += (h.bw_kbps / max_bw) as f32;
+            row[H_POWER] += ((h.power_peak_w - h.power_idle_w) / 200.0) as f32;
+            row[H_COST] += (h.cost_per_interval / 5.0) as f32;
+            row[H_NTASKS] +=
+                (w.host_task_count(h.id) as f64 / self.q_tasks as f64).min(1.0) as f32;
+        }
+        for slot in 0..self.n_hosts {
+            let n = slot_count[slot].max(1.0);
+            let row = &mut out[slot * self.m_feats..(slot + 1) * self.m_feats];
+            for v in row.iter_mut() {
+                *v /= n;
+            }
+            // is_up becomes the fraction of aggregated hosts serviceable;
+            // round to the majority for the binary feature the net saw.
+            row[H_IS_UP] = if row[H_IS_UP] >= 0.5 { 1.0 } else { 0.0 };
+        }
+    }
+
+    /// Build M_T for a job: one row per task slot, zero-padded past q
+    /// (paper §3.2: "if less than q′ tasks then rest q′ − q rows are 0").
+    pub fn build_m_t(&self, w: &World, job: JobId, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.q_tasks * self.p_feats);
+        out.fill(0.0);
+        let (max_mips, max_ram, max_disk, max_bw) = w.fleet_max();
+        let j = &w.jobs[job];
+        for (slot, &tid) in j.tasks.iter().take(self.q_tasks).enumerate() {
+            let t = &w.tasks[tid];
+            if !t.is_active() && !matches!(t.state, TaskState::Completed { .. }) {
+                continue;
+            }
+            let row = &mut out[slot * self.p_feats..(slot + 1) * self.p_feats];
+            // Normalization ranges chosen so live values land in ~[0, 1],
+            // matching the training distribution (synth.py reqs in [0,1]).
+            row[T_CPU_REQ] = (t.demand.mips / 400.0).min(1.0) as f32;
+            row[T_RAM_REQ] = (t.demand.ram_gb / 0.5).min(1.0) as f32;
+            row[T_DISK_REQ] = (t.demand.disk_gb / (max_disk / 100.0).max(2.0)).min(1.0) as f32;
+            row[T_BW_REQ] = (t.demand.bw_kbps / 0.4_f64.max(max_bw / 5.0)).min(1.0) as f32;
+            row[T_PREV_HOST] = t
+                .vm
+                .map(|v| (w.vms[v].host % self.n_hosts) as f32 / self.n_hosts as f32)
+                .unwrap_or(0.0);
+            row[T_DEADLINE] = if j.deadline_driven { 1.0 } else { 0.0 };
+            row[T_PROGRESS] = t.progress() as f32;
+            row[T_ACTIVE] = if t.is_active() { 1.0 } else { 0.0 };
+            let _ = max_mips;
+            let _ = max_ram;
+        }
+    }
+
+    /// Take the per-interval M_H snapshot: EMA-smooth and append to the
+    /// rollout window.  Also publishes the smoothed matrix to
+    /// `world.latest_m_h` for generative sampling at job submission.
+    pub fn snapshot(&mut self, w: &mut World) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.build_m_h(w, &mut scratch);
+        if !self.initialized {
+            self.ema_m_h.copy_from_slice(&scratch);
+            self.initialized = true;
+        } else {
+            let w8 = self.ema_weight as f32;
+            for (e, &x) in self.ema_m_h.iter_mut().zip(scratch.iter()) {
+                *e = w8 * x + (1.0 - w8) * *e;
+            }
+        }
+        self.scratch = scratch;
+        if self.history.len() == self.rollout_steps {
+            self.history.pop_front();
+        }
+        self.history.push_back(self.ema_m_h.clone());
+        w.latest_m_h = self.ema_m_h.clone();
+    }
+
+    /// Current smoothed M_H.
+    pub fn m_h(&self) -> &[f32] {
+        &self.ema_m_h
+    }
+
+    /// The T-step M_H window for the rollout artifact, oldest first,
+    /// left-padded by repeating the oldest snapshot until T are available.
+    pub fn m_h_window(&self, out: &mut Vec<f32>) {
+        out.clear();
+        let t = self.rollout_steps;
+        let len = self.history.len();
+        let mh = self.n_hosts * self.m_feats;
+        out.reserve(t * mh);
+        for i in 0..t {
+            let idx = if len == 0 {
+                None
+            } else if i + len >= t {
+                Some(i + len - t)
+            } else {
+                Some(0)
+            };
+            match idx {
+                Some(j) => out.extend_from_slice(&self.history[j]),
+                None => out.extend(std::iter::repeat(0.0f32).take(mh)),
+            }
+        }
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.history.len()
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::runtime::{GenerativeConstants, Manifest};
+    use std::collections::BTreeMap;
+
+    pub fn test_manifest() -> Manifest {
+        Manifest {
+            n_hosts: 20,
+            m_feats: 12,
+            q_tasks: 10,
+            p_feats: 8,
+            hidden: 32,
+            igru_hidden: 32,
+            rollout_steps: 5,
+            rollout_batch: 8,
+            ema_weight: 0.8,
+            k_default: 1.5,
+            infer_period_s: 1.0,
+            infer_window_s: 5.0,
+            generative: GenerativeConstants {
+                alpha_min: 1.15,
+                alpha_span: 2.85,
+                alpha_gain: 4.0,
+                alpha_mid: 0.65,
+                contention_weight: 0.5,
+                hetero_weight: 0.4,
+                beta_base: 1.0,
+                beta_demand_lo: 0.4,
+                beta_demand_w: 1.2,
+                beta_load_w: 0.8,
+                contention_knee: 1.2,
+            },
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn add_job(w: &mut World, q: usize) -> JobId {
+        let jid = w.jobs.len();
+        let mut tasks = Vec::new();
+        for _ in 0..q {
+            let tid = w.tasks.len();
+            w.tasks.push(Task {
+                id: tid,
+                job: jid,
+                length_mi: 1000.0,
+                demand: TaskDemand { mips: 200.0, ram_gb: 0.25, disk_gb: 0.5, bw_kbps: 0.2 },
+                state: TaskState::Pending,
+                vm: None,
+                last_vm: None,
+                remaining_mi: 1000.0,
+                submit_t: 0.0,
+                first_start_t: None,
+                restart_time: 0.0,
+                restarts: 0,
+                slowdown: 1.0,
+                speculative_of: None,
+                mitigated: false,
+            });
+            tasks.push(tid);
+        }
+        w.jobs.push(Job {
+            id: jid,
+            tasks,
+            submit_t: 0.0,
+            deadline_driven: true,
+            sla_deadline: 1e9,
+            sla_weight: 1.0,
+            state: JobState::Active,
+            true_alpha: 2.0,
+            true_beta: 1.0,
+        });
+        jid
+    }
+
+    #[test]
+    fn m_h_shape_and_ranges() {
+        let w = World::new(&SimConfig::test_defaults());
+        let fx = FeatureExtractor::new(&test_manifest());
+        let mut out = vec![0.0f32; fx.n_hosts * fx.m_feats];
+        fx.build_m_h(&w, &mut out);
+        assert!(out.iter().all(|&x| (0.0..=1.5).contains(&x)), "out of range");
+        // idle fleet: utilization columns zero, is_up one.
+        for slot in 0..fx.n_hosts {
+            let row = &out[slot * 12..(slot + 1) * 12];
+            assert_eq!(row[H_CPU_UTIL], 0.0);
+        }
+    }
+
+    #[test]
+    fn m_t_zero_padding() {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let job = add_job(&mut w, 3);
+        let fx = FeatureExtractor::new(&test_manifest());
+        let mut out = vec![0.0f32; fx.q_tasks * fx.p_feats];
+        fx.build_m_t(&w, job, &mut out);
+        for slot in 0..3 {
+            assert_eq!(out[slot * 8 + T_ACTIVE], 1.0);
+            assert!(out[slot * 8 + T_CPU_REQ] > 0.0);
+            assert_eq!(out[slot * 8 + T_DEADLINE], 1.0);
+        }
+        for slot in 3..10 {
+            let row = &out[slot * 8..(slot + 1) * 8];
+            assert!(row.iter().all(|&x| x == 0.0), "padding row {slot} not zero");
+        }
+    }
+
+    #[test]
+    fn ema_smoothing_and_window() {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let mut fx = FeatureExtractor::new(&test_manifest());
+        fx.snapshot(&mut w);
+        assert_eq!(fx.history_len(), 1);
+        // Load one host then snapshot again: EMA moves by 0.8 of the delta.
+        let before = fx.m_h()[H_CPU_UTIL];
+        w.hosts[0].background_load = 0.5;
+        w.mark_rates_dirty();
+        fx.snapshot(&mut w);
+        let after = fx.m_h()[H_CPU_UTIL];
+        assert!(after > before);
+        let mut window = Vec::new();
+        fx.m_h_window(&mut window);
+        assert_eq!(window.len(), 5 * 20 * 12);
+        // First 4 window slots are the repeated oldest snapshot.
+        assert_eq!(&window[0..240], &window[240..480]);
+    }
+
+    #[test]
+    fn window_fills_after_t_snapshots() {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let mut fx = FeatureExtractor::new(&test_manifest());
+        for _ in 0..7 {
+            fx.snapshot(&mut w);
+        }
+        assert_eq!(fx.history_len(), 5);
+        assert!(!w.latest_m_h.is_empty());
+    }
+}

@@ -1,0 +1,68 @@
+//! IGRU-SD predictor [22]: a GRU forecasts per-task resource requests;
+//! a detection pass flags tasks whose predicted demand exceeds a threshold
+//! as likely stragglers.  Critically (and per the paper's critique), it
+//! sees only the **task** matrix — no host heterogeneity — which is why
+//! its accuracy collapses when host composition churns (Fig. 9).
+
+use crate::predictor::FeatureExtractor;
+use crate::runtime::IgruModel;
+use crate::sim::types::JobId;
+use crate::sim::world::World;
+use crate::trace::generative::T_CPU_REQ;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// GRU-based resource-request prediction + threshold detection.
+pub struct IgruPredictor {
+    model: Rc<IgruModel>,
+    /// Per-job recurrent hidden state.
+    hidden: HashMap<JobId, Vec<f32>>,
+    /// Detection threshold on predicted normalized CPU demand.
+    pub threshold: f64,
+    mt_scratch: Vec<f32>,
+}
+
+impl IgruPredictor {
+    pub fn new(model: Rc<IgruModel>, threshold: f64) -> Self {
+        let mt = model.manifest.mt_len();
+        Self { model, hidden: HashMap::new(), threshold, mt_scratch: vec![0.0; mt] }
+    }
+
+    /// Advance the job's GRU one tick; returns per-task-slot predicted
+    /// next-interval CPU demand.
+    pub fn step(&mut self, w: &World, fx: &FeatureExtractor, job: JobId) -> Result<Vec<f32>> {
+        fx.build_m_t(w, job, &mut self.mt_scratch);
+        let h = self
+            .hidden
+            .entry(job)
+            .or_insert_with(|| self.model.zero_hidden())
+            .clone();
+        let (pred, h2) = self.model.step(&self.mt_scratch, &h)?;
+        self.hidden.insert(job, h2);
+        Ok(pred)
+    }
+
+    /// Detection pass: expected straggler count = tasks whose predicted
+    /// demand exceeds `threshold` × their current request.
+    pub fn expected_stragglers(&mut self, w: &World, fx: &FeatureExtractor, job: JobId) -> Result<(f64, Vec<usize>)> {
+        let pred = self.step(w, fx, job)?;
+        let m = &self.model.manifest;
+        let mut flagged = Vec::new();
+        for (slot, &tid) in w.jobs[job].tasks.iter().take(m.q_tasks).enumerate() {
+            if !w.tasks[tid].is_active() {
+                continue;
+            }
+            let cur = self.mt_scratch[slot * m.p_feats + T_CPU_REQ] as f64;
+            if pred[slot] as f64 > self.threshold * cur.max(0.05) {
+                flagged.push(slot);
+            }
+        }
+        Ok((flagged.len() as f64, flagged))
+    }
+
+    /// Drop state for a finished job.
+    pub fn forget(&mut self, job: JobId) {
+        self.hidden.remove(&job);
+    }
+}

@@ -1,0 +1,14 @@
+//! Straggler predictors: the START Encoder-LSTM (via PJRT), the IGRU-SD
+//! GRU baseline (via PJRT), and the RPPS ARIMA baseline — plus the feature
+//! extractor that turns simulator state into the model's (M_H, M_T)
+//! matrices (paper Fig. 3).
+
+pub mod features;
+pub mod igru;
+pub mod rpps;
+pub mod start;
+
+pub use features::FeatureExtractor;
+pub use igru::IgruPredictor;
+pub use rpps::RppsPredictor;
+pub use start::StartPredictor;

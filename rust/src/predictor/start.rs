@@ -1,0 +1,145 @@
+//! The START predictor: Encoder-LSTM (via PJRT) → Pareto (α, β) → E_S.
+//!
+//! This is the paper's §3.2 inference loop.  The hot path uses the fused
+//! T-step rollout artifact (one PJRT dispatch per prediction instead of
+//! T), and packs up to `rollout_batch` jobs per dispatch via the batched
+//! artifact — see DESIGN.md §8.
+
+use crate::pareto::Pareto;
+use crate::predictor::FeatureExtractor;
+use crate::runtime::StartModel;
+use crate::sim::types::JobId;
+use crate::sim::world::World;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// A (job → E_S) prediction.
+#[derive(Clone, Copy, Debug)]
+pub struct StragglerPrediction {
+    pub job: JobId,
+    pub alpha: f64,
+    pub beta: f64,
+    /// Expected straggler count E_S (Eq. 4).
+    pub expected: f64,
+}
+
+/// Wraps the AOT Encoder-LSTM with feature plumbing and Pareto math.
+pub struct StartPredictor {
+    model: Rc<StartModel>,
+    /// Straggler parameter k (adapted online by the engine).
+    pub k: f64,
+    /// Effective history window (≤ rollout_steps; smaller = the Fig. 2 "T"
+    /// ablation — older steps are overwritten with the oldest kept step).
+    pub window_steps: usize,
+    /// Scratch buffers (avoid per-prediction allocation on the hot path).
+    mh_window: Vec<f32>,
+    mt_scratch: Vec<f32>,
+    mh_batch: Vec<f32>,
+    mt_batch: Vec<f32>,
+}
+
+impl StartPredictor {
+    pub fn new(model: Rc<StartModel>, k: f64) -> Self {
+        let m = &model.manifest;
+        let (t, b) = (m.rollout_steps, m.rollout_batch);
+        let (mh, mt) = (m.mh_len(), m.mt_len());
+        Self {
+            k,
+            window_steps: t,
+            mh_window: Vec::with_capacity(t * mh),
+            mt_scratch: vec![0.0; mt],
+            mh_batch: vec![0.0; t * b * mh],
+            mt_batch: vec![0.0; t * b * mt],
+            model,
+        }
+    }
+
+    /// Predict (α, β, E_S) for one job: fused rollout, single dispatch.
+    pub fn predict(
+        &mut self,
+        w: &World,
+        fx: &FeatureExtractor,
+        job: JobId,
+    ) -> Result<StragglerPrediction> {
+        let (t, mh_len, mt_len) =
+            (self.model.manifest.rollout_steps, self.model.manifest.mh_len(), self.model.manifest.mt_len());
+        fx.m_h_window(&mut self.mh_window);
+        self.truncate_window(t, mh_len);
+        fx.build_m_t(w, job, &mut self.mt_scratch);
+        // M_T window: repeat the current task matrix across T steps (task
+        // requirements are static within a prediction window).
+        let mut mt_seq = vec![0.0f32; t * mt_len];
+        for step in 0..t {
+            mt_seq[step * mt_len..(step + 1) * mt_len].copy_from_slice(&self.mt_scratch);
+        }
+        let (alpha, beta) = self.model.rollout(&self.mh_window, &mt_seq)?;
+        Ok(self.to_prediction(w, job, alpha, beta))
+    }
+
+    /// Predict for up to `rollout_batch` jobs in one PJRT dispatch,
+    /// padding unused batch lanes with zeros.
+    pub fn predict_batch(
+        &mut self,
+        w: &World,
+        fx: &FeatureExtractor,
+        jobs: &[JobId],
+    ) -> Result<Vec<StragglerPrediction>> {
+        let m = &self.model.manifest;
+        let (t, b) = (m.rollout_steps, m.rollout_batch);
+        let (mh_len, mt_len) = (m.mh_len(), m.mt_len());
+        assert!(jobs.len() <= b, "at most {b} jobs per batched dispatch");
+        fx.m_h_window(&mut self.mh_window);
+        self.truncate_window(t, mh_len);
+        self.mh_batch.fill(0.0);
+        self.mt_batch.fill(0.0);
+        // Layout (T, B, …): per timestep, B contiguous matrices.
+        for step in 0..t {
+            let mh_src = &self.mh_window[step * mh_len..(step + 1) * mh_len];
+            for lane in 0..b {
+                let dst = (step * b + lane) * mh_len;
+                self.mh_batch[dst..dst + mh_len].copy_from_slice(mh_src);
+            }
+        }
+        for (lane, &job) in jobs.iter().enumerate() {
+            fx.build_m_t(w, job, &mut self.mt_scratch);
+            for step in 0..t {
+                let dst = (step * b + lane) * mt_len;
+                self.mt_batch[dst..dst + mt_len].copy_from_slice(&self.mt_scratch);
+            }
+        }
+        let pairs = self.model.rollout_batch(&self.mh_batch, &self.mt_batch)?;
+        Ok(jobs
+            .iter()
+            .zip(pairs)
+            .map(|(&job, (alpha, beta))| self.to_prediction(w, job, alpha, beta))
+            .collect())
+    }
+
+    /// Emulate a shorter history window T′ < T by overwriting the oldest
+    /// (T − T′) steps with the oldest retained step.
+    fn truncate_window(&mut self, t: usize, mh_len: usize) {
+        let keep = self.window_steps.clamp(1, t);
+        if keep == t {
+            return;
+        }
+        let src_start = (t - keep) * mh_len;
+        let src: Vec<f32> = self.mh_window[src_start..src_start + mh_len].to_vec();
+        for step in 0..(t - keep) {
+            self.mh_window[step * mh_len..(step + 1) * mh_len].copy_from_slice(&src);
+        }
+    }
+
+    fn to_prediction(
+        &self,
+        w: &World,
+        job: JobId,
+        alpha: f64,
+        beta: f64,
+    ) -> StragglerPrediction {
+        let q = w.jobs[job].tasks.len();
+        let expected = Pareto::new(alpha.max(1.001), beta.max(1e-6))
+            .map(|p| p.expected_stragglers(q, self.k))
+            .unwrap_or(0.0);
+        StragglerPrediction { job, alpha, beta, expected }
+    }
+}

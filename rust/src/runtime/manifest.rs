@@ -1,0 +1,160 @@
+//! Artifact manifest: the shape/constant contract emitted by
+//! `python/compile/aot.py`.  Everything the Rust side needs to marshal
+//! feature matrices correctly is read from here at startup — no dimension
+//! is duplicated in Rust code.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Constants of the shared generative model (mirrors `synth.GEN`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenerativeConstants {
+    pub alpha_min: f64,
+    pub alpha_span: f64,
+    pub alpha_gain: f64,
+    pub alpha_mid: f64,
+    pub contention_weight: f64,
+    pub hetero_weight: f64,
+    pub beta_base: f64,
+    pub beta_demand_lo: f64,
+    pub beta_demand_w: f64,
+    pub beta_load_w: f64,
+    pub contention_knee: f64,
+}
+
+impl GenerativeConstants {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            alpha_min: v.req_f64("alpha_min")?,
+            alpha_span: v.req_f64("alpha_span")?,
+            alpha_gain: v.req_f64("alpha_gain")?,
+            alpha_mid: v.req_f64("alpha_mid")?,
+            contention_weight: v.req_f64("contention_weight")?,
+            hetero_weight: v.req_f64("hetero_weight")?,
+            beta_base: v.req_f64("beta_base")?,
+            beta_demand_lo: v.req_f64("beta_demand_lo")?,
+            beta_demand_w: v.req_f64("beta_demand_w")?,
+            beta_load_w: v.req_f64("beta_load_w")?,
+            contention_knee: v.req_f64("contention_knee")?,
+        })
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_hosts: usize,
+    pub m_feats: usize,
+    pub q_tasks: usize,
+    pub p_feats: usize,
+    pub hidden: usize,
+    pub igru_hidden: usize,
+    pub rollout_steps: usize,
+    pub rollout_batch: usize,
+    pub ema_weight: f64,
+    pub k_default: f64,
+    pub infer_period_s: f64,
+    pub infer_window_s: f64,
+    pub generative: GenerativeConstants,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    /// Load from `<art_dir>/manifest.json`.
+    pub fn load(art_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = art_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts map"))?
+            .iter()
+            .map(|(k, val)| {
+                val.as_str()
+                    .map(|s| (k.clone(), s.to_string()))
+                    .ok_or_else(|| anyhow!("artifact {k:?} is not a string"))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Manifest {
+            n_hosts: v.req_usize("n_hosts")?,
+            m_feats: v.req_usize("m_feats")?,
+            q_tasks: v.req_usize("q_tasks")?,
+            p_feats: v.req_usize("p_feats")?,
+            hidden: v.req_usize("hidden")?,
+            igru_hidden: v.req_usize("igru_hidden")?,
+            rollout_steps: v.req_usize("rollout_steps")?,
+            rollout_batch: v.req_usize("rollout_batch")?,
+            ema_weight: v.req_f64("ema_weight")?,
+            k_default: v.req_f64("k_default")?,
+            infer_period_s: v.req_f64("infer_period_s")?,
+            infer_window_s: v.req_f64("infer_window_s")?,
+            generative: GenerativeConstants::from_json(
+                v.get("generative").ok_or_else(|| anyhow!("manifest missing generative"))?,
+            )?,
+            artifacts,
+        })
+    }
+
+    /// Elements in one M_H matrix.
+    pub fn mh_len(&self) -> usize {
+        self.n_hosts * self.m_feats
+    }
+
+    /// Elements in one M_T matrix.
+    pub fn mt_len(&self) -> usize {
+        self.q_tasks * self.p_feats
+    }
+
+    /// File name of a required artifact.
+    pub fn artifact(&self, key: &str) -> Result<&str> {
+        self.artifacts
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("manifest has no artifact {key:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "n_hosts": 20, "m_feats": 12, "q_tasks": 10, "p_feats": 8,
+        "hidden": 32, "igru_hidden": 32, "rollout_steps": 5,
+        "rollout_batch": 8, "ema_weight": 0.8, "k_default": 1.5,
+        "infer_period_s": 1.0, "infer_window_s": 5.0,
+        "generative": {
+            "alpha_min": 1.15, "alpha_span": 2.85, "alpha_gain": 4.0,
+            "alpha_mid": 0.65, "contention_weight": 0.5,
+            "hetero_weight": 0.4, "beta_base": 1.0, "beta_demand_lo": 0.4,
+            "beta_demand_w": 1.2, "beta_load_w": 0.8, "contention_knee": 1.2
+        },
+        "artifacts": {"start_step": "start_step.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_hosts, 20);
+        assert_eq!(m.mh_len(), 240);
+        assert_eq!(m.mt_len(), 80);
+        assert_eq!(m.artifact("start_step").unwrap(), "start_step.hlo.txt");
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(m.generative.alpha_min, 1.15);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let bad = SAMPLE.replace("\"n_hosts\": 20,", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

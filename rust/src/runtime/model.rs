@@ -1,0 +1,134 @@
+//! Typed wrappers over the AOT executables: the START Encoder-LSTM and the
+//! IGRU-SD GRU, with shape checking against the manifest.
+
+use super::{Executable, Manifest, PjrtRuntime};
+use anyhow::{ensure, Result};
+
+/// Recurrent state of the 2-layer LSTM (h1, c1, h2, c2), batch 1.
+#[derive(Clone, Debug)]
+pub struct LstmState {
+    pub h1: Vec<f32>,
+    pub c1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub c2: Vec<f32>,
+}
+
+impl LstmState {
+    pub fn zeros(hidden: usize) -> Self {
+        Self {
+            h1: vec![0.0; hidden],
+            c1: vec![0.0; hidden],
+            h2: vec![0.0; hidden],
+            c2: vec![0.0; hidden],
+        }
+    }
+}
+
+/// The START Encoder-LSTM, loaded from AOT artifacts.
+///
+/// Three variants are compiled: single step (stateful, one tick), fused
+/// T-step rollout (one dispatch per prediction window — the hot path), and
+/// a batch-8 rollout used to amortize dispatch across concurrent jobs.
+pub struct StartModel {
+    step: Executable,
+    rollout: Executable,
+    rollout_b8: Executable,
+    pub manifest: Manifest,
+}
+
+impl StartModel {
+    pub fn load(rt: &PjrtRuntime, manifest: &Manifest) -> Result<Self> {
+        Ok(Self {
+            step: rt.load(manifest.artifact("start_step")?)?,
+            rollout: rt.load(manifest.artifact("start_rollout")?)?,
+            rollout_b8: rt.load(manifest.artifact("start_rollout_b8")?)?,
+            manifest: manifest.clone(),
+        })
+    }
+
+    /// One inference tick: (α, β, next state).
+    pub fn step(&self, m_h: &[f32], m_t: &[f32], state: &LstmState) -> Result<(f64, f64, LstmState)> {
+        let m = &self.manifest;
+        ensure!(m_h.len() == m.mh_len(), "m_h len {} != {}", m_h.len(), m.mh_len());
+        ensure!(m_t.len() == m.mt_len(), "m_t len {} != {}", m_t.len(), m.mt_len());
+        let h = m.hidden;
+        let outs = self.step.run_f32(&[
+            (m_h, &[1, m.n_hosts, m.m_feats]),
+            (m_t, &[1, m.q_tasks, m.p_feats]),
+            (&state.h1, &[1, h]),
+            (&state.c1, &[1, h]),
+            (&state.h2, &[1, h]),
+            (&state.c2, &[1, h]),
+        ])?;
+        ensure!(outs.len() == 6, "expected 6 outputs, got {}", outs.len());
+        let next = LstmState {
+            h1: outs[2].clone(),
+            c1: outs[3].clone(),
+            h2: outs[4].clone(),
+            c2: outs[5].clone(),
+        };
+        Ok((outs[0][0] as f64, outs[1][0] as f64, next))
+    }
+
+    /// Fused T-step rollout from η₀ = 0: single PJRT dispatch.
+    ///
+    /// `m_h_seq`/`m_t_seq` are T concatenated matrices (already
+    /// EMA-smoothed by the feature extractor).
+    pub fn rollout(&self, m_h_seq: &[f32], m_t_seq: &[f32]) -> Result<(f64, f64)> {
+        let m = &self.manifest;
+        let t = m.rollout_steps;
+        ensure!(m_h_seq.len() == t * m.mh_len(), "m_h_seq len {}", m_h_seq.len());
+        ensure!(m_t_seq.len() == t * m.mt_len(), "m_t_seq len {}", m_t_seq.len());
+        let outs = self.rollout.run_f32(&[
+            (m_h_seq, &[t, 1, m.n_hosts, m.m_feats]),
+            (m_t_seq, &[t, 1, m.q_tasks, m.p_feats]),
+        ])?;
+        ensure!(outs.len() == 2, "expected 2 outputs, got {}", outs.len());
+        Ok((outs[0][0] as f64, outs[1][0] as f64))
+    }
+
+    /// Batched rollout over `rollout_batch` jobs in one dispatch.
+    ///
+    /// Layout matches the AOT spec: (T, B, n, m) i.e. for each timestep the
+    /// B jobs' matrices are contiguous.  Returns B (α, β) pairs.
+    pub fn rollout_batch(&self, m_h_seq: &[f32], m_t_seq: &[f32]) -> Result<Vec<(f64, f64)>> {
+        let m = &self.manifest;
+        let (t, b) = (m.rollout_steps, m.rollout_batch);
+        ensure!(m_h_seq.len() == t * b * m.mh_len(), "m_h_seq len {}", m_h_seq.len());
+        ensure!(m_t_seq.len() == t * b * m.mt_len(), "m_t_seq len {}", m_t_seq.len());
+        let outs = self.rollout_b8.run_f32(&[
+            (m_h_seq, &[t, b, m.n_hosts, m.m_feats]),
+            (m_t_seq, &[t, b, m.q_tasks, m.p_feats]),
+        ])?;
+        ensure!(outs.len() == 2 && outs[0].len() == b, "bad batched output");
+        Ok((0..b).map(|i| (outs[0][i] as f64, outs[1][i] as f64)).collect())
+    }
+}
+
+/// The IGRU-SD baseline network (GRU over the task matrix).
+pub struct IgruModel {
+    step: Executable,
+    pub manifest: Manifest,
+}
+
+impl IgruModel {
+    pub fn load(rt: &PjrtRuntime, manifest: &Manifest) -> Result<Self> {
+        Ok(Self { step: rt.load(manifest.artifact("igru_step")?)?, manifest: manifest.clone() })
+    }
+
+    /// One tick: predicted next-interval per-task CPU demand + next hidden.
+    pub fn step(&self, m_t: &[f32], hidden: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        ensure!(m_t.len() == m.mt_len(), "m_t len {}", m_t.len());
+        ensure!(hidden.len() == m.igru_hidden, "hidden len {}", hidden.len());
+        let outs = self
+            .step
+            .run_f32(&[(m_t, &[1, m.q_tasks, m.p_feats]), (hidden, &[1, m.igru_hidden])])?;
+        ensure!(outs.len() == 2, "expected 2 outputs, got {}", outs.len());
+        Ok((outs[0].clone(), outs[1].clone()))
+    }
+
+    pub fn zero_hidden(&self) -> Vec<f32> {
+        vec![0.0; self.manifest.igru_hidden]
+    }
+}

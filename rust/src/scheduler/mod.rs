@@ -1,0 +1,336 @@
+//! VM scheduling policies (paper §4.5).
+//!
+//! Every straggler technique runs on top of the same scheduler, as in the
+//! paper.  The default is `A3cScheduler`, an online actor-critic surrogate
+//! of the A3C-R2N2 policy [32] (see DESIGN.md §5): a linear-feature
+//! softmax policy over candidate VMs trained by policy gradient against a
+//! TD(0) critic, rewarded with negative normalized response time.  Random
+//! placement (used to diversify training data in §4.4), round-robin and
+//! min-min are also provided.
+
+use crate::config::SchedulerKind;
+use crate::sim::types::*;
+use crate::sim::world::World;
+use crate::util::rng::Pcg;
+
+/// Placement policy interface.
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+    /// Choose a VM for a pending task; None if nothing is placeable.
+    fn pick(&mut self, w: &World, task: TaskId) -> Option<VmId>;
+    /// Response-time feedback for the placement of `task` (lower = better).
+    fn feedback(&mut self, _w: &World, _task: TaskId, _response_norm: f64) {}
+}
+
+/// Instantiate by config kind.
+pub fn build(kind: SchedulerKind, rng: Pcg) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Random => Box::new(RandomScheduler { rng }),
+        SchedulerKind::RoundRobin => Box::new(RoundRobin { next: 0 }),
+        SchedulerKind::MinMin => Box::new(MinMin),
+        SchedulerKind::A3c => Box::new(A3cScheduler::new(rng)),
+    }
+}
+
+fn available_vms(w: &World) -> impl Iterator<Item = VmId> + '_ {
+    (0..w.vms.len()).filter(|&v| w.vm_available(v))
+}
+
+// ---------------------------------------------------------------- Random
+
+/// Uniform random placement over available VMs.
+pub struct RandomScheduler {
+    rng: Pcg,
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn pick(&mut self, w: &World, _task: TaskId) -> Option<VmId> {
+        let candidates: Vec<VmId> = available_vms(w).collect();
+        if candidates.is_empty() {
+            None
+        } else {
+            Some(candidates[self.rng.below(candidates.len())])
+        }
+    }
+}
+
+// ------------------------------------------------------------ RoundRobin
+
+/// Cycles through VMs, skipping unavailable ones.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, w: &World, _task: TaskId) -> Option<VmId> {
+        let n = w.vms.len();
+        for i in 0..n {
+            let v = (self.next + i) % n;
+            if w.vm_available(v) {
+                self.next = v + 1;
+                return Some(v);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------- MinMin
+
+/// Min-min heuristic: place on the VM minimizing projected completion
+/// time (queue depth + demand fit).
+pub struct MinMin;
+
+impl Scheduler for MinMin {
+    fn name(&self) -> &'static str {
+        "min-min"
+    }
+
+    fn pick(&mut self, w: &World, task: TaskId) -> Option<VmId> {
+        let demand = w.tasks[task].demand.mips;
+        let mut best: Option<(f64, VmId)> = None;
+        for v in available_vms(w) {
+            let vm = &w.vms[v];
+            let n_tasks = vm.tasks.len() as f64;
+            let share = vm.mips / (n_tasks + 1.0);
+            let host_load = w.host_cpu_util(vm.host);
+            let eta = w.tasks[task].remaining_mi / share.min(demand).max(1.0)
+                * (1.0 + host_load);
+            if best.map(|(b, _)| eta < b).unwrap_or(true) {
+                best = Some((eta, v));
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+}
+
+// ------------------------------------------------------------------ A3C
+
+const N_FEAT: usize = 6;
+
+/// Online actor-critic surrogate of A3C-R2N2 [32].
+///
+/// Features per (task, VM) pair: host CPU util, VM queue depth, MIPS fit,
+/// host straggler EMA, host RAM headroom, bias.  Actor: softmax over
+/// candidate VMs with linear scores; critic: linear value baseline;
+/// REINFORCE update with advantage (r − V).
+pub struct A3cScheduler {
+    rng: Pcg,
+    /// Actor weights.
+    w: [f64; N_FEAT],
+    /// Critic weights.
+    v: [f64; N_FEAT],
+    lr: f64,
+    /// Pending gradients keyed by task: (features of the chosen VM, mean
+    /// features across candidates, value estimate).
+    pending: Vec<(TaskId, [f64; N_FEAT], [f64; N_FEAT])>,
+}
+
+impl A3cScheduler {
+    pub fn new(rng: Pcg) -> Self {
+        Self { rng, w: [0.0; N_FEAT], v: [0.0; N_FEAT], lr: 0.05, pending: Vec::new() }
+    }
+
+    fn features(w: &World, task: TaskId, vm: VmId) -> [f64; N_FEAT] {
+        let v = &w.vms[vm];
+        let host = &w.hosts[v.host];
+        let demand = w.tasks[task].demand.mips;
+        let share = v.mips / (v.tasks.len() as f64 + 1.0);
+        [
+            w.host_cpu_util(v.host),
+            (v.tasks.len() as f64 / 4.0).min(1.0),
+            (share / demand.max(1.0)).min(2.0) / 2.0,
+            host.straggler_ema,
+            1.0 - w.host_ram_util(v.host),
+            1.0,
+        ]
+    }
+
+    fn score(&self, f: &[f64; N_FEAT]) -> f64 {
+        // Prior: prefer low utilization / short queue / good fit even
+        // before any learning signal arrives.
+        let prior = -1.5 * f[0] - 1.0 * f[1] + 1.0 * f[2] - 1.0 * f[3];
+        prior + self.w.iter().zip(f).map(|(w, x)| w * x).sum::<f64>()
+    }
+}
+
+impl Scheduler for A3cScheduler {
+    fn name(&self) -> &'static str {
+        "a3c-r2n2"
+    }
+
+    fn pick(&mut self, w: &World, task: TaskId) -> Option<VmId> {
+        // Sample up to 32 candidates to bound per-decision cost.
+        let mut candidates: Vec<VmId> = available_vms(w).collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        if candidates.len() > 32 {
+            self.rng.shuffle(&mut candidates);
+            candidates.truncate(32);
+        }
+        let feats: Vec<[f64; N_FEAT]> = candidates
+            .iter()
+            .map(|&v| Self::features(w, task, v))
+            .collect();
+        let scores: Vec<f64> = feats.iter().map(|f| self.score(f)).collect();
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| (s - max).exp()).collect();
+        let total: f64 = exps.iter().sum();
+        let mut pick = self.rng.f64() * total;
+        let mut chosen = candidates.len() - 1;
+        for (i, e) in exps.iter().enumerate() {
+            pick -= e;
+            if pick <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        // Mean features = softmax-expected gradient baseline term.
+        let mut mean = [0.0; N_FEAT];
+        for (f, e) in feats.iter().zip(&exps) {
+            for k in 0..N_FEAT {
+                mean[k] += f[k] * e / total;
+            }
+        }
+        self.pending.push((task, feats[chosen], mean));
+        if self.pending.len() > 4096 {
+            self.pending.drain(..2048);
+        }
+        Some(candidates[chosen])
+    }
+
+    fn feedback(&mut self, _w: &World, task: TaskId, response_norm: f64) {
+        let Some(pos) = self.pending.iter().position(|(t, _, _)| *t == task) else {
+            return;
+        };
+        let (_, chosen, mean) = self.pending.swap_remove(pos);
+        let reward = -response_norm.min(10.0);
+        let value: f64 = self.v.iter().zip(&chosen).map(|(v, x)| v * x).sum();
+        let advantage = reward - value;
+        for k in 0..N_FEAT {
+            // Policy gradient: ∇ log π = f_chosen − E_π[f].
+            self.w[k] += self.lr * advantage * (chosen[k] - mean[k]);
+            // TD(0) critic toward reward.
+            self.v[k] += self.lr * advantage * chosen[k];
+            self.w[k] = self.w[k].clamp(-10.0, 10.0);
+            self.v[k] = self.v[k].clamp(-10.0, 10.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::types::{Task, TaskDemand, TaskState};
+
+    fn world_with_pending_task() -> (World, TaskId) {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let id = 0;
+        w.tasks.push(Task {
+            id,
+            job: 0,
+            length_mi: 1000.0,
+            demand: TaskDemand { mips: 150.0, ram_gb: 0.2, disk_gb: 0.5, bw_kbps: 0.1 },
+            state: TaskState::Pending,
+            vm: None,
+            last_vm: None,
+            remaining_mi: 1000.0,
+            submit_t: 0.0,
+            first_start_t: None,
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        });
+        (w, id)
+    }
+
+    #[test]
+    fn all_schedulers_place_on_idle_fleet() {
+        let (w, t) = world_with_pending_task();
+        for kind in [
+            SchedulerKind::Random,
+            SchedulerKind::RoundRobin,
+            SchedulerKind::MinMin,
+            SchedulerKind::A3c,
+        ] {
+            let mut s = build(kind, Pcg::seeded(1));
+            let vm = s.pick(&w, t);
+            assert!(vm.is_some(), "{} failed to place", s.name());
+        }
+    }
+
+    #[test]
+    fn no_scheduler_places_on_down_fleet() {
+        let (mut w, t) = world_with_pending_task();
+        for h in 0..w.hosts.len() {
+            w.hosts[h].down_until = Some(1e12);
+        }
+        for kind in [
+            SchedulerKind::Random,
+            SchedulerKind::RoundRobin,
+            SchedulerKind::MinMin,
+            SchedulerKind::A3c,
+        ] {
+            let mut s = build(kind, Pcg::seeded(1));
+            assert!(s.pick(&w, t).is_none(), "{} placed on down fleet", s.name());
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (w, t) = world_with_pending_task();
+        let mut s = RoundRobin { next: 0 };
+        let a = s.pick(&w, t).unwrap();
+        let b = s.pick(&w, t).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn minmin_prefers_empty_vm() {
+        let (mut w, t) = world_with_pending_task();
+        // Fill VM 0 with work.
+        let clone = w.tasks[t].clone();
+        let t2 = w.tasks.len();
+        w.tasks.push(Task { id: t2, ..clone });
+        w.start_task(t2, 0, 1.0);
+        let mut s = MinMin;
+        let vm = s.pick(&w, t).unwrap();
+        assert_ne!(vm, 0);
+    }
+
+    #[test]
+    fn a3c_learns_to_avoid_straggler_hosts() {
+        let (mut w, t) = world_with_pending_task();
+        // Mark host 0 as a straggler factory.
+        w.hosts[0].straggler_ema = 1.0;
+        let mut s = A3cScheduler::new(Pcg::seeded(3));
+        // Train: placements on host 0 get terrible reward.
+        for _ in 0..300 {
+            let vm = s.pick(&w, t).unwrap();
+            let bad = w.vms[vm].host == 0;
+            s.feedback(&w, t, if bad { 8.0 } else { 1.0 });
+        }
+        let picks_on_bad = (0..100)
+            .filter(|_| {
+                let vm = s.pick(&w, t).unwrap();
+                s.pending.clear();
+                w.vms[vm].host == 0
+            })
+            .count();
+        // Host 0 has 4/9 of the VMs in the test fleet; learning should
+        // push selection well below that share.
+        assert!(picks_on_bad < 25, "picked bad host {picks_on_bad}/100");
+    }
+}

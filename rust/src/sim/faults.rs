@@ -1,0 +1,191 @@
+//! Weibull fault injection (paper §4.3, FIM-SIM analogue).
+//!
+//! Three fault classes, as in the paper's Fault Injection Module:
+//! * **Host faults** — memory/processing-element faults: the host goes
+//!   down for an ephemeral period (≤ `max_downtime_intervals`); every task
+//!   running there must restart (paper §1/§4.3).
+//! * **Cloudlet faults** — network faults: a running task breaks down and
+//!   re-runs.
+//! * **VM-creation faults** — a VM becomes unavailable for new placements
+//!   until re-created.
+//!
+//! Inter-fault times follow Weibull(k = 1.5, λ = 2) (Eq. 15) scaled so the
+//! fleet sees `fault_rate` faults per scheduling interval on average.
+
+use crate::config::SimConfig;
+use crate::util::rng::Pcg;
+
+/// A fault to apply to the world.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Host index (sampled mod #hosts) down for `intervals` intervals.
+    Host { pick: usize, intervals: usize },
+    /// A running task (sampled mod #running) breaks and must re-run.
+    Cloudlet { pick: usize },
+    /// VM (sampled mod #vms) unavailable for one interval.
+    VmCreation { pick: usize },
+}
+
+/// Stream of fault events in simulated time.
+pub struct FaultInjector {
+    rng: Pcg,
+    shape: f64,
+    scale: f64,
+    /// Mean simulated seconds between faults.
+    mean_gap_s: f64,
+    max_downtime_intervals: usize,
+    interval_s: f64,
+    pub next_fault_t: f64,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: &SimConfig, mut rng: Pcg) -> FaultInjector {
+        // E[Weibull(k, λ)] = λ·Γ(1 + 1/k); for k=1.5, λ=2 ⇒ ≈ 1.80549.
+        let weibull_mean = cfg.fault_scale * gamma_1p(1.0 / cfg.fault_shape);
+        let mean_gap_s = if cfg.fault_rate > 0.0 {
+            cfg.interval_s / cfg.fault_rate
+        } else {
+            f64::INFINITY
+        };
+        let mut inj = FaultInjector {
+            shape: cfg.fault_shape,
+            scale: cfg.fault_scale,
+            mean_gap_s: mean_gap_s / weibull_mean,
+            max_downtime_intervals: cfg.max_downtime_intervals.max(1),
+            interval_s: cfg.interval_s,
+            next_fault_t: 0.0,
+            rng: rng.fork(0xFA017),
+        };
+        inj.next_fault_t = inj.draw_gap();
+        inj
+    }
+
+    fn draw_gap(&mut self) -> f64 {
+        if self.mean_gap_s.is_infinite() {
+            f64::INFINITY
+        } else {
+            self.rng.weibull(self.shape, self.scale) * self.mean_gap_s
+        }
+    }
+
+    /// Downtime duration for a host fault, in seconds (1..=max intervals).
+    pub fn draw_downtime_s(&mut self) -> f64 {
+        self.rng.int_range(1, self.max_downtime_intervals as i64) as f64 * self.interval_s
+    }
+
+    /// If a fault fires at or before `now`, return it and schedule the next.
+    pub fn poll(&mut self, now: f64) -> Option<Fault> {
+        if now + 1e-9 < self.next_fault_t {
+            return None;
+        }
+        let gap = self.draw_gap();
+        self.next_fault_t += gap;
+        let intervals = self.rng.int_range(1, self.max_downtime_intervals as i64) as usize;
+        let roll = self.rng.f64();
+        let pick = self.rng.next_u64() as usize;
+        Some(if roll < 0.3 {
+            Fault::Host { pick, intervals }
+        } else if roll < 0.8 {
+            Fault::Cloudlet { pick }
+        } else {
+            Fault::VmCreation { pick }
+        })
+    }
+}
+
+/// Γ(1 + x) for x in (0, 1] via Lanczos (sufficient accuracy for scaling).
+fn gamma_1p(x: f64) -> f64 {
+    // Γ(1+x) = x·Γ(x); use Lanczos approximation for Γ.
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    let z = x; // compute Γ(z+1)
+    let mut acc = C[0];
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        acc += c / (z + i as f64);
+    }
+    let t = z + G + 0.5;
+    (2.0 * std::f64::consts::PI).sqrt() * t.powf(z + 0.5) * (-t).exp() * acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma_1p(1.0) - 1.0).abs() < 1e-9); // Γ(2) = 1
+        assert!((gamma_1p(0.5) - 0.8862269254).abs() < 1e-6); // Γ(1.5)
+        assert!((gamma_1p(1.0 / 1.5) - 0.9027452929).abs() < 1e-6); // Γ(5/3)
+    }
+
+    #[test]
+    fn fault_rate_calibrated() {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.fault_rate = 0.5;
+        let mut inj = FaultInjector::new(&cfg, Pcg::seeded(1));
+        let horizon = 4000.0 * cfg.interval_s;
+        let mut count = 0;
+        let mut t = 0.0;
+        while t < horizon {
+            t = inj.next_fault_t.min(horizon);
+            if t >= horizon {
+                break;
+            }
+            inj.poll(t).unwrap();
+            count += 1;
+        }
+        let per_interval = count as f64 / 4000.0;
+        assert!((per_interval - 0.5).abs() < 0.05, "rate {per_interval}");
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.fault_rate = 0.0;
+        let mut inj = FaultInjector::new(&cfg, Pcg::seeded(2));
+        assert!(inj.poll(1e12).is_none());
+    }
+
+    #[test]
+    fn fault_mix_roughly_30_50_20() {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.fault_rate = 1.0;
+        let mut inj = FaultInjector::new(&cfg, Pcg::seeded(3));
+        let (mut h, mut c, mut v) = (0, 0, 0);
+        let mut t: f64;
+        for _ in 0..5000 {
+            t = inj.next_fault_t;
+            match inj.poll(t).unwrap() {
+                Fault::Host { .. } => h += 1,
+                Fault::Cloudlet { .. } => c += 1,
+                Fault::VmCreation { .. } => v += 1,
+            }
+        }
+        let total = (h + c + v) as f64;
+        assert!((h as f64 / total - 0.3).abs() < 0.03);
+        assert!((c as f64 / total - 0.5).abs() < 0.03);
+        assert!((v as f64 / total - 0.2).abs() < 0.03);
+    }
+
+    #[test]
+    fn downtime_bounded() {
+        let cfg = SimConfig::test_defaults();
+        let mut inj = FaultInjector::new(&cfg, Pcg::seeded(4));
+        for _ in 0..200 {
+            let d = inj.draw_downtime_s();
+            assert!(d >= cfg.interval_s - 1e-9);
+            assert!(d <= cfg.max_downtime_intervals as f64 * cfg.interval_s + 1e-9);
+        }
+    }
+}

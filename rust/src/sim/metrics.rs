@@ -1,0 +1,304 @@
+//! QoS metrics (paper §4.1, Eqs. 6–14), collected per scheduling interval
+//! and aggregated over the run.
+
+use crate::sim::types::*;
+use crate::sim::world::World;
+use crate::util::stats::{mape, Summary};
+
+/// Snapshot of one scheduling interval.
+#[derive(Clone, Debug, Default)]
+pub struct IntervalMetrics {
+    pub t: f64,
+    /// Eq. 7 energy over the interval, kWh.
+    pub energy_kwh: f64,
+    /// Fleet-mean utilizations (up hosts only), Eqs. 10–12 + CPU.
+    pub cpu_util: f64,
+    pub ram_util: f64,
+    pub disk_util: f64,
+    pub net_util: f64,
+    /// Eq. 9 resource contention (normalized demand units on overloaded
+    /// resources).
+    pub contention: f64,
+    pub active_tasks: usize,
+    pub hosts_down: usize,
+}
+
+/// Whole-run aggregation.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub intervals: Vec<IntervalMetrics>,
+    /// Per completed original task: response time T_C − T_S (Eq. 8 term 1).
+    pub exec_times: Vec<f64>,
+    /// Per completed original task: restart overhead R_i (Eq. 8 term 2).
+    pub restart_times: Vec<f64>,
+    /// Completion timestamps (Fig. 8 series).
+    pub completion_times: Vec<f64>,
+    /// Weighted SLA violations and total weight (Eq. 13).
+    pub sla_violated_weight: f64,
+    pub sla_total_weight: f64,
+    /// Straggler prediction records per job: (predicted E_S, actual count).
+    pub straggler_pred: Vec<(f64, f64)>,
+    /// Straggler classification confusion (Fig. 2 F1).
+    pub confusion: crate::util::stats::Confusion,
+    /// Wall-clock seconds spent inside the straggler manager (Fig. 10).
+    pub manager_overhead_s: f64,
+    /// Per-mitigation latency: time from task start to the mitigation
+    /// action (Fig. 5's detection+mitigation delay).
+    pub mitigation_delays: Vec<f64>,
+    /// Extra (cloned/speculative) task executions launched.
+    pub speculations: u64,
+    pub reruns: u64,
+    pub jobs_done: usize,
+    pub tasks_done: usize,
+}
+
+impl RunMetrics {
+    /// Snapshot interval metrics from the world (call once per interval).
+    pub fn snapshot(&mut self, w: &World, interval_s: f64) {
+        let mut m = IntervalMetrics { t: w.now, ..Default::default() };
+        let mut up = 0usize;
+        let mut energy_w = 0.0;
+        for h in &w.hosts {
+            if !h.is_up(w.now) {
+                m.hosts_down += 1;
+                continue;
+            }
+            up += 1;
+            let cpu = w.host_cpu_util(h.id);
+            let ram = w.host_ram_util(h.id);
+            let disk = w.host_disk_util(h.id);
+            let net = w.host_bw_util(h.id);
+            m.cpu_util += cpu;
+            m.ram_util += ram;
+            m.disk_util += disk;
+            m.net_util += net;
+            // Eq. 7: U_k·(E_max − E_min) + E_min, summed over hosts.
+            energy_w += cpu * (h.power_peak_w - h.power_idle_w) + h.power_idle_w;
+            // Eq. 9: when a resource is overloaded, add the task demand
+            // normalized by the host capacity.
+            let demand_over = |util: f64| util >= 0.999;
+            if demand_over(cpu) || demand_over(ram) || demand_over(net) {
+                for &v in &h.vms {
+                    for &t in &w.vms[v].tasks {
+                        let d = &w.tasks[t].demand;
+                        if demand_over(cpu) {
+                            m.contention += d.mips / h.mips_total;
+                        }
+                        if demand_over(ram) {
+                            m.contention += d.ram_gb / h.ram_gb;
+                        }
+                        if demand_over(net) {
+                            m.contention += d.bw_kbps / h.bw_kbps.max(1e-9);
+                        }
+                    }
+                }
+            }
+        }
+        if up > 0 {
+            m.cpu_util /= up as f64;
+            m.ram_util /= up as f64;
+            m.disk_util /= up as f64;
+            m.net_util /= up as f64;
+        }
+        m.energy_kwh = energy_w * interval_s / 3.6e6;
+        m.active_tasks = w.tasks.iter().filter(|t| t.is_active()).count();
+        self.intervals.push(m);
+    }
+
+    /// Record a completed original (non-speculative) task.
+    pub fn record_task_done(&mut self, task: &Task, t_complete: f64) {
+        self.exec_times.push(t_complete - task.submit_t);
+        self.restart_times.push(task.restart_time);
+        self.completion_times.push(t_complete);
+        self.tasks_done += 1;
+    }
+
+    /// Record job completion with its SLA outcome and prediction score.
+    pub fn record_job_done(
+        &mut self,
+        job: &Job,
+        t_complete: f64,
+        predicted_stragglers: f64,
+        actual_stragglers: usize,
+    ) {
+        self.sla_total_weight += job.sla_weight;
+        if t_complete > job.sla_deadline {
+            self.sla_violated_weight += job.sla_weight;
+        }
+        self.straggler_pred.push((predicted_stragglers, actual_stragglers as f64));
+        self.jobs_done += 1;
+    }
+
+    // ------------------------------------------------------- aggregates
+
+    /// Eq. 8: mean response time + mean restart overhead, seconds.
+    pub fn avg_execution_time(&self) -> f64 {
+        if self.exec_times.is_empty() {
+            return 0.0;
+        }
+        let n = self.exec_times.len() as f64;
+        self.exec_times.iter().sum::<f64>() / n + self.restart_times.iter().sum::<f64>() / n
+    }
+
+    /// Eq. 13: weighted SLA violation rate in [0, 1].
+    pub fn sla_violation_rate(&self) -> f64 {
+        if self.sla_total_weight == 0.0 {
+            0.0
+        } else {
+            self.sla_violated_weight / self.sla_total_weight
+        }
+    }
+
+    /// Total energy (Eq. 7 summed), kWh.
+    pub fn total_energy_kwh(&self) -> f64 {
+        self.intervals.iter().map(|m| m.energy_kwh).sum()
+    }
+
+    /// Mean Eq. 9 contention per interval.
+    pub fn avg_contention(&self) -> f64 {
+        if self.intervals.is_empty() {
+            return 0.0;
+        }
+        self.intervals.iter().map(|m| m.contention).sum::<f64>() / self.intervals.len() as f64
+    }
+
+    /// Fleet-mean utilizations over the run (cpu, ram, disk, net).
+    pub fn avg_utils(&self) -> (f64, f64, f64, f64) {
+        if self.intervals.is_empty() {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        let n = self.intervals.len() as f64;
+        (
+            self.intervals.iter().map(|m| m.cpu_util).sum::<f64>() / n,
+            self.intervals.iter().map(|m| m.ram_util).sum::<f64>() / n,
+            self.intervals.iter().map(|m| m.disk_util).sum::<f64>() / n,
+            self.intervals.iter().map(|m| m.net_util).sum::<f64>() / n,
+        )
+    }
+
+    /// Eq. 14 MAPE of straggler-count prediction over jobs with ≥ 1 actual
+    /// straggler.
+    pub fn straggler_mape(&self) -> f64 {
+        let actual: Vec<f64> = self.straggler_pred.iter().map(|p| p.1).collect();
+        let pred: Vec<f64> = self.straggler_pred.iter().map(|p| p.0).collect();
+        mape(&actual, &pred)
+    }
+
+    /// Summary of task response times (Fig. 8 variance bars).
+    pub fn exec_summary(&self) -> Summary {
+        Summary::of(&self.exec_times)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::types::{TaskDemand, TaskState};
+    use crate::sim::world::World;
+
+    fn world_with_task() -> (World, TaskId) {
+        let mut w = World::new(&SimConfig::test_defaults());
+        let id = 0;
+        w.tasks.push(Task {
+            id,
+            job: 0,
+            length_mi: 100.0,
+            demand: TaskDemand { mips: 100.0, ram_gb: 0.2, disk_gb: 1.0, bw_kbps: 0.2 },
+            state: TaskState::Pending,
+            vm: None,
+            last_vm: None,
+            remaining_mi: 100.0,
+            submit_t: 0.0,
+            first_start_t: None,
+            restart_time: 12.0,
+            restarts: 1,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        });
+        (w, id)
+    }
+
+    #[test]
+    fn energy_in_idle_band() {
+        let (w, _) = world_with_task();
+        let mut rm = RunMetrics::default();
+        rm.snapshot(&w, 300.0);
+        let m = &rm.intervals[0];
+        // Idle fleet: energy = Σ idle watts × 300 s.
+        let idle_w: f64 = w.hosts.iter().map(|h| h.power_idle_w).sum();
+        let expect = idle_w * 300.0 / 3.6e6;
+        assert!((m.energy_kwh - expect).abs() < 1e-9, "{} vs {expect}", m.energy_kwh);
+        assert_eq!(m.hosts_down, 0);
+        assert!(m.contention == 0.0);
+    }
+
+    #[test]
+    fn energy_grows_with_load() {
+        let (mut w, t) = world_with_task();
+        let mut rm = RunMetrics::default();
+        rm.snapshot(&w, 300.0);
+        w.start_task(t, 0, 1.0);
+        w.mark_rates_dirty();
+        rm.snapshot(&w, 300.0);
+        assert!(rm.intervals[1].energy_kwh > rm.intervals[0].energy_kwh);
+    }
+
+    #[test]
+    fn contention_counts_overloaded_host() {
+        let (mut w, t) = world_with_task();
+        w.start_task(t, 0, 1.0);
+        w.hosts[0].background_load = 0.995; // force cpu util to 1.0
+        let mut rm = RunMetrics::default();
+        rm.snapshot(&w, 300.0);
+        assert!(rm.intervals[0].contention > 0.0);
+    }
+
+    #[test]
+    fn avg_execution_time_eq8() {
+        let (w, t) = world_with_task();
+        let mut rm = RunMetrics::default();
+        rm.record_task_done(&w.tasks[t], 50.0);
+        // T_C − T_S = 50, R = 12.
+        assert!((rm.avg_execution_time() - 62.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sla_rate_weighted() {
+        let mut rm = RunMetrics::default();
+        let mk_job = |w: f64, deadline: f64| Job {
+            id: 0,
+            tasks: vec![],
+            submit_t: 0.0,
+            deadline_driven: true,
+            sla_deadline: deadline,
+            sla_weight: w,
+            state: JobState::Active,
+            true_alpha: 2.0,
+            true_beta: 1.0,
+        };
+        rm.record_job_done(&mk_job(1.0, 100.0), 150.0, 1.0, 1); // violated
+        rm.record_job_done(&mk_job(3.0, 100.0), 50.0, 0.0, 0); // met
+        assert!((rm.sla_violation_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_over_jobs() {
+        let mut rm = RunMetrics::default();
+        rm.straggler_pred = vec![(2.0, 2.0), (1.0, 2.0)];
+        assert!((rm.straggler_mape() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn down_host_excluded_from_utils() {
+        let (mut w, _) = world_with_task();
+        let n = w.hosts.len();
+        for h in 0..n - 1 {
+            w.hosts[h].down_until = Some(1e9);
+        }
+        let mut rm = RunMetrics::default();
+        rm.snapshot(&w, 300.0);
+        assert_eq!(rm.intervals[0].hosts_down, n - 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! CloudSim-style discrete-event cloud simulator (the paper's evaluation
+//! substrate, §4.3, rebuilt in Rust).
+//!
+//! Entities mirror CloudSim's: physical **hosts** (Table 3 PM types) run
+//! **VMs**; **cloudlets** (tasks) belonging to bag-of-tasks **jobs** are
+//! placed on VMs by a scheduling policy.  Execution is exact
+//! piecewise-linear: every event advances all running tasks by
+//! `dt × rate`, where rates only change at events (placement, completion,
+//! fault), so no progress is approximated.  A Weibull fault injector
+//! (FIM-SIM analogue) produces host / cloudlet / VM-creation faults.
+//!
+//! Straggler dynamics come from the shared generative model
+//! (`trace::generative`): at task start a duration multiplier is sampled
+//! from Pareto(α*, β*) where (α*, β*) are functions of the current cluster
+//! feature matrices — the same functions the Encoder-LSTM was trained to
+//! recover from those features.
+
+pub mod engine;
+pub mod faults;
+pub mod metrics;
+pub mod types;
+pub mod world;
+
+pub use engine::{Manager, NullManager, Simulation};
+pub use metrics::{IntervalMetrics, RunMetrics};
+pub use types::*;
+pub use world::World;

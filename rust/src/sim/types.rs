@@ -1,0 +1,226 @@
+//! Core simulator entity types: hosts, VMs, tasks (cloudlets), jobs.
+
+/// Typed index into `World::hosts`.
+pub type HostId = usize;
+/// Typed index into `World::vms`.
+pub type VmId = usize;
+/// Typed index into `World::tasks`.
+pub type TaskId = usize;
+/// Typed index into `World::jobs`.
+pub type JobId = usize;
+
+/// A physical machine (Table 3).
+#[derive(Clone, Debug)]
+pub struct Host {
+    pub id: HostId,
+    /// Index into `SimConfig::pm_types`.
+    pub type_idx: usize,
+    pub mips_total: f64,
+    pub ram_gb: f64,
+    pub disk_gb: f64,
+    pub bw_kbps: f64,
+    pub power_idle_w: f64,
+    pub power_peak_w: f64,
+    pub cost_per_interval: f64,
+    pub vms: Vec<VmId>,
+    /// None = serviceable; Some(t) = down until simulated time t.
+    pub down_until: Option<f64>,
+    /// Moving average of stragglers observed on this host (Alg. 1's
+    /// target-selection signal).
+    pub straggler_ema: f64,
+    /// Background (PlanetLab-trace) load fraction for the current interval.
+    pub background_load: f64,
+}
+
+impl Host {
+    pub fn is_up(&self, now: f64) -> bool {
+        match self.down_until {
+            Some(t) => now >= t,
+            None => true,
+        }
+    }
+
+    /// MIPS actually available to VMs after background + reserved load.
+    pub fn effective_mips(&self, reserved: f64) -> f64 {
+        let free = (1.0 - self.background_load - reserved).max(0.05);
+        self.mips_total * free
+    }
+}
+
+/// A virtual machine pinned to a host.
+#[derive(Clone, Debug)]
+pub struct Vm {
+    pub id: VmId,
+    pub host: HostId,
+    /// Nominal MIPS share of the host when uncontended.
+    pub mips: f64,
+    pub ram_gb: f64,
+    /// Tasks currently resident (running) on this VM.
+    pub tasks: Vec<TaskId>,
+    /// VM-creation fault: unavailable until this time.
+    pub ready_at: f64,
+}
+
+/// Cloudlet resource requirements (Table 4 ranges, normalized by the
+/// workload generator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskDemand {
+    pub mips: f64,
+    pub ram_gb: f64,
+    pub disk_gb: f64,
+    pub bw_kbps: f64,
+}
+
+/// Lifecycle of a task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskState {
+    /// Waiting for placement.
+    Pending,
+    /// Executing on a VM.
+    Running,
+    /// Finished successfully at `t`.
+    Completed { t: f64 },
+    /// Killed (lost speculation race, or re-run superseded it).
+    Killed,
+    /// Delayed by the manager (Wrangler-style) until `t`.
+    Held { until: f64 },
+}
+
+/// A cloudlet: one task of a bag-of-tasks job.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub job: JobId,
+    /// Total work in million instructions.
+    pub length_mi: f64,
+    pub demand: TaskDemand,
+    pub state: TaskState,
+    pub vm: Option<VmId>,
+    /// Last VM the task ran on (survives unplacement; for feedback/features).
+    pub last_vm: Option<VmId>,
+    /// Remaining work (MI) — decremented by the engine.
+    pub remaining_mi: f64,
+    pub submit_t: f64,
+    /// First time the task started running (for response-time metrics).
+    pub first_start_t: Option<f64>,
+    /// Cumulative restart delay R_i (Eq. 8).
+    pub restart_time: f64,
+    pub restarts: u32,
+    /// Pareto duration multiplier sampled at (re)start; rate is divided by
+    /// this, so heavy-tail samples produce stragglers.
+    pub slowdown: f64,
+    /// For a speculative copy: the original task it races.
+    pub speculative_of: Option<TaskId>,
+    /// Set once a mitigation action has been taken for this task.
+    pub mitigated: bool,
+}
+
+impl Task {
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, TaskState::Pending | TaskState::Running | TaskState::Held { .. })
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.state == TaskState::Running
+    }
+
+    /// Fraction of work completed.
+    pub fn progress(&self) -> f64 {
+        1.0 - (self.remaining_mi / self.length_mi).clamp(0.0, 1.0)
+    }
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobState {
+    Active,
+    /// All tasks completed at `t`.
+    Done { t: f64 },
+}
+
+/// A bag-of-tasks job (paper §3: 2 ≤ q ≤ q′ = 10 tasks).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub tasks: Vec<TaskId>,
+    pub submit_t: f64,
+    pub deadline_driven: bool,
+    /// SLA deadline (absolute time) and weight w_i (Eq. 13).
+    pub sla_deadline: f64,
+    pub sla_weight: f64,
+    pub state: JobState,
+    /// Ground-truth Pareto parameters sampled at submission (the paper's
+    /// "underlying distribution" of this job's task times).
+    pub true_alpha: f64,
+    pub true_beta: f64,
+}
+
+impl Job {
+    pub fn is_active(&self) -> bool {
+        self.state == JobState::Active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_host() -> Host {
+        Host {
+            id: 0,
+            type_idx: 0,
+            mips_total: 4000.0,
+            ram_gb: 6.0,
+            disk_gb: 320.0,
+            bw_kbps: 1.5,
+            power_idle_w: 108.0,
+            power_peak_w: 273.0,
+            cost_per_interval: 3.0,
+            vms: vec![],
+            down_until: None,
+            straggler_ema: 0.0,
+            background_load: 0.0,
+        }
+    }
+
+    #[test]
+    fn host_up_down() {
+        let mut h = mk_host();
+        assert!(h.is_up(0.0));
+        h.down_until = Some(100.0);
+        assert!(!h.is_up(50.0));
+        assert!(h.is_up(100.0));
+    }
+
+    #[test]
+    fn effective_mips_floors_at_5_percent() {
+        let mut h = mk_host();
+        h.background_load = 0.5;
+        assert!((h.effective_mips(0.2) - 4000.0 * 0.3).abs() < 1e-9);
+        h.background_load = 0.99;
+        assert!((h.effective_mips(0.8) - 4000.0 * 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn task_progress() {
+        let t = Task {
+            id: 0,
+            job: 0,
+            length_mi: 100.0,
+            demand: TaskDemand::default(),
+            state: TaskState::Running,
+            vm: Some(0),
+            last_vm: Some(0),
+            remaining_mi: 25.0,
+            submit_t: 0.0,
+            first_start_t: Some(0.0),
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        };
+        assert!((t.progress() - 0.75).abs() < 1e-12);
+        assert!(t.is_active() && t.is_running());
+    }
+}

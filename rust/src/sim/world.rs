@@ -1,0 +1,542 @@
+//! The mutable simulation world: entity storage, capacity/contention math,
+//! task placement and exact piecewise-linear progress advancement.
+
+use crate::config::SimConfig;
+use crate::sim::types::*;
+
+/// Entity storage + derived execution rates.
+pub struct World {
+    pub now: f64,
+    pub hosts: Vec<Host>,
+    pub vms: Vec<Vm>,
+    pub tasks: Vec<Task>,
+    pub jobs: Vec<Job>,
+    /// Reserved-utilization knob (Fig. 6/8 sweep).
+    pub reserved_util: f64,
+    /// Per-task execution rate in MI/s (slowdown already applied);
+    /// recomputed lazily when `rates_dirty`.
+    rates: Vec<f64>,
+    rates_dirty: bool,
+    /// Latest raw M_H snapshot (set by the coordinator's feature extractor
+    /// each interval; consumed by job-submission generative sampling).
+    pub latest_m_h: Vec<f32>,
+    /// Completed-task log for metrics: (task, completion_time).
+    pub completed_log: Vec<TaskId>,
+}
+
+impl World {
+    /// Build the PM fleet + VMs from config.
+    pub fn new(cfg: &SimConfig) -> World {
+        let mut hosts = Vec::new();
+        let mut vms = Vec::new();
+        for (type_idx, (&count, ty)) in cfg.pm_counts.iter().zip(&cfg.pm_types).enumerate() {
+            for _ in 0..count {
+                let hid = hosts.len();
+                let mut host = Host {
+                    id: hid,
+                    type_idx,
+                    mips_total: ty.mips_per_core * ty.cores as f64,
+                    ram_gb: ty.ram_gb,
+                    disk_gb: ty.disk_gb,
+                    bw_kbps: ty.bw_kbps,
+                    power_idle_w: ty.power_idle_w,
+                    power_peak_w: ty.power_peak_w,
+                    cost_per_interval: ty.cost_per_interval,
+                    vms: Vec::new(),
+                    down_until: None,
+                    straggler_ema: 0.0,
+                    background_load: 0.0,
+                };
+                for _ in 0..ty.vms_per_pm {
+                    let vid = vms.len();
+                    host.vms.push(vid);
+                    vms.push(Vm {
+                        id: vid,
+                        host: hid,
+                        mips: host.mips_total / ty.vms_per_pm as f64,
+                        ram_gb: ty.ram_gb / ty.vms_per_pm as f64,
+                        tasks: Vec::new(),
+                        ready_at: 0.0,
+                    });
+                }
+                hosts.push(host);
+            }
+        }
+        World {
+            now: 0.0,
+            hosts,
+            vms,
+            tasks: Vec::new(),
+            jobs: Vec::new(),
+            reserved_util: cfg.reserved_util,
+            rates: Vec::new(),
+            rates_dirty: true,
+            latest_m_h: Vec::new(),
+            completed_log: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Active (pending/running/held) tasks of a job.
+    pub fn active_tasks(&self, job: JobId) -> Vec<TaskId> {
+        self.jobs[job]
+            .tasks
+            .iter()
+            .copied()
+            .filter(|&t| self.tasks[t].is_active())
+            .collect()
+    }
+
+    /// Completed tasks of a job (non-speculative originals count once).
+    pub fn completed_tasks(&self, job: JobId) -> usize {
+        self.jobs[job]
+            .tasks
+            .iter()
+            .filter(|&&t| matches!(self.tasks[t].state, TaskState::Completed { .. }))
+            .count()
+    }
+
+    /// Whether a VM can currently accept work.
+    pub fn vm_available(&self, vm: VmId) -> bool {
+        let v = &self.vms[vm];
+        v.ready_at <= self.now && self.hosts[v.host].is_up(self.now)
+    }
+
+    /// Sum of task MIPS demand currently on a VM (capped per task by fair share).
+    fn vm_demand(&self, vm: VmId) -> f64 {
+        let v = &self.vms[vm];
+        let n = v.tasks.len().max(1) as f64;
+        let fair = v.mips / n;
+        v.tasks
+            .iter()
+            .map(|&t| self.tasks[t].demand.mips.min(fair).max(1.0))
+            .sum()
+    }
+
+    /// Host CPU utilization in [0, 1] including background + reserved load.
+    pub fn host_cpu_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        if !h.is_up(self.now) {
+            return 0.0;
+        }
+        let demand: f64 = h.vms.iter().map(|&v| self.vm_demand(v)).sum();
+        (demand / h.mips_total + h.background_load + self.reserved_util).min(1.0)
+    }
+
+    /// Host RAM utilization in [0, 1].
+    pub fn host_ram_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        let used: f64 = h
+            .vms
+            .iter()
+            .flat_map(|&v| self.vms[v].tasks.iter())
+            .map(|&t| self.tasks[t].demand.ram_gb)
+            .sum();
+        (used / h.ram_gb + 0.5 * h.background_load + 0.5 * self.reserved_util).min(1.0)
+    }
+
+    /// Host disk utilization in [0, 1].
+    pub fn host_disk_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        let used: f64 = h
+            .vms
+            .iter()
+            .flat_map(|&v| self.vms[v].tasks.iter())
+            .map(|&t| self.tasks[t].demand.disk_gb)
+            .sum();
+        (used / h.disk_gb + 0.3 * self.reserved_util).min(1.0)
+    }
+
+    /// Host network utilization in [0, 1].
+    pub fn host_bw_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        let used: f64 = h
+            .vms
+            .iter()
+            .flat_map(|&v| self.vms[v].tasks.iter())
+            .map(|&t| self.tasks[t].demand.bw_kbps)
+            .sum();
+        (used / h.bw_kbps.max(1e-9) + 0.3 * self.reserved_util).min(1.0)
+    }
+
+    /// Number of running tasks on a host.
+    pub fn host_task_count(&self, host: HostId) -> usize {
+        self.hosts[host].vms.iter().map(|&v| self.vms[v].tasks.len()).sum()
+    }
+
+    // --------------------------------------------------------- placement
+
+    /// Start (or restart) a task on a VM.  `slowdown` is the Pareto
+    /// duration multiplier sampled by the caller from the job's
+    /// ground-truth distribution.
+    pub fn start_task(&mut self, task: TaskId, vm: VmId, slowdown: f64) {
+        debug_assert!(self.tasks[task].vm.is_none(), "task already placed");
+        let t = &mut self.tasks[task];
+        t.state = TaskState::Running;
+        t.vm = Some(vm);
+        t.last_vm = Some(vm);
+        t.slowdown = slowdown.max(1e-3);
+        if t.first_start_t.is_none() {
+            t.first_start_t = Some(self.now);
+        }
+        self.vms[vm].tasks.push(task);
+        self.rates_dirty = true;
+    }
+
+    /// Remove a task from its VM (completion, kill, restart).
+    pub fn unplace_task(&mut self, task: TaskId) {
+        if let Some(vm) = self.tasks[task].vm.take() {
+            self.vms[vm].tasks.retain(|&t| t != task);
+            self.rates_dirty = true;
+        }
+    }
+
+    /// Mark a task completed now and detach it.
+    pub fn complete_task(&mut self, task: TaskId) {
+        self.unplace_task(task);
+        self.tasks[task].state = TaskState::Completed { t: self.now };
+        self.tasks[task].remaining_mi = 0.0;
+        self.completed_log.push(task);
+    }
+
+    /// Kill a task (lost race / superseded) and detach it.
+    pub fn kill_task(&mut self, task: TaskId) {
+        self.unplace_task(task);
+        self.tasks[task].state = TaskState::Killed;
+    }
+
+    /// Reset a task to pending with full work (restart after fault/rerun);
+    /// accumulates restart bookkeeping.
+    pub fn reset_task(&mut self, task: TaskId, restart_penalty_s: f64) {
+        self.unplace_task(task);
+        let t = &mut self.tasks[task];
+        t.state = TaskState::Pending;
+        t.remaining_mi = t.length_mi;
+        t.restarts += 1;
+        t.restart_time += restart_penalty_s;
+    }
+
+    // ----------------------------------------------------- rate computation
+
+    /// Recompute per-task MI/s rates from the current topology.
+    ///
+    /// Model: each task's fair demand on its VM is
+    /// `min(demand.mips, vm.mips / n_tasks)`; a host whose aggregate VM
+    /// demand exceeds its effective capacity (after background + reserved
+    /// load) scales every resident task proportionally — this is the
+    /// resource-contention mechanism (Eq. 9's "overloaded" condition).
+    fn recompute_rates(&mut self) {
+        if self.rates.len() < self.tasks.len() {
+            self.rates.resize(self.tasks.len(), 0.0);
+        }
+        for r in self.rates.iter_mut() {
+            *r = 0.0;
+        }
+        for h in 0..self.hosts.len() {
+            let host = &self.hosts[h];
+            if !host.is_up(self.now) {
+                continue;
+            }
+            let demand: f64 = host.vms.iter().map(|&v| self.vm_demand(v)).sum();
+            if demand <= 0.0 {
+                continue;
+            }
+            let capacity = host.effective_mips(self.reserved_util);
+            let scale = (capacity / demand).min(1.0);
+            for &v in &host.vms {
+                let vm = &self.vms[v];
+                let n = vm.tasks.len().max(1) as f64;
+                let fair = vm.mips / n;
+                for &t in &vm.tasks {
+                    let nominal = self.tasks[t].demand.mips.min(fair).max(1.0);
+                    self.rates[t] = nominal * scale / self.tasks[t].slowdown;
+                }
+            }
+        }
+        self.rates_dirty = false;
+    }
+
+    /// Force rate recomputation on next use (topology/load changed).
+    pub fn mark_rates_dirty(&mut self) {
+        self.rates_dirty = true;
+    }
+
+    /// Current rate of a task (MI/s).
+    pub fn task_rate(&mut self, task: TaskId) -> f64 {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        self.rates.get(task).copied().unwrap_or(0.0)
+    }
+
+    /// Earliest projected completion time among running tasks.
+    pub fn next_finish_time(&mut self) -> Option<f64> {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let now = self.now;
+        let mut best: Option<f64> = None;
+        for t in 0..self.tasks.len() {
+            if self.tasks[t].is_running() {
+                let rate = self.rates[t];
+                if rate > 0.0 {
+                    let eta = now + self.tasks[t].remaining_mi / rate;
+                    best = Some(match best {
+                        Some(b) => b.min(eta),
+                        None => eta,
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Advance simulated time to `to`, consuming work on all running
+    /// tasks.  Returns tasks whose remaining work reached zero.
+    pub fn advance(&mut self, to: f64) -> Vec<TaskId> {
+        debug_assert!(to >= self.now - 1e-9, "time must be monotone");
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let dt = (to - self.now).max(0.0);
+        self.now = to;
+        if dt == 0.0 {
+            return Vec::new();
+        }
+        let mut done = Vec::new();
+        for t in 0..self.tasks.len() {
+            if self.tasks[t].is_running() {
+                let rate = self.rates[t];
+                if rate > 0.0 {
+                    self.tasks[t].remaining_mi -= rate * dt;
+                    if self.tasks[t].remaining_mi <= 1e-6 {
+                        done.push(t);
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    /// Update the per-host straggler moving average (Alg. 1's node-choice
+    /// signal): called when a task is classified at completion.
+    pub fn note_straggler(&mut self, host: HostId, was_straggler: bool) {
+        let h = &mut self.hosts[host];
+        let x = if was_straggler { 1.0 } else { 0.0 };
+        h.straggler_ema = 0.8 * h.straggler_ema + 0.2 * x;
+    }
+
+    /// Pick the up-VM on the host with the lowest straggler moving average
+    /// (the paper's mitigation target choice), breaking ties toward
+    /// unloaded hosts so mitigation does not itself create contention.
+    pub fn best_mitigation_vm(&self, exclude_host: Option<HostId>) -> Option<VmId> {
+        let mut best: Option<((i64, i64, usize), VmId)> = None;
+        for v in 0..self.vms.len() {
+            if !self.vm_available(v) {
+                continue;
+            }
+            let host = self.vms[v].host;
+            if Some(host) == exclude_host {
+                continue;
+            }
+            // Quantized straggler EMA first (the paper's signal), then
+            // host CPU utilization, then VM queue depth.
+            let key = (
+                (self.hosts[host].straggler_ema * 10.0) as i64,
+                (self.host_cpu_util(host) * 20.0) as i64,
+                self.vms[v].tasks.len(),
+            );
+            if best.map(|(b, _)| key < b).unwrap_or(true) {
+                best = Some((key, v));
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+
+    /// Fleet-wide maxima used for feature normalization.
+    pub fn fleet_max(&self) -> (f64, f64, f64, f64) {
+        let mut m = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for h in &self.hosts {
+            m.0 = m.0.max(h.mips_total);
+            m.1 = m.1.max(h.ram_gb);
+            m.2 = m.2.max(h.disk_gb);
+            m.3 = m.3.max(h.bw_kbps);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::types::{TaskDemand, TaskState};
+
+    fn world() -> World {
+        World::new(&SimConfig::test_defaults())
+    }
+
+    fn add_task(w: &mut World, job: JobId, length: f64, mips: f64) -> TaskId {
+        let id = w.tasks.len();
+        w.tasks.push(Task {
+            id,
+            job,
+            length_mi: length,
+            demand: TaskDemand { mips, ram_gb: 0.1, disk_gb: 1.0, bw_kbps: 0.1 },
+            state: TaskState::Pending,
+            vm: None,
+            last_vm: None,
+            remaining_mi: length,
+            submit_t: 0.0,
+            first_start_t: None,
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: None,
+            mitigated: false,
+        });
+        id
+    }
+
+    #[test]
+    fn fleet_construction_matches_config() {
+        let cfg = SimConfig::test_defaults();
+        let w = World::new(&cfg);
+        assert_eq!(w.hosts.len(), cfg.total_pms());
+        assert_eq!(w.vms.len(), cfg.total_vms());
+        // every VM belongs to its host's list exactly once
+        for v in &w.vms {
+            assert!(w.hosts[v.host].vms.contains(&v.id));
+        }
+    }
+
+    #[test]
+    fn uncontended_task_runs_at_demand_rate() {
+        let mut w = world();
+        let t = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(t, 0, 1.0);
+        let rate = w.task_rate(t);
+        assert!((rate - 100.0).abs() < 1e-9, "rate {rate}");
+        let done = w.advance(10.0);
+        assert_eq!(done, vec![t]);
+    }
+
+    #[test]
+    fn slowdown_divides_rate() {
+        let mut w = world();
+        let t = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(t, 0, 4.0);
+        assert!((w.task_rate(t) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vm_fair_share_caps_rate() {
+        let mut w = world();
+        let vm_mips = w.vms[0].mips;
+        let t1 = add_task(&mut w, 0, 1e6, 1e9);
+        let t2 = add_task(&mut w, 0, 1e6, 1e9);
+        w.start_task(t1, 0, 1.0);
+        w.start_task(t2, 0, 1.0);
+        let r1 = w.task_rate(t1);
+        assert!((r1 - vm_mips / 2.0).abs() < 1e-6, "r1 {r1} vm {vm_mips}");
+    }
+
+    #[test]
+    fn host_contention_scales_down() {
+        let mut w = world();
+        let host = 0;
+        // Saturate every VM on host 0 with one huge-demand task.
+        let vms: Vec<_> = w.hosts[host].vms.clone();
+        let mut tasks = Vec::new();
+        for &v in &vms {
+            let t = add_task(&mut w, 0, 1e9, 1e9);
+            w.start_task(t, v, 1.0);
+            tasks.push(t);
+        }
+        // Also background load to force capacity below demand.
+        w.hosts[host].background_load = 0.5;
+        w.mark_rates_dirty();
+        let total_rate: f64 = tasks.iter().map(|&t| w.task_rate(t)).sum();
+        let cap = w.hosts[host].effective_mips(0.0);
+        assert!(total_rate <= cap * 1.001, "total {total_rate} cap {cap}");
+        assert!(w.host_cpu_util(host) >= 0.99);
+    }
+
+    #[test]
+    fn advance_is_exact_piecewise() {
+        let mut w = world();
+        let t = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(t, 0, 1.0);
+        w.advance(3.0);
+        assert!((w.tasks[t].remaining_mi - 700.0).abs() < 1e-9);
+        assert!((w.tasks[t].progress() - 0.3).abs() < 1e-9);
+        let eta = w.next_finish_time().unwrap();
+        assert!((eta - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn down_host_contributes_no_rate() {
+        let mut w = world();
+        let t = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(t, 0, 1.0);
+        w.hosts[w.vms[0].host].down_until = Some(1e9);
+        w.mark_rates_dirty();
+        assert_eq!(w.task_rate(t), 0.0);
+        assert!(w.next_finish_time().is_none());
+    }
+
+    #[test]
+    fn reset_task_restores_work_and_counts_restart() {
+        let mut w = world();
+        let t = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(t, 0, 1.0);
+        w.advance(5.0);
+        w.reset_task(t, 30.0);
+        assert_eq!(w.tasks[t].state, TaskState::Pending);
+        assert_eq!(w.tasks[t].remaining_mi, 1000.0);
+        assert_eq!(w.tasks[t].restarts, 1);
+        assert_eq!(w.tasks[t].restart_time, 30.0);
+        assert!(w.vms[0].tasks.is_empty());
+    }
+
+    #[test]
+    fn complete_and_kill_detach_from_vm() {
+        let mut w = world();
+        let t1 = add_task(&mut w, 0, 1000.0, 100.0);
+        let t2 = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(t1, 0, 1.0);
+        w.start_task(t2, 0, 1.0);
+        w.advance(1.0);
+        w.complete_task(t1);
+        w.kill_task(t2);
+        assert!(matches!(w.tasks[t1].state, TaskState::Completed { .. }));
+        assert_eq!(w.tasks[t2].state, TaskState::Killed);
+        assert!(w.vms[0].tasks.is_empty());
+        assert_eq!(w.completed_log, vec![t1]);
+    }
+
+    #[test]
+    fn best_mitigation_vm_prefers_low_straggler_ema() {
+        let mut w = world();
+        for h in 0..w.hosts.len() {
+            w.hosts[h].straggler_ema = 0.9;
+        }
+        let target_host = 3;
+        w.hosts[target_host].straggler_ema = 0.0;
+        let vm = w.best_mitigation_vm(None).unwrap();
+        assert_eq!(w.vms[vm].host, target_host);
+        // excluding that host picks another one
+        let vm2 = w.best_mitigation_vm(Some(target_host)).unwrap();
+        assert_ne!(w.vms[vm2].host, target_host);
+    }
+
+    #[test]
+    fn straggler_ema_updates() {
+        let mut w = world();
+        w.note_straggler(0, true);
+        assert!((w.hosts[0].straggler_ema - 0.2).abs() < 1e-12);
+        w.note_straggler(0, false);
+        assert!((w.hosts[0].straggler_ema - 0.16).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,185 @@
+//! Rust mirror of `python/compile/synth.true_pareto_params` — the shared
+//! generative contract between the training distribution and the simulator
+//! (DESIGN.md §5).  Pinned bit-for-bit against Python by the golden test in
+//! `rust/tests/runtime_golden.rs` (`generative` entry of golden.json).
+//!
+//! Column indices must match `python/compile/dims.py`.
+
+use crate::runtime::GenerativeConstants;
+
+/// M_H column indices (dims.py layout).
+pub const H_CPU_UTIL: usize = 0;
+pub const H_RAM_UTIL: usize = 1;
+pub const H_DISK_UTIL: usize = 2;
+pub const H_BW_UTIL: usize = 3;
+pub const H_CPU_CAP: usize = 4;
+pub const H_RAM_CAP: usize = 5;
+pub const H_DISK_CAP: usize = 6;
+pub const H_BW_CAP: usize = 7;
+pub const H_POWER: usize = 8;
+pub const H_COST: usize = 9;
+pub const H_NTASKS: usize = 10;
+pub const H_IS_UP: usize = 11;
+
+/// M_T column indices (dims.py layout).
+pub const T_CPU_REQ: usize = 0;
+pub const T_RAM_REQ: usize = 1;
+pub const T_DISK_REQ: usize = 2;
+pub const T_BW_REQ: usize = 3;
+pub const T_PREV_HOST: usize = 4;
+pub const T_DEADLINE: usize = 5;
+pub const T_PROGRESS: usize = 6;
+pub const T_ACTIVE: usize = 7;
+
+/// Ground-truth (α*, β*) evaluator.
+#[derive(Clone, Copy, Debug)]
+pub struct Generative {
+    pub c: GenerativeConstants,
+    pub m_feats: usize,
+    pub p_feats: usize,
+}
+
+impl Generative {
+    pub fn new(c: GenerativeConstants, m_feats: usize, p_feats: usize) -> Self {
+        Self { c, m_feats, p_feats }
+    }
+
+    /// Compute (α*, β*) from flattened feature matrices, mirroring
+    /// `synth.true_pareto_params` exactly (f32 inputs, f64 math — the
+    /// Python side computes in f32; golden tolerance covers the gap).
+    pub fn pareto_params(&self, m_h: &[f32], m_t: &[f32]) -> (f64, f64) {
+        let g = &self.c;
+        let m = self.m_feats;
+        let p = self.p_feats;
+        debug_assert_eq!(m_h.len() % m, 0);
+        debug_assert_eq!(m_t.len() % p, 0);
+
+        let n_hosts = m_h.len() / m;
+        let mut n_up = 0.0f64;
+        let mut u_sum = 0.0f64;
+        let mut c_sum = 0.0f64;
+        let mut cap_sum = 0.0f64;
+        for i in 0..n_hosts {
+            let row = &m_h[i * m..(i + 1) * m];
+            let up = row[H_IS_UP] as f64;
+            n_up += up;
+            u_sum += row[H_CPU_UTIL] as f64 * up;
+            let pressure = row[H_CPU_UTIL] as f64 + row[H_RAM_UTIL] as f64;
+            c_sum += (pressure - g.contention_knee).max(0.0) * up;
+            cap_sum += row[H_CPU_CAP] as f64 * up;
+        }
+        let n_up_c = n_up.max(1e-6);
+        let u = u_sum / n_up_c;
+        let contention = c_sum / n_up_c;
+        let cap_mean = cap_sum / n_up_c;
+        let mut cap_var = 0.0f64;
+        for i in 0..n_hosts {
+            let row = &m_h[i * m..(i + 1) * m];
+            let up = row[H_IS_UP] as f64;
+            let d = row[H_CPU_CAP] as f64 - cap_mean;
+            cap_var += d * d * up;
+        }
+        let het = (cap_var / n_up_c).max(0.0).sqrt();
+
+        let n_tasks = m_t.len() / p;
+        let mut n_act = 0.0f64;
+        let mut d_sum = 0.0f64;
+        for i in 0..n_tasks {
+            let row = &m_t[i * p..(i + 1) * p];
+            let act = row[T_ACTIVE] as f64;
+            n_act += act;
+            d_sum += row[T_CPU_REQ] as f64 * act;
+        }
+        let d = d_sum / n_act.max(1e-6);
+
+        let z = g.alpha_gain * (g.alpha_mid - u - g.contention_weight * contention - g.hetero_weight * het * u);
+        let alpha = g.alpha_min + g.alpha_span / (1.0 + (-z).exp());
+        let beta = g.beta_base * (g.beta_demand_lo + g.beta_demand_w * d) * (1.0 + g.beta_load_w * u);
+        (alpha, beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> GenerativeConstants {
+        GenerativeConstants {
+            alpha_min: 1.15,
+            alpha_span: 2.85,
+            alpha_gain: 4.0,
+            alpha_mid: 0.65,
+            contention_weight: 0.5,
+            hetero_weight: 0.4,
+            beta_base: 1.0,
+            beta_demand_lo: 0.4,
+            beta_demand_w: 1.2,
+            beta_load_w: 0.8,
+            contention_knee: 1.2,
+        }
+    }
+
+    fn flat_mh(n: usize, util: f32, cap: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n * 12];
+        for i in 0..n {
+            v[i * 12 + H_CPU_UTIL] = util;
+            v[i * 12 + H_CPU_CAP] = cap;
+            v[i * 12 + H_IS_UP] = 1.0;
+        }
+        v
+    }
+
+    fn flat_mt(q: usize, req: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; q * 8];
+        for i in 0..q {
+            v[i * 8 + T_CPU_REQ] = req;
+            v[i * 8 + T_ACTIVE] = 1.0;
+        }
+        v
+    }
+
+    #[test]
+    fn alpha_in_range_and_monotone_in_load() {
+        let g = Generative::new(consts(), 12, 8);
+        let (a_lo, _) = g.pareto_params(&flat_mh(20, 0.1, 0.5), &flat_mt(5, 0.5));
+        let (a_hi, _) = g.pareto_params(&flat_mh(20, 0.9, 0.5), &flat_mt(5, 0.5));
+        assert!(a_lo > a_hi, "low load should have lighter tail: {a_lo} vs {a_hi}");
+        assert!(a_lo <= 1.15 + 2.85 + 1e-9 && a_hi >= 1.15 - 1e-9);
+    }
+
+    #[test]
+    fn beta_grows_with_demand_and_load() {
+        let g = Generative::new(consts(), 12, 8);
+        let (_, b1) = g.pareto_params(&flat_mh(20, 0.2, 0.5), &flat_mt(5, 0.2));
+        let (_, b2) = g.pareto_params(&flat_mh(20, 0.2, 0.5), &flat_mt(5, 0.8));
+        let (_, b3) = g.pareto_params(&flat_mh(20, 0.8, 0.5), &flat_mt(5, 0.8));
+        assert!(b2 > b1 && b3 > b2, "{b1} {b2} {b3}");
+    }
+
+    #[test]
+    fn heterogeneity_lowers_alpha_under_load() {
+        let g = Generative::new(consts(), 12, 8);
+        let homo = flat_mh(20, 0.7, 0.5);
+        let mut hetero = flat_mh(20, 0.7, 0.5);
+        for i in 0..20 {
+            hetero[i * 12 + H_CPU_CAP] = if i % 2 == 0 { 0.15 } else { 0.95 };
+        }
+        let (a_homo, _) = g.pareto_params(&homo, &flat_mt(5, 0.5));
+        let (a_het, _) = g.pareto_params(&hetero, &flat_mt(5, 0.5));
+        assert!(a_het < a_homo, "{a_het} vs {a_homo}");
+    }
+
+    #[test]
+    fn down_hosts_excluded() {
+        let g = Generative::new(consts(), 12, 8);
+        let mut m_h = flat_mh(20, 0.2, 0.5);
+        // Take half the hosts down with huge "util" — must be ignored.
+        for i in 0..10 {
+            m_h[i * 12 + H_CPU_UTIL] = 1.0;
+            m_h[i * 12 + H_IS_UP] = 0.0;
+        }
+        let (a, _) = g.pareto_params(&m_h, &flat_mt(5, 0.5));
+        let (a_ref, _) = g.pareto_params(&flat_mh(10, 0.2, 0.5), &flat_mt(5, 0.5));
+        assert!((a - a_ref).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload substrate: synthetic PlanetLab-like utilization traces, the
+//! Poisson job/cloudlet generator (Table 4 parameter ranges), and the Rust
+//! mirror of the Python generative model (`python/compile/synth.py`).
+
+pub mod generative;
+pub mod planetlab;
+pub mod workload;
+
+pub use generative::Generative;
+pub use planetlab::PlanetLabTrace;
+pub use workload::{JobSpec, TaskSpec, WorkloadGenerator};

@@ -1,0 +1,168 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! Values may also be attached as `--key=value`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// (name, description) pairs registered by accessors, for --help.
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt_str(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.options
+            .get(name)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{name}={v:?}: {e}")))
+            .transpose()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        Ok(self.opt_f64(name)?.unwrap_or(default))
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.options
+            .get(name)
+            .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--{name}={v:?}: {e}")))
+            .transpose()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.opt_usize(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self
+            .options
+            .get(name)
+            .map(|v| v.parse::<u64>().map_err(|e| anyhow!("--{name}={v:?}: {e}")))
+            .transpose()?
+            .unwrap_or(default))
+    }
+
+    /// Record accessor usage (reserved for future --help generation).
+    pub fn note(&mut self, name: &str) {
+        self.seen.push(name.to_string());
+    }
+
+    /// Unknown-option check: everything the caller read should be listed.
+    pub fn ensure_known(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known_opts.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (known: {})", known_flags.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment fig6 --seed 42 --fast --out=results.json");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig6"]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_str("out"), Some("results.json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("simulate");
+        assert_eq!(a.f64_or("duration", 1.5).unwrap(), 1.5);
+        assert_eq!(a.usize_or("vms", 400).unwrap(), 400);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn numeric_errors_are_reported() {
+        let a = parse("x --seed abc");
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --verbose");
+        assert!(a.flag("fast") && a.flag("verbose"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // A value starting with '-' but not '--' binds to the option.
+        let a = parse("x --offset -3.5");
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn ensure_known_rejects_typos() {
+        let a = parse("x --sede 42");
+        assert!(a.ensure_known(&["seed"], &[]).is_err());
+        let b = parse("x --seed 42");
+        assert!(b.ensure_known(&["seed"], &[]).is_ok());
+    }
+}

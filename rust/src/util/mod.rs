@@ -1,0 +1,11 @@
+//! Self-contained substrate utilities.
+//!
+//! This image has no network access and only the `xla`/`anyhow` crates are
+//! vendored, so the usual ecosystem pieces (rand, serde, clap, criterion,
+//! proptest) are implemented here from scratch — see DESIGN.md §3.
+
+pub mod cli;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,106 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over many seeded RNGs;
+//! on panic or `Err`, it reports the failing case seed so the case can be
+//! replayed deterministically with `replay(seed, f)`.  No shrinking — our
+//! generators take the RNG directly, so failures are already replayable
+//! and usually small.
+
+use crate::util::rng::Pcg;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Run `f` over `cases` deterministic cases; panics with the failing seed.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg::new(seed, case);
+        let result = catch_unwind(AssertUnwindSafe(|| f(&mut rng)));
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            ),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property {name:?} panicked on case {case} (seed {seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Replay one case by seed (use with the seed printed by `check`).
+pub fn replay<F>(seed: u64, case: u64, mut f: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    let mut rng = Pcg::new(seed, case);
+    f(&mut rng).expect("replayed property failed");
+}
+
+/// Generator helpers for common simulator inputs.
+pub mod gen {
+    use crate::util::rng::Pcg;
+
+    /// Vector of f64 in [lo, hi) with random length in [min_len, max_len].
+    pub fn vec_f64(rng: &mut Pcg, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = min_len + rng.below(max_len - min_len + 1);
+        (0..len).map(|_| rng.range(lo, hi)).collect()
+    }
+
+    /// Vector of positive Pareto samples.
+    pub fn pareto_samples(rng: &mut Pcg, n: usize, alpha: f64, beta: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.pareto(alpha, beta)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_is_caught() {
+        check("panics", 2, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("record", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("record", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,305 @@
+//! Deterministic PRNG + statistical distributions (rand/rand_distr are not
+//! available offline; the simulator needs Weibull/Pareto/Poisson anyway).
+//!
+//! Core generator is PCG-XSH-RR-64/32 seeded through SplitMix64 — small,
+//! fast, and with independent streams so every simulator subsystem (fault
+//! injector, workload generator, scheduler) can own a decorrelated RNG and
+//! experiments stay reproducible under module reordering.
+
+/// SplitMix64: used for seeding and cheap stateless hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32 with stream selection.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    /// Seed a generator; `stream` decorrelates subsystem RNGs.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let init = splitmix64(&mut sm);
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(init);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive a child RNG for a named subsystem (stable across runs).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        let seed = (self.next_u64()).wrapping_add(tag.wrapping_mul(0x9E3779B97F4A7C15));
+        Pcg::new(seed, tag)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn int_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (polar form).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal(mu, sigma).
+    #[inline]
+    pub fn normal_ms(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Lognormal with underlying Normal(mu, sigma).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/λ).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Poisson(λ): Knuth for λ < 30, normal approximation above.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        debug_assert!(lambda >= 0.0);
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal_ms(lambda, lambda.sqrt()).round();
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Weibull(shape k, scale λ) via inverse CDF — the paper's failure
+    /// model (Eq. 15) uses k = 1.5, λ = 2.
+    #[inline]
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        scale * (-(1.0 - self.f64()).ln()).powf(1.0 / shape)
+    }
+
+    /// Pareto(α, β): X = β·U^(−1/α), X ≥ β — the paper's task-time model
+    /// (Eq. 1).
+    #[inline]
+    pub fn pareto(&mut self, alpha: f64, beta: f64) -> f64 {
+        debug_assert!(alpha > 0.0 && beta > 0.0);
+        let u = (1.0 - self.f64()).max(1e-12);
+        beta * u.powf(-1.0 / alpha)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg::new(7, 1);
+        let mut b = Pcg::new(7, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_decorrelated() {
+        let mut a = Pcg::new(7, 1);
+        let mut b = Pcg::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same <= 2);
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut rng = Pcg::seeded(1);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (mean, var) = moments(&xs);
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::seeded(2);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.normal_ms(3.0, 2.0)).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - 3.0).abs() < 0.08, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.25, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg::seeded(3);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.exponential(2.0)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_small_and_large_lambda() {
+        let mut rng = Pcg::seeded(4);
+        for &lambda in &[0.5, 1.2, 8.0, 50.0] {
+            let xs: Vec<f64> = (0..20000).map(|_| rng.poisson(lambda) as f64).collect();
+            let (mean, var) = moments(&xs);
+            assert!((mean - lambda).abs() < 0.15 * lambda.max(1.0), "λ={lambda} mean {mean}");
+            assert!((var - lambda).abs() < 0.25 * lambda.max(1.0), "λ={lambda} var {var}");
+        }
+    }
+
+    #[test]
+    fn weibull_mean_matches_gamma_formula() {
+        // mean = λ·Γ(1 + 1/k); for k=1.5, λ=2: Γ(5/3) ≈ 0.902745, mean ≈ 1.80549.
+        let mut rng = Pcg::seeded(5);
+        let xs: Vec<f64> = (0..40000).map(|_| rng.weibull(1.5, 2.0)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - 1.80549).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn pareto_support_and_mean() {
+        let mut rng = Pcg::seeded(6);
+        let (alpha, beta) = (2.5, 1.5);
+        let xs: Vec<f64> = (0..40000).map(|_| rng.pareto(alpha, beta)).collect();
+        assert!(xs.iter().all(|&x| x >= beta));
+        let (mean, _) = moments(&xs);
+        let expect = alpha * beta / (alpha - 1.0); // 2.5
+        assert!((mean - expect).abs() < 0.06, "mean {mean} expect {expect}");
+    }
+
+    #[test]
+    fn pareto_tail_probability() {
+        // P(X > K) = (K/β)^(−α) — this identity is Eq. 4's core.
+        let mut rng = Pcg::seeded(7);
+        let (alpha, beta, k) = (2.0, 1.0, 3.0);
+        let n = 50000;
+        let hits = (0..n).filter(|_| rng.pareto(alpha, beta) > k).count();
+        let got = hits as f64 / n as f64;
+        let want = (k / beta).powf(-alpha); // 1/9
+        assert!((got - want).abs() < 0.01, "got {got} want {want}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::seeded(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn int_range_inclusive_bounds() {
+        let mut rng = Pcg::seeded(9);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let v = rng.int_range(2, 10);
+            assert!((2..=10).contains(&v));
+            saw_lo |= v == 2;
+            saw_hi |= v == 10;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

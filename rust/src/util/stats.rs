@@ -1,0 +1,274 @@
+//! Statistics helpers used by the metrics pipeline and experiment harness:
+//! summary statistics, percentiles, EMA smoothing, MAPE (Eq. 14) and F1
+//! (Eq. 5 as written in the paper).
+
+/// Summary of a sample: count, mean, std, min/max, percentiles.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        self.std * self.std
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted slice (copies).
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Exponential moving average with weight `w` on the latest observation
+/// (paper §3.2 uses w = 0.8 on the resource matrices).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    weight: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(weight: f64) -> Self {
+        assert!((0.0..=1.0).contains(&weight));
+        Self { weight, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.weight * x + (1.0 - self.weight) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Mean Absolute Percentage Error (Eq. 14), skipping intervals where the
+/// actual value is zero (the paper's n is the number of scheduling
+/// intervals).
+pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (&y, &yp) in actual.iter().zip(predicted) {
+        if y.abs() > 1e-12 {
+            total += ((y - yp) / y).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Binary-classification counts for straggler prediction scoring.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub fn_: u64,
+    pub tn: u64,
+}
+
+impl Confusion {
+    pub fn record(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, true) => self.fn_ += 1,
+            (false, false) => self.tn += 1,
+        }
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fn_) as f64
+        }
+    }
+
+    /// Standard F1 = harmonic mean of precision and recall; this equals the
+    /// paper's Eq. 5 form tp / (tp + (fp + fn)/2).
+    pub fn f1(&self) -> f64 {
+        let denom = self.tp as f64 + 0.5 * (self.fp + self.fn_) as f64;
+        if denom == 0.0 {
+            0.0
+        } else {
+            self.tp as f64 / denom
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(Summary::of(&[]), Summary::default());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough_then_blends() {
+        let mut e = Ema::new(0.8);
+        assert_eq!(e.push(10.0), 10.0);
+        let v = e.push(0.0);
+        assert!((v - 2.0).abs() < 1e-12); // 0.8*0 + 0.2*10
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((o.mean() - s.mean).abs() < 1e-12);
+        assert!((o.variance() - s.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mape_basic_and_zero_skip() {
+        assert!((mape(&[10.0, 20.0], &[9.0, 22.0]) - 10.0).abs() < 1e-9);
+        // zero actuals skipped
+        assert!((mape(&[0.0, 10.0], &[5.0, 11.0]) - 10.0).abs() < 1e-9);
+        assert_eq!(mape(&[0.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        let mut c = Confusion::default();
+        c.record(true, true);
+        c.record(false, false);
+        assert_eq!(c.f1(), 1.0);
+        let empty = Confusion::default();
+        assert_eq!(empty.f1(), 0.0);
+    }
+
+    #[test]
+    fn f1_equals_harmonic_mean() {
+        let c = Confusion { tp: 6, fp: 2, fn_: 4, tn: 10 };
+        let p = c.precision();
+        let r = c.recall();
+        let harm = 2.0 * p * r / (p + r);
+        assert!((c.f1() - harm).abs() < 1e-12);
+    }
+}

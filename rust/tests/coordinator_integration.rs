@@ -1,0 +1,59 @@
+//! Integration: full coordinator runs with the real AOT models for every
+//! technique, on a scaled-down cloud.
+
+use start_sim::config::{SimConfig, Technique};
+use start_sim::coordinator::{run_one, Models};
+
+fn quick_cfg(technique: Technique) -> SimConfig {
+    let mut cfg = SimConfig::test_defaults();
+    cfg.n_intervals = 16;
+    cfg.n_workloads = 120;
+    cfg.technique = technique;
+    cfg
+}
+
+#[test]
+fn all_techniques_run_to_completion() {
+    let models = Models::load_default().expect("models");
+    for technique in Technique::paper_set() {
+        let cfg = quick_cfg(technique);
+        let m = run_one(&cfg, &models).expect(technique.name());
+        assert!(m.jobs_done > 0, "{}: no jobs done", technique.name());
+        assert!(m.tasks_done > 50, "{}: only {} tasks", technique.name(), m.tasks_done);
+        assert!(m.avg_execution_time() > 0.0, "{}", technique.name());
+        assert!(m.total_energy_kwh() > 0.0, "{}", technique.name());
+    }
+}
+
+#[test]
+fn start_predictions_are_finite_and_positive() {
+    let models = Models::load_default().expect("models");
+    let cfg = quick_cfg(Technique::Start);
+    let m = run_one(&cfg, &models).expect("run");
+    assert!(!m.straggler_pred.is_empty());
+    for &(pred, actual) in &m.straggler_pred {
+        assert!(pred.is_finite() && pred >= 0.0, "prediction {pred}");
+        assert!(actual >= 0.0);
+    }
+    // START actually mitigates something under faults.
+    assert!(m.speculations + m.reruns > 0, "no mitigation actions fired");
+}
+
+#[test]
+fn start_mitigation_beats_no_management() {
+    let models = Models::load_default().expect("models");
+    let mut sum_start = 0.0;
+    let mut sum_none = 0.0;
+    for seed in [11, 23, 37] {
+        let mut cfg = quick_cfg(Technique::Start);
+        cfg.seed = seed;
+        cfg.fault_rate = 1.0;
+        sum_start += run_one(&cfg, &models).expect("start").avg_execution_time();
+        cfg.technique = Technique::None;
+        sum_none += run_one(&cfg, &models).expect("none").avg_execution_time();
+    }
+    assert!(
+        sum_start < sum_none,
+        "START ({sum_start:.1}) should beat None ({sum_none:.1}) on exec time"
+    );
+}

@@ -1,0 +1,82 @@
+//! Integration: PJRT runtime numerics parity with the Python golden vectors.
+//! This pins the entire AOT bridge (jax -> HLO text -> xla crate -> PJRT).
+
+use start_sim::runtime::{LstmState, Manifest, PjrtRuntime, StartModel};
+use start_sim::util::json;
+
+fn load_golden(dir: &std::path::Path) -> json::Json {
+    let text = std::fs::read_to_string(dir.join("golden.json")).expect("golden.json");
+    json::parse(&text).expect("golden parses")
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + b.abs())
+}
+
+#[test]
+fn start_step_matches_python() {
+    let dir = start_sim::find_artifact_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let model = StartModel::load(&rt, &manifest).expect("model");
+    let golden = load_golden(&dir);
+    let g = golden.get("start_step").expect("start_step golden");
+    let inputs = g.get("inputs").unwrap().as_arr().unwrap();
+    let outputs = g.get("outputs").unwrap().as_arr().unwrap();
+    let m_h = inputs[0].as_f32_vec().unwrap();
+    let m_t = inputs[1].as_f32_vec().unwrap();
+    let state = LstmState {
+        h1: inputs[2].as_f32_vec().unwrap(),
+        c1: inputs[3].as_f32_vec().unwrap(),
+        h2: inputs[4].as_f32_vec().unwrap(),
+        c2: inputs[5].as_f32_vec().unwrap(),
+    };
+    let (alpha, beta, next) = model.step(&m_h, &m_t, &state).expect("step");
+    let want_alpha = outputs[0].as_f32_vec().unwrap()[0] as f64;
+    let want_beta = outputs[1].as_f32_vec().unwrap()[0] as f64;
+    assert!(close(alpha, want_alpha, 1e-4), "alpha {alpha} want {want_alpha}");
+    assert!(close(beta, want_beta, 1e-4), "beta {beta} want {want_beta}");
+    let want_h1 = outputs[2].as_f32_vec().unwrap();
+    for (got, want) in next.h1.iter().zip(&want_h1) {
+        assert!(close(*got as f64, *want as f64, 1e-4), "h1 {got} want {want}");
+    }
+}
+
+#[test]
+fn start_rollout_matches_python() {
+    let dir = start_sim::find_artifact_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let model = StartModel::load(&rt, &manifest).expect("model");
+    let golden = load_golden(&dir);
+    let g = golden.get("start_rollout").expect("rollout golden");
+    let inputs = g.get("inputs").unwrap().as_arr().unwrap();
+    let outputs = g.get("outputs").unwrap().as_arr().unwrap();
+    let (alpha, beta) = model
+        .rollout(&inputs[0].as_f32_vec().unwrap(), &inputs[1].as_f32_vec().unwrap())
+        .expect("rollout");
+    let want_alpha = outputs[0].as_f32_vec().unwrap()[0] as f64;
+    let want_beta = outputs[1].as_f32_vec().unwrap()[0] as f64;
+    assert!(close(alpha, want_alpha, 1e-4), "alpha {alpha} want {want_alpha}");
+    assert!(close(beta, want_beta, 1e-4), "beta {beta} want {want_beta}");
+}
+
+#[test]
+fn igru_matches_python() {
+    let dir = start_sim::find_artifact_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let model = start_sim::runtime::IgruModel::load(&rt, &manifest).expect("igru");
+    let golden = load_golden(&dir);
+    let g = golden.get("igru_step").expect("igru golden");
+    let inputs = g.get("inputs").unwrap().as_arr().unwrap();
+    let outputs = g.get("outputs").unwrap().as_arr().unwrap();
+    let (pred, hidden) = model
+        .step(&inputs[0].as_f32_vec().unwrap(), &inputs[1].as_f32_vec().unwrap())
+        .expect("step");
+    let want_pred = outputs[0].as_f32_vec().unwrap();
+    for (got, want) in pred.iter().zip(&want_pred) {
+        assert!(close(*got as f64, *want as f64, 1e-4), "pred {got} want {want}");
+    }
+    assert_eq!(hidden.len(), manifest.igru_hidden);
+}

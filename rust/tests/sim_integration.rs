@@ -1,0 +1,104 @@
+//! Integration tests over the simulator substrate (no PJRT needed):
+//! determinism, conservation, fault semantics, property checks.
+
+use start_sim::config::SimConfig;
+use start_sim::predictor::FeatureExtractor;
+use start_sim::runtime::Manifest;
+use start_sim::scheduler;
+use start_sim::sim::engine::{NullManager, Simulation};
+use start_sim::sim::types::TaskState;
+use start_sim::util::ptest;
+use start_sim::util::rng::Pcg;
+
+fn manifest() -> Manifest {
+    // Use the real manifest when artifacts exist; else a canned one.
+    Manifest::load(start_sim::find_artifact_dir()).expect("manifest (run `make artifacts`)")
+}
+
+fn run(cfg: SimConfig) -> start_sim::sim::RunMetrics {
+    let m = manifest();
+    let sched = scheduler::build(cfg.scheduler, Pcg::seeded(cfg.seed ^ 0xAB));
+    Simulation::new(cfg, &m, sched, Box::new(NullManager)).run()
+}
+
+#[test]
+fn paper_scale_fleet_constructs() {
+    let cfg = SimConfig::paper_defaults();
+    let w = start_sim::sim::World::new(&cfg);
+    assert_eq!(w.vms.len(), 400);
+    assert_eq!(w.hosts.len(), 47);
+}
+
+#[test]
+fn property_conservation_across_fault_rates() {
+    ptest::check("task-conservation", 6, |rng| {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.seed = rng.next_u64();
+        cfg.fault_rate = rng.range(0.0, 3.0);
+        cfg.n_intervals = 10;
+        cfg.n_workloads = 50;
+        let m = run(cfg);
+        if m.tasks_done == 0 {
+            return Err("no tasks completed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_sla_rate_bounded() {
+    ptest::check("sla-bounded", 5, |rng| {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.seed = rng.next_u64();
+        cfg.n_intervals = 10;
+        cfg.n_workloads = 40;
+        let m = run(cfg);
+        let r = m.sla_violation_rate();
+        if !(0.0..=1.0).contains(&r) {
+            return Err(format!("sla rate {r} out of [0,1]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn feature_extractor_consistent_with_generative_goldens() {
+    // The golden.json generative pins are covered in runtime_golden.rs via
+    // manifest constants; here we check live matrices stay in range.
+    let cfg = SimConfig::test_defaults();
+    let m = manifest();
+    let mut w = start_sim::sim::World::new(&cfg);
+    let mut fx = FeatureExtractor::new(&m);
+    fx.snapshot(&mut w);
+    assert!(fx.m_h().iter().all(|&x| x.is_finite() && x >= 0.0));
+}
+
+#[test]
+fn held_tasks_eventually_complete() {
+    // Even under a heavy fault storm (one fault per interval over a
+    // 9-host fleet), nothing is left non-completed.  Rates much beyond
+    // this re-break tasks faster than they can finish on this tiny fleet.
+    let mut cfg = SimConfig::test_defaults();
+    cfg.fault_rate = 1.2;
+    cfg.n_intervals = 10;
+    cfg.n_workloads = 40;
+    let man = manifest();
+    let sched = scheduler::build(cfg.scheduler, Pcg::seeded(5));
+    let mut sim = Simulation::new(cfg.clone(), &man, sched, Box::new(NullManager));
+    for _ in 0..cfg.n_intervals {
+        sim.step_interval(true);
+    }
+    let mut extra = 0;
+    while sim.world.jobs.iter().any(|j| j.is_active()) && extra < 1000 {
+        sim.step_interval(false);
+        extra += 1;
+    }
+    for t in sim.world.tasks.iter().filter(|t| t.speculative_of.is_none()) {
+        assert!(
+            matches!(t.state, TaskState::Completed { .. }),
+            "task {} stuck in {:?} after fault storm",
+            t.id,
+            t.state
+        );
+    }
+}
