@@ -1,4 +1,4 @@
-//! End-to-end validation driver (recorded in EXPERIMENTS.md): the full
+//! End-to-end validation driver (see DESIGN.md §4): the full
 //! paper workload — 400 VMs over the Table 3 PM fleet, 5000 cloudlets,
 //! 288 scheduling intervals (24 h), Weibull fault injection — for START
 //! and all six baselines, 5 seeds each, reproducing the paper's §1

@@ -36,11 +36,10 @@ fn main() -> Result<()> {
     for interval in 0..cfg.n_intervals {
         sim.step_interval(true);
         fx.snapshot(&mut sim.world);
-        let active: Vec<_> =
-            sim.world.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        let active = sim.world.active_jobs();
         if let Some(&job) = active.first() {
             let p = probe.predict(&sim.world, &fx, job)?;
-            let q = sim.world.jobs[job].tasks.len();
+            let q = sim.world.job(job).tasks.len();
             println!(
                 "{interval:8} | {:12} | job {job:4}: {:7.3} {:7.3} {:7.2}  ({q})",
                 active.len(),
@@ -56,7 +55,8 @@ fn main() -> Result<()> {
     // Drain and score.
     let metrics = {
         let mut extra = 0;
-        while sim.world.jobs.iter().any(|j| j.is_active()) && extra < 100 {
+        let limit = cfg.drain_limit();
+        while sim.world.has_active_jobs() && extra < limit {
             sim.step_interval(false);
             extra += 1;
         }

@@ -1,6 +1,6 @@
 """Pallas fused dense (+ activation) kernel — the encoder hot path.
 
-TPU mapping (see DESIGN.md §Hardware-Adaptation): a dense layer
+TPU mapping (see DESIGN.md §8 (hardware mapping)): a dense layer
 ``y = act(x @ W + b)`` is tiled over columns of ``W`` so each grid step
 computes one MXU-friendly ``(B, TILE_N)`` output block with the full ``x``
 row block resident in VMEM.  The activation epilogue is fused into the same
@@ -79,6 +79,6 @@ def dense(x, w, b, activation="softplus"):
 
 
 def vmem_bytes(batch, d_in, d_out, itemsize=4):
-    """Per-grid-step VMEM footprint estimate for DESIGN.md §Perf."""
+    """Per-grid-step VMEM footprint estimate for DESIGN.md §7."""
     n_tile = min(TILE_N, d_out)
     return itemsize * (batch * d_in + d_in * n_tile + n_tile + batch * n_tile)

@@ -5,7 +5,7 @@ Matches the paper's §4.4: MSE loss between the network's (α, β) and the
 MLE fit of observed task response times, Adam optimizer.  The paper quotes
 lr = 1e-5 for its multi-week trace corpus; on our synthetic corpus the
 same schedule converges with lr = 1e-3 and ~1.5k steps (documented in
-EXPERIMENTS.md §Training).
+DESIGN.md §7).
 
 Adam is implemented by hand — no optax on this image.
 """

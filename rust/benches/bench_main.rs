@@ -1,18 +1,23 @@
 //! Benchmark harness (`cargo bench`).  Criterion is unavailable offline,
 //! so this is a self-contained harness with warmup, repetition, and
 //! p50/p95 reporting — one benchmark group per paper table/figure plus
-//! micro-benchmarks of the hot paths (DESIGN.md §4, §8).
+//! micro-benchmarks of the hot paths (DESIGN.md §4, §7).
 //!
 //! Figure benches run the *fast profile* so `cargo bench` completes in
 //! minutes; `start-sim experiment <fig> --paper` regenerates the
 //! paper-scale numbers.
+//!
+//! The `scale` group measures the O(active) world registry against the
+//! seed engine's O(total) reference scans at 1×/10×/50× task counts and
+//! writes machine-readable results to `BENCH_scale.json` (the perf
+//! trajectory the CI workflow archives).
 
-use start_sim::config::{SimConfig, Technique};
+use start_sim::config::{SchedulerKind, SimConfig, Technique};
 use start_sim::coordinator::{run_one, Models};
 use start_sim::experiments::{figures, Profile};
 use start_sim::pareto::Pareto;
 use start_sim::predictor::{FeatureExtractor, StartPredictor};
-use start_sim::runtime::StartModel;
+use start_sim::runtime::{Manifest, StartModel};
 use start_sim::sim::engine::{NullManager, Simulation};
 use start_sim::sim::World;
 use start_sim::util::rng::Pcg;
@@ -50,6 +55,10 @@ fn main() {
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
     println!("start-sim bench harness (filter: {filter:?})\n");
 
+    // ------------------------------------------ O(active) scaling cells
+    if run("scale") {
+        scale_benches();
+    }
     // ---------------------------------------------------- micro benches
     if run("micro") {
         micro_benches();
@@ -83,8 +92,74 @@ fn main() {
     }
 }
 
+/// One full no-manager simulation; returns best-of-N wall seconds and
+/// tasks done (best-of filters scheduler noise — a single cold run on a
+/// busy machine can swing the small cells by several ×).
+fn run_scale_cell(cfg: &SimConfig, manifest: &Manifest, reference: bool, reps: usize) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut tasks = 0;
+    for _ in 0..reps.max(1) {
+        let mut c = cfg.clone();
+        c.reference_scans = reference;
+        let sched = start_sim::scheduler::build(c.scheduler, Pcg::seeded(7));
+        let sim = Simulation::new(c, manifest, sched, Box::new(NullManager));
+        let t0 = Instant::now();
+        let m = sim.run();
+        best = best.min(t0.elapsed().as_secs_f64());
+        tasks = m.tasks_done;
+    }
+    (best, tasks)
+}
+
+/// The 1×/10×/50× scaling sweep: task budget and horizon grow together so
+/// the per-interval *active* population stays flat while *total* tasks
+/// grow — the regime where the indexed registry's O(active) queries beat
+/// the seed engine's O(total) scans asymptotically.
+fn scale_benches() {
+    let manifest = Manifest::test_default();
+    let mut cells = Vec::new();
+    for &(scale, n_workloads, n_intervals) in
+        &[(1usize, 200usize, 12usize), (10, 2_000, 120), (50, 10_000, 600)]
+    {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.scheduler = SchedulerKind::RoundRobin;
+        cfg.n_workloads = n_workloads;
+        cfg.n_intervals = n_intervals;
+        // More reps where runs are fast (and noisiest); 2 at 50×.
+        let reps = if scale >= 50 { 2 } else { 5 };
+        let (indexed_s, tasks_done) = run_scale_cell(&cfg, &manifest, false, reps);
+        let (reference_s, tasks_ref) = run_scale_cell(&cfg, &manifest, true, reps);
+        assert_eq!(tasks_done, tasks_ref, "scale cell {scale}x: mode parity broken");
+        let speedup = reference_s / indexed_s.max(1e-12);
+        println!(
+            "bench scale_{scale}x ({n_workloads} tasks / {n_intervals} iv)   indexed {:>9.3?}  reference {:>9.3?}  speedup {speedup:>6.1}x",
+            secs(indexed_s),
+            secs(reference_s),
+        );
+        cells.push(format!(
+            "    {{\"scale\": {scale}, \"n_workloads\": {n_workloads}, \"n_intervals\": {n_intervals}, \
+             \"tasks_done\": {tasks_done}, \"indexed_s\": {indexed_s:.6}, \
+             \"reference_s\": {reference_s:.6}, \"speedup\": {speedup:.2}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"scale\",\n  \"unit\": \"seconds_wall\",\n  \"cells\": [\n{}\n  ]\n}}\n",
+        cells.join(",\n")
+    );
+    match std::fs::write("BENCH_scale.json", &json) {
+        Ok(()) => println!("bench scale: wrote BENCH_scale.json\n"),
+        Err(e) => println!("bench scale: could not write BENCH_scale.json: {e}\n"),
+    }
+}
+
 fn micro_benches() {
-    let models = Models::load_default().expect("artifacts (run `make artifacts`)");
+    let models = match Models::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            println!("bench micro: skipped (AOT artifacts/PJRT unavailable: {e:#})\n");
+            return;
+        }
+    };
     let manifest = &models.manifest;
 
     // Pareto MLE over a large sample (the per-job fitting path).
@@ -129,7 +204,7 @@ fn micro_benches() {
     let model3 = std::rc::Rc::new(StartModel::load(&models.runtime, manifest).unwrap());
     let mut predictor = StartPredictor::new(model3, 1.5);
     fx.snapshot(&mut world);
-    world.jobs.push(start_sim::sim::Job {
+    world.add_job(start_sim::sim::Job {
         id: 0,
         tasks: vec![],
         submit_t: 0.0,

@@ -69,8 +69,8 @@ impl Manager for DollyManager {
     }
 
     fn on_job_arrival(&mut self, w: &World, _fx: &FeatureExtractor, job: JobId) {
-        self.tasks_seen += w.jobs[job].tasks.len() as u64;
-        if w.jobs[job].tasks.len() <= self.small_job_q {
+        self.tasks_seen += w.job(job).tasks.len() as u64;
+        if w.job(job).tasks.len() <= self.small_job_q {
             self.marked.push(job);
         }
     }
@@ -89,10 +89,10 @@ impl Manager for DollyManager {
             return Vec::new();
         }
         let mut actions = Vec::new();
-        self.marked.retain(|&job| w.jobs[job].is_active());
+        self.marked.retain(|&job| w.job(job).is_active());
         for &job in &self.marked {
-            for &t in &w.jobs[job].tasks {
-                let task = &w.tasks[t];
+            for &t in &w.job(job).tasks {
+                let task = w.task(t);
                 // Clone right after launch (progress still near zero).
                 if task.is_running()
                     && task.speculative_of.is_none()

@@ -26,7 +26,7 @@ impl GrassManager {
     }
 
     fn live_clones(w: &World) -> usize {
-        w.tasks.iter().filter(|t| t.speculative_of.is_some() && t.is_active()).count()
+        w.live_clone_count()
     }
 }
 
@@ -49,13 +49,14 @@ impl Manager for GrassManager {
         }
         // Candidate slow tasks: (deadline priority, slowness) ordered.
         let mut candidates: Vec<(bool, f64, TaskId)> = Vec::new();
-        for job in w.jobs.iter().filter(|j| j.is_active()) {
+        for jid in w.active_jobs() {
+            let job = w.job(jid);
             let stats = sibling_stats(w, job.id);
             if stats.completed.is_empty() {
                 continue; // greedy: needs an observed baseline first
             }
             for &t in &job.tasks {
-                let task = &w.tasks[t];
+                let task = w.task(t);
                 if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
                     let e = elapsed(w, t);
                     if e > self.spec_factor * stats.median {

@@ -31,8 +31,7 @@ impl Manager for IgruSdManager {
 
     fn on_interval(&mut self, w: &World, fx: &FeatureExtractor) -> Vec<Action> {
         let mut actions = Vec::new();
-        let active: Vec<JobId> =
-            w.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        let active: Vec<JobId> = w.active_jobs();
         for job in active {
             let (es, _flagged) = match self.predictor.expected_stragglers(w, fx, job) {
                 Ok(r) => r,
@@ -44,13 +43,13 @@ impl Manager for IgruSdManager {
             // trigger works off IGRU-SD's demand forecasts + a reactive
             // sibling-median check — it has no per-job distribution, so
             // its detection remains later/noisier than START's.
-            let q = w.jobs[job].tasks.len();
+            let q = w.job(job).tasks.len();
             let done = w.completed_tasks(job);
             let es_round = es.round() as usize;
             let endgame = es_round > 0 && done + es_round >= q;
             let stats = crate::baselines::sibling_stats(w, job);
-            for &t in &w.jobs[job].tasks {
-                let task = &w.tasks[t];
+            for &t in &w.job(job).tasks {
+                let task = w.task(t);
                 if !task.is_running() || task.speculative_of.is_some() || task.mitigated {
                     continue;
                 }
@@ -59,7 +58,7 @@ impl Manager for IgruSdManager {
                 if !(endgame && reactive) {
                     continue;
                 }
-                actions.push(if w.jobs[job].deadline_driven || task.progress() > 0.5 {
+                actions.push(if w.job(job).deadline_driven || task.progress() > 0.5 {
                     Action::Speculate(t)
                 } else {
                     Action::Rerun(t)
@@ -70,8 +69,12 @@ impl Manager for IgruSdManager {
     }
 
     fn on_task_complete(&mut self, w: &World, task: TaskId) {
-        let job = w.tasks[task].job;
-        if !w.jobs[job].is_active() {
+        let job = w.task(task).job;
+        // The engine flips the job to Done only after this callback; the
+        // registry's active-task counter is already 0 for the last
+        // completion, so use it — otherwise the GRU hidden state for
+        // every finished job leaks for the whole run.
+        if !w.job(job).is_active() || w.job_active_count(job) == 0 {
             self.predictor.forget(job);
             self.predictions.remove(&job);
         }

@@ -24,7 +24,7 @@ impl LateManager {
 
     /// ETA from observed progress: elapsed / progress − elapsed.
     fn eta(w: &World, task: TaskId) -> Option<f64> {
-        let t = &w.tasks[task];
+        let t = w.task(task);
         let started = t.first_start_t?;
         let elapsed = w.now - started;
         let p = t.progress();
@@ -47,12 +47,12 @@ impl Manager for LateManager {
     }
 
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
-        let live_clones =
-            w.tasks.iter().filter(|t| t.speculative_of.is_some() && t.is_active()).count();
+        let live_clones = w.live_clone_count();
         let mut budget =
             ((w.vms.len() as f64 * self.budget_frac) as usize).saturating_sub(live_clones);
         let mut actions = Vec::new();
-        for job in w.jobs.iter().filter(|j| j.is_active()) {
+        for jid in w.active_jobs() {
+            let job = w.job(jid);
             if budget == 0 {
                 break;
             }
@@ -62,7 +62,7 @@ impl Manager for LateManager {
                 .tasks
                 .iter()
                 .filter_map(|&t| {
-                    let task = &w.tasks[t];
+                    let task = w.task(t);
                     if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
                         Self::eta(w, t).map(|e| (e, t))
                     } else {

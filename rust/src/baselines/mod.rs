@@ -36,11 +36,12 @@ pub struct SiblingStats {
 
 /// Response statistics of a job's completed tasks.
 pub fn sibling_stats(w: &World, job: JobId) -> SiblingStats {
-    let mut completed: Vec<f64> = w.jobs[job]
+    let mut completed: Vec<f64> = w
+        .job(job)
         .tasks
         .iter()
         .filter_map(|&t| {
-            let task = &w.tasks[t];
+            let task = w.task(t);
             match task.state {
                 TaskState::Completed { t: tc } => Some(tc - task.submit_t),
                 _ => None,
@@ -58,7 +59,7 @@ pub fn sibling_stats(w: &World, job: JobId) -> SiblingStats {
 
 /// Elapsed time of a running task.
 pub fn elapsed(w: &World, task: TaskId) -> f64 {
-    w.now - w.tasks[task].submit_t
+    w.now - w.task(task).submit_t
 }
 
 /// Capability flags (Table 1) — asserted in tests so the qualitative

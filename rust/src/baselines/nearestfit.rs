@@ -49,7 +49,7 @@ impl Manager for NearestFitManager {
     }
 
     fn on_task_complete(&mut self, w: &World, task: TaskId) {
-        let t = &w.tasks[task];
+        let t = w.task(task);
         self.xs.push(t.length_mi);
         self.ys.push(w.now - t.submit_t);
         if self.xs.len() > 2000 {
@@ -66,9 +66,9 @@ impl Manager for NearestFitManager {
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
         let Some(fit) = &self.fit else { return Vec::new() };
         let mut actions = Vec::new();
-        for job in w.jobs.iter().filter(|j| j.is_active()) {
-            for &t in &job.tasks {
-                let task = &w.tasks[t];
+        for jid in w.active_jobs() {
+            for &t in &w.job(jid).tasks {
+                let task = w.task(t);
                 if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
                     let expected = fit.predict(task.length_mi).max(1.0);
                     if w.now - task.submit_t > self.factor * expected {

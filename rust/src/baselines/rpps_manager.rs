@@ -35,18 +35,17 @@ impl Manager for RppsManager {
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
         self.predictor.observe(w);
         let mut actions = Vec::new();
-        let active: Vec<JobId> =
-            w.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        let active: Vec<JobId> = w.active_jobs();
         for job in active {
             let es = self.predictor.expected_stragglers(w, job);
             self.final_predictions.insert(job, es);
-            let q = w.jobs[job].tasks.len();
+            let q = w.job(job).tasks.len();
             let done = w.completed_tasks(job);
             let es_round = es.round() as usize;
             let endgame = es_round > 0 && done + es_round >= q;
             let stats = crate::baselines::sibling_stats(w, job);
-            for &t in &w.jobs[job].tasks {
-                let task = &w.tasks[t];
+            for &t in &w.job(job).tasks {
+                let task = w.task(t);
                 if !task.is_running() || task.speculative_of.is_some() || task.mitigated {
                     continue;
                 }
@@ -55,7 +54,7 @@ impl Manager for RppsManager {
                 if !(endgame && reactive) {
                     continue;
                 }
-                actions.push(if w.jobs[job].deadline_driven || task.progress() > 0.5 {
+                actions.push(if w.job(job).deadline_driven || task.progress() > 0.5 {
                     Action::Speculate(t)
                 } else {
                     Action::Rerun(t)

@@ -37,12 +37,13 @@ impl Manager for SgcManager {
 
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
         let mut actions = Vec::new();
-        for job in w.jobs.iter().filter(|j| j.is_active()) {
+        for jid in w.active_jobs() {
+            let job = w.job(jid);
             let clones_target = (job.tasks.len() as f64 * self.redundancy).round() as usize;
             let mut cloned = job
                 .tasks
                 .iter()
-                .filter(|&&t| w.tasks[t].mitigated)
+                .filter(|&&t| w.task(t).mitigated)
                 .count();
             // Pair-wise balance: clone the first member of each (2i, 2i+1)
             // pair, in order, until the redundancy target is met.
@@ -53,7 +54,7 @@ impl Manager for SgcManager {
                 if idx % 2 != 0 {
                     continue;
                 }
-                let task = &w.tasks[t];
+                let task = w.task(t);
                 if task.is_running() && task.speculative_of.is_none() && !task.mitigated {
                     actions.push(Action::Speculate(t));
                     cloned += 1;

@@ -55,7 +55,7 @@ impl WranglerManager {
 
     /// Observable straggler label: response > 1.5× sibling median.
     fn label(w: &World, task: TaskId, t_complete: f64) -> Option<f64> {
-        let t = &w.tasks[task];
+        let t = w.task(task);
         let stats = super::sibling_stats(w, t.job);
         if stats.completed.len() < 2 {
             return None;
@@ -81,7 +81,7 @@ impl Manager for WranglerManager {
     }
 
     fn on_task_complete(&mut self, w: &World, task: TaskId) {
-        let Some(vm) = w.tasks[task].last_vm else { return };
+        let Some(vm) = w.task(task).last_vm else { return };
         let host = w.vms[vm].host;
         if let Some(y) = Self::label(w, task, w.now) {
             self.model.update(&Self::host_features(w, host), y);

@@ -129,7 +129,10 @@ pub struct SimConfig {
     pub interval_s: f64,
     /// Number of scheduling intervals to simulate (paper: 288 = 24 h).
     pub n_intervals: usize,
-    /// Poisson arrival rate of jobs per interval (paper §4.2: λ = 1.2).
+    /// Poisson job-arrival intensity (paper §4.2: λ = 1.2).  The engine
+    /// spreads the `n_workloads` cloudlet budget over the horizon at the
+    /// paper default; raising/lowering λ proportionally speeds up/slows
+    /// down arrivals (the budget still caps the total).
     pub job_lambda: f64,
     /// Tasks per job: uniform in [min, max] (paper: 2..10).
     pub tasks_per_job: (usize, usize),
@@ -165,9 +168,28 @@ pub struct SimConfig {
     pub trace_diurnal_amp: f64,
     pub trace_noise: f64,
     pub trace_spike_prob: f64,
+    /// Debug/parity knob: route every `World` query through the seed
+    /// engine's O(total) full scans instead of the incremental indexes.
+    /// Used by the golden-parity test and the `scale` benchmark baseline;
+    /// never enabled for real experiments (see DESIGN.md §3).
+    pub reference_scans: bool,
 }
 
 impl SimConfig {
+    /// The paper's default arrival intensity (§4.2).  `job_lambda` scales
+    /// arrivals relative to this baseline.
+    pub const PAPER_JOB_LAMBDA: f64 = 1.2;
+
+    /// Floor on the drain-phase bound so tiny runs still get a generous
+    /// window for bounded 20× stragglers to finish.
+    pub const MIN_DRAIN_INTERVALS: usize = 400;
+
+    /// Maximum extra intervals the engine (and its tests) may spend
+    /// draining outstanding jobs after the measured horizon.
+    pub fn drain_limit(&self) -> usize {
+        (4 * self.n_intervals).max(Self::MIN_DRAIN_INTERVALS)
+    }
+
     /// Paper defaults (Tables 3–4, §4).
     pub fn paper_defaults() -> SimConfig {
         SimConfig {
@@ -234,6 +256,7 @@ impl SimConfig {
             trace_diurnal_amp: 0.25,
             trace_noise: 0.08,
             trace_spike_prob: 0.02,
+            reference_scans: false,
         }
     }
 
@@ -300,6 +323,9 @@ impl SimConfig {
                 }
                 "sla_slack" => self.sla_slack = val.as_f64().context("sla_slack")?,
                 "m_time_s" => self.m_time_s = val.as_f64().context("m_time_s")?,
+                "reference_scans" => {
+                    self.reference_scans = val.as_bool().context("reference_scans")?
+                }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
@@ -372,6 +398,14 @@ mod tests {
         let mut c = SimConfig::paper_defaults();
         let v = json::parse(r#"{"n_worloads": 5}"#).unwrap();
         assert!(c.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn drain_limit_unifies_bounds() {
+        let mut c = SimConfig::paper_defaults();
+        assert_eq!(c.drain_limit(), 4 * 288);
+        c.n_intervals = 12;
+        assert_eq!(c.drain_limit(), SimConfig::MIN_DRAIN_INTERVALS);
     }
 
     #[test]

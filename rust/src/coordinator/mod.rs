@@ -27,7 +27,7 @@ pub struct Models {
     pub manifest: Manifest,
     /// Compiled executables are shared (Rc) across every manager built on
     /// this worker — re-parsing + re-compiling the 1.1 MB HLO text per
-    /// experiment cell cost ~1 s/cell before this (EXPERIMENTS.md §Perf).
+    /// experiment cell cost ~1 s/cell before this (DESIGN.md §7).
     pub start: Rc<StartModel>,
     pub igru: Rc<IgruModel>,
 }

@@ -62,14 +62,13 @@ impl Manager for StartManager {
     fn on_interval(&mut self, w: &World, fx: &FeatureExtractor) -> Vec<Action> {
         // 1. Refresh predictions, batched over the rollout_batch lanes
         //    (every `predict_every` intervals — the paper's I parameter).
-        let active: Vec<JobId> =
-            w.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        let active: Vec<JobId> = w.active_jobs();
         let do_predict = self.tick % self.predict_every.max(1) == 0;
         self.tick += 1;
         // Per-job B=1 rollouts: on the CPU PJRT backend the batched (B=8)
         // artifact costs ~141 µs/job vs ~82 µs for B=1 (batching pays
-        // only when a wide MXU would otherwise idle) — EXPERIMENTS.md
-        // §Perf.  predict_batch remains available for accelerator builds.
+        // only when a wide MXU would otherwise idle) — DESIGN.md §7.
+        // predict_batch remains available for accelerator builds.
         if do_predict {
             for &job in &active {
                 let age = self.ages.entry(job).or_insert(0);
@@ -102,12 +101,12 @@ impl Manager for StartManager {
         for &job in &active {
             let Some(&(alpha, beta, es)) = self.predictions.get(&job) else { continue };
             let es_round = es.round() as usize;
-            let q = w.jobs[job].tasks.len();
+            let q = w.job(job).tasks.len();
             let done = w.completed_tasks(job);
             let endgame = es_round > 0 && done + es_round >= q;
             let k_hat = self.predictor.k * alpha * beta / (alpha - 1.0).max(0.05);
-            for &t in &w.jobs[job].tasks {
-                let task = &w.tasks[t];
+            for &t in &w.job(job).tasks {
+                let task = w.task(t);
                 if !task.is_running() || task.speculative_of.is_some() || task.mitigated {
                     continue;
                 }
@@ -134,7 +133,7 @@ impl Manager for StartManager {
                 }
                 // Deadline-driven ⇒ speculate (fastest result); otherwise
                 // re-run — but never discard a nearly-finished execution.
-                actions.push(if w.jobs[job].deadline_driven || task.progress() > 0.5 {
+                actions.push(if w.job(job).deadline_driven || task.progress() > 0.5 {
                     Action::Speculate(t)
                 } else {
                     Action::Rerun(t)
@@ -145,8 +144,12 @@ impl Manager for StartManager {
     }
 
     fn on_task_complete(&mut self, w: &World, task: TaskId) {
-        let job = w.tasks[task].job;
-        if !w.jobs[job].is_active() {
+        let job = w.task(task).job;
+        // The engine flips the job to Done only after this callback, so
+        // also treat "no active tasks left" (registry counter) as job end
+        // — otherwise this cleanup never fires and per-job state leaks
+        // for the whole run.
+        if !w.job(job).is_active() || w.job_active_count(job) == 0 {
             self.predictions.remove(&job);
             self.ages.remove(&job);
         }

@@ -8,14 +8,16 @@
 //!   authored in JAX over Pallas kernels, trained and AOT-lowered to HLO
 //!   text by `make artifacts` (`python/compile/`).
 //! * **L3 (runtime, this crate)** — a CloudSim-style event-driven cloud
-//!   simulator, Weibull fault injection, PlanetLab-like trace generation,
-//!   the START coordinator (prediction via PJRT + speculation/re-run
-//!   mitigation, Algorithm 1), six baseline straggler managers, and the
-//!   experiment harness regenerating every figure in the paper's
-//!   evaluation (see DESIGN.md §4).
+//!   simulator over an O(active)-indexed entity registry (DESIGN.md §3),
+//!   Weibull fault injection, PlanetLab-like trace generation, the START
+//!   coordinator (prediction via PJRT + speculation/re-run mitigation,
+//!   Algorithm 1), six baseline straggler managers, and the experiment
+//!   harness regenerating every figure in the paper's evaluation
+//!   (DESIGN.md §4).
 //!
 //! Python never runs on the request path: the binary is self-contained
-//! once `artifacts/` is built.
+//! once `artifacts/` is built.  See `DESIGN.md` at the repo root for the
+//! full architecture.
 
 pub mod baselines;
 pub mod config;

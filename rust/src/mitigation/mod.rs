@@ -8,7 +8,9 @@
 //!
 //! Target nodes are chosen as the serviceable VM on the host with the
 //! lowest moving average of straggler counts (Alg. 1 / §3.3), excluding
-//! the task's current host.
+//! the task's current host.  All state changes go through the `World`
+//! registry so the incremental indexes (clone map, pending/running sets)
+//! stay consistent — see DESIGN.md §3.
 
 use crate::sim::types::*;
 use crate::sim::world::World;
@@ -36,17 +38,17 @@ pub struct MitigationStats {
 /// Launch a speculative copy of `task`.  Returns the clone's id, or None
 /// if no target VM exists or the task is no longer running.
 pub fn speculate(w: &mut World, task: TaskId, slowdown: f64) -> Option<TaskId> {
-    if !w.tasks[task].is_running() || w.tasks[task].speculative_of.is_some() {
+    if !w.task(task).is_running() || w.task(task).speculative_of.is_some() {
         return None;
     }
     // A task races at most one live clone at a time.
     if find_clone(w, task).is_some() {
         return None;
     }
-    let exclude = w.tasks[task].vm.map(|v| w.vms[v].host);
+    let exclude = w.task(task).vm.map(|v| w.vms[v].host);
     let target = w.best_mitigation_vm(exclude)?;
-    let orig = &w.tasks[task];
-    let clone_id = w.tasks.len();
+    let orig = w.task(task);
+    let clone_id = w.n_tasks();
     let clone = Task {
         id: clone_id,
         job: orig.job,
@@ -64,30 +66,29 @@ pub fn speculate(w: &mut World, task: TaskId, slowdown: f64) -> Option<TaskId> {
         speculative_of: Some(task),
         mitigated: true,
     };
-    w.tasks.push(clone);
-    w.tasks[task].mitigated = true;
+    w.add_task(clone);
+    w.mark_mitigated(task);
     w.start_task(clone_id, target, slowdown);
     Some(clone_id)
 }
 
 /// Kill `task` and restart it on a different node.  Returns the target VM.
 pub fn rerun(w: &mut World, task: TaskId, slowdown: f64, restart_penalty_s: f64) -> Option<VmId> {
-    if !w.tasks[task].is_running() {
+    if !w.task(task).is_running() {
         return None;
     }
-    let exclude = w.tasks[task].vm.map(|v| w.vms[v].host);
+    let exclude = w.task(task).vm.map(|v| w.vms[v].host);
     let target = w.best_mitigation_vm(exclude)?;
     w.reset_task(task, restart_penalty_s);
-    w.tasks[task].mitigated = true;
+    w.mark_mitigated(task);
     w.start_task(task, target, slowdown);
     Some(target)
 }
 
 /// Put a pending task on hold until `t` (Wrangler-style delaying).
 pub fn hold(w: &mut World, task: TaskId, until: f64) -> bool {
-    if w.tasks[task].state == TaskState::Pending {
-        w.tasks[task].state = TaskState::Held { until };
-        w.tasks[task].mitigated = true;
+    if w.hold_task(task, until) {
+        w.mark_mitigated(task);
         true
     } else {
         false
@@ -96,27 +97,13 @@ pub fn hold(w: &mut World, task: TaskId, until: f64) -> bool {
 
 /// Release held tasks whose hold expired (back to Pending for placement).
 pub fn release_held(w: &mut World) -> usize {
-    let now = w.now;
-    let mut released = 0;
-    for t in 0..w.tasks.len() {
-        if let TaskState::Held { until } = w.tasks[t].state {
-            if now + 1e-9 >= until {
-                w.tasks[t].state = TaskState::Pending;
-                released += 1;
-            }
-        }
-    }
-    released
+    w.release_expired_holds()
 }
 
-/// The live speculative clone of `task`, if any.
+/// The live speculative clone of `task`, if any (O(1) via the registry's
+/// clone map; the pre-index engine scanned every task ever created).
 pub fn find_clone(w: &World, task: TaskId) -> Option<TaskId> {
-    // Clones are appended after their original; scan backwards.
-    w.tasks
-        .iter()
-        .rev()
-        .find(|t| t.speculative_of == Some(task) && t.is_active())
-        .map(|t| t.id)
+    w.clone_of(task)
 }
 
 #[cfg(test)]
@@ -127,7 +114,7 @@ mod tests {
     fn world_with_running_task() -> (World, TaskId) {
         let mut w = World::new(&SimConfig::test_defaults());
         let id = 0;
-        w.tasks.push(Task {
+        w.add_task(Task {
             id,
             job: 0,
             length_mi: 1000.0,
@@ -152,14 +139,16 @@ mod tests {
     fn speculate_creates_racing_clone_on_other_host() {
         let (mut w, t) = world_with_running_task();
         let clone = speculate(&mut w, t, 1.0).unwrap();
-        assert_eq!(w.tasks[clone].speculative_of, Some(t));
-        assert!(w.tasks[clone].is_running());
-        let (h1, h2) = (w.vms[w.tasks[t].vm.unwrap()].host, w.vms[w.tasks[clone].vm.unwrap()].host);
+        assert_eq!(w.task(clone).speculative_of, Some(t));
+        assert!(w.task(clone).is_running());
+        let (h1, h2) =
+            (w.vms[w.task(t).vm.unwrap()].host, w.vms[w.task(clone).vm.unwrap()].host);
         assert_ne!(h1, h2, "clone must land on a different host");
-        assert!(w.tasks[t].mitigated);
+        assert!(w.task(t).mitigated);
         // Second speculation on the same task is refused.
         assert!(speculate(&mut w, t, 1.0).is_none());
         assert_eq!(find_clone(&w, t), Some(clone));
+        w.assert_consistent();
     }
 
     #[test]
@@ -176,19 +165,20 @@ mod tests {
     fn rerun_moves_and_resets() {
         let (mut w, t) = world_with_running_task();
         w.advance(4.0);
-        let old_vm = w.tasks[t].vm.unwrap();
+        let old_vm = w.task(t).vm.unwrap();
         let new_vm = rerun(&mut w, t, 1.0, 30.0).unwrap();
         assert_ne!(w.vms[new_vm].host, w.vms[old_vm].host);
-        assert_eq!(w.tasks[t].remaining_mi, 1000.0);
-        assert_eq!(w.tasks[t].restarts, 1);
-        assert!(w.tasks[t].is_running());
+        assert_eq!(w.task(t).remaining_mi, 1000.0);
+        assert_eq!(w.task(t).restarts, 1);
+        assert!(w.task(t).is_running());
+        w.assert_consistent();
     }
 
     #[test]
     fn hold_and_release() {
         let mut w = World::new(&SimConfig::test_defaults());
         let id = 0;
-        w.tasks.push(Task {
+        w.add_task(Task {
             id,
             job: 0,
             length_mi: 100.0,
@@ -209,13 +199,14 @@ mod tests {
         assert_eq!(release_held(&mut w), 0);
         w.now = 50.0;
         assert_eq!(release_held(&mut w), 1);
-        assert_eq!(w.tasks[id].state, TaskState::Pending);
+        assert_eq!(w.task(id).state, TaskState::Pending);
+        w.assert_consistent();
     }
 
     #[test]
     fn mitigation_refused_for_non_running() {
         let mut w = World::new(&SimConfig::test_defaults());
-        w.tasks.push(Task {
+        w.add_task(Task {
             id: 0,
             job: 0,
             length_mi: 100.0,

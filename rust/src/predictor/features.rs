@@ -91,9 +91,9 @@ impl FeatureExtractor {
         debug_assert_eq!(out.len(), self.q_tasks * self.p_feats);
         out.fill(0.0);
         let (max_mips, max_ram, max_disk, max_bw) = w.fleet_max();
-        let j = &w.jobs[job];
+        let j = w.job(job);
         for (slot, &tid) in j.tasks.iter().take(self.q_tasks).enumerate() {
-            let t = &w.tasks[tid];
+            let t = w.task(tid);
             if !t.is_active() && !matches!(t.state, TaskState::Completed { .. }) {
                 continue;
             }
@@ -176,46 +176,18 @@ impl FeatureExtractor {
 pub mod tests {
     use super::*;
     use crate::config::SimConfig;
-    use crate::runtime::{GenerativeConstants, Manifest};
-    use std::collections::BTreeMap;
+    use crate::runtime::Manifest;
 
     pub fn test_manifest() -> Manifest {
-        Manifest {
-            n_hosts: 20,
-            m_feats: 12,
-            q_tasks: 10,
-            p_feats: 8,
-            hidden: 32,
-            igru_hidden: 32,
-            rollout_steps: 5,
-            rollout_batch: 8,
-            ema_weight: 0.8,
-            k_default: 1.5,
-            infer_period_s: 1.0,
-            infer_window_s: 5.0,
-            generative: GenerativeConstants {
-                alpha_min: 1.15,
-                alpha_span: 2.85,
-                alpha_gain: 4.0,
-                alpha_mid: 0.65,
-                contention_weight: 0.5,
-                hetero_weight: 0.4,
-                beta_base: 1.0,
-                beta_demand_lo: 0.4,
-                beta_demand_w: 1.2,
-                beta_load_w: 0.8,
-                contention_knee: 1.2,
-            },
-            artifacts: BTreeMap::new(),
-        }
+        Manifest::test_default()
     }
 
     fn add_job(w: &mut World, q: usize) -> JobId {
-        let jid = w.jobs.len();
+        let jid = w.n_jobs();
         let mut tasks = Vec::new();
         for _ in 0..q {
-            let tid = w.tasks.len();
-            w.tasks.push(Task {
+            let tid = w.n_tasks();
+            w.add_task(Task {
                 id: tid,
                 job: jid,
                 length_mi: 1000.0,
@@ -234,7 +206,7 @@ pub mod tests {
             });
             tasks.push(tid);
         }
-        w.jobs.push(Job {
+        w.add_job(Job {
             id: jid,
             tasks,
             submit_t: 0.0,

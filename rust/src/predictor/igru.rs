@@ -49,8 +49,8 @@ impl IgruPredictor {
         let pred = self.step(w, fx, job)?;
         let m = &self.model.manifest;
         let mut flagged = Vec::new();
-        for (slot, &tid) in w.jobs[job].tasks.iter().take(m.q_tasks).enumerate() {
-            if !w.tasks[tid].is_active() {
+        for (slot, &tid) in w.job(job).tasks.iter().take(m.q_tasks).enumerate() {
+            if !w.task(tid).is_active() {
                 continue;
             }
             let cur = self.mt_scratch[slot * m.p_feats + T_CPU_REQ] as f64;

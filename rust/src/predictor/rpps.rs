@@ -55,7 +55,7 @@ impl RppsPredictor {
     /// times the job size (no host awareness — by design of the baseline).
     pub fn expected_stragglers(&mut self, w: &World, job: JobId) -> f64 {
         let f = self.forecast_util();
-        let q = w.jobs[job].tasks.len() as f64;
+        let q = w.job(job).tasks.len() as f64;
         let es = (q * self.gain * (f - self.knee).max(0.0)).min(q);
         self.cache.insert(job, es);
         es
@@ -105,7 +105,7 @@ mod tests {
         let mut r = RppsPredictor::new();
         r.history = vec![0.1; 30];
         // a fake job
-        w.jobs.push(crate::sim::types::Job {
+        w.add_job(crate::sim::types::Job {
             id: 0,
             tasks: vec![],
             submit_t: 0.0,

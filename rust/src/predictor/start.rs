@@ -136,7 +136,7 @@ impl StartPredictor {
         alpha: f64,
         beta: f64,
     ) -> StragglerPrediction {
-        let q = w.jobs[job].tasks.len();
+        let q = w.job(job).tasks.len();
         let expected = Pareto::new(alpha.max(1.001), beta.max(1e-6))
             .map(|p| p.expected_stragglers(q, self.k))
             .unwrap_or(0.0);

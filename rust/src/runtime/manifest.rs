@@ -121,6 +121,41 @@ impl Manifest {
             .map(String::as_str)
             .ok_or_else(|| anyhow!("manifest has no artifact {key:?}"))
     }
+
+    /// Canned manifest mirroring `python/compile/dims.py` defaults, for
+    /// tests and benches that exercise the simulator without an artifact
+    /// directory (its `artifacts` map is empty, so model loads will fail
+    /// gracefully rather than dispatch).
+    pub fn test_default() -> Manifest {
+        Manifest {
+            n_hosts: 20,
+            m_feats: 12,
+            q_tasks: 10,
+            p_feats: 8,
+            hidden: 32,
+            igru_hidden: 32,
+            rollout_steps: 5,
+            rollout_batch: 8,
+            ema_weight: 0.8,
+            k_default: 1.5,
+            infer_period_s: 1.0,
+            infer_window_s: 5.0,
+            generative: GenerativeConstants {
+                alpha_min: 1.15,
+                alpha_span: 2.85,
+                alpha_gain: 4.0,
+                alpha_mid: 0.65,
+                contention_weight: 0.5,
+                hetero_weight: 0.4,
+                beta_base: 1.0,
+                beta_demand_lo: 0.4,
+                beta_demand_w: 1.2,
+                beta_load_w: 0.8,
+                contention_knee: 1.2,
+            },
+            artifacts: BTreeMap::new(),
+        }
+    }
 }
 
 #[cfg(test)]

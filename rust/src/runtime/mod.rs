@@ -8,6 +8,12 @@
 //! Interchange is HLO **text** (see `python/compile/aot.py`): the `xla`
 //! crate's text parser reassigns instruction ids, avoiding the 64-bit-id
 //! protos that xla_extension 0.5.1 rejects.
+//!
+//! The `xla` native dependency is gated behind the `pjrt` cargo feature so
+//! the simulator, baselines and experiment harness build and test on
+//! machines without the XLA toolchain; without the feature, model loading
+//! fails with a clear error and model-driven techniques are unavailable
+//! (DESIGN.md §8).
 
 mod manifest;
 mod model;
@@ -15,81 +21,142 @@ mod model;
 pub use manifest::{GenerativeConstants, Manifest};
 pub use model::{IgruModel, LstmState, StartModel};
 
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use anyhow::{Context, Result};
+    use std::path::{Path, PathBuf};
 
-/// A compiled HLO executable plus the client it runs on.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-/// Shared PJRT CPU client; compile-once cache of executables.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    art_dir: PathBuf,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
-    pub fn new(art_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, art_dir: art_dir.as_ref().to_path_buf() })
+    /// A compiled HLO executable plus the client it runs on.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
     }
 
-    /// The artifact directory this runtime loads from.
-    pub fn artifact_dir(&self) -> &Path {
-        &self.art_dir
+    /// Shared PJRT CPU client; compile-once cache of executables.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        art_dir: PathBuf,
     }
 
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact by file name.
-    pub fn load(&self, file_name: &str) -> Result<Executable> {
-        let path = self.art_dir.join(file_name);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: file_name.to_string() })
-    }
-}
-
-impl Executable {
-    /// Execute with f32 buffers; returns each output flattened to `Vec<f32>`.
-    ///
-    /// All our artifacts are lowered with `return_tuple=True`, so the single
-    /// result literal is a tuple which we decompose.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .with_context(|| format!("reshaping input for {}", self.name))?;
-            lits.push(lit);
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client rooted at an artifact directory.
+        pub fn new(art_dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client, art_dir: art_dir.as_ref().to_path_buf() })
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
+
+        /// The artifact directory this runtime loads from.
+        pub fn artifact_dir(&self) -> &Path {
+            &self.art_dir
         }
-        Ok(out)
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact by file name.
+        pub fn load(&self, file_name: &str) -> Result<Executable> {
+            let path = self.art_dir.join(file_name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe, name: file_name.to_string() })
+        }
     }
 
-    /// Artifact file name this executable was compiled from.
-    pub fn name(&self) -> &str {
-        &self.name
+    impl Executable {
+        /// Execute with f32 buffers; returns each output flattened to `Vec<f32>`.
+        ///
+        /// All our artifacts are lowered with `return_tuple=True`, so the single
+        /// result literal is a tuple which we decompose.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input for {}", self.name))?;
+                lits.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing {}", self.name))?[0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(p.to_vec::<f32>()?);
+            }
+            Ok(out)
+        }
+
+        /// Artifact file name this executable was compiled from.
+        pub fn name(&self) -> &str {
+            &self.name
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{Executable, PjrtRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Uninhabited executable handle: without the `pjrt` feature a runtime
+    /// can never be constructed, so no executable can exist either.
+    pub struct Executable {
+        never: std::convert::Infallible,
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            match self.never {}
+        }
+
+        pub fn name(&self) -> &str {
+            match self.never {}
+        }
+    }
+
+    /// Stub runtime: construction always fails with an actionable error,
+    /// so model-driven techniques degrade gracefully (tests skip, the
+    /// simulator and model-free baselines keep working).
+    pub struct PjrtRuntime {
+        never: std::convert::Infallible,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(art_dir: impl AsRef<Path>) -> Result<Self> {
+            let _ = art_dir.as_ref();
+            bail!(
+                "start-sim was built without the `pjrt` cargo feature; \
+                 rebuild with `--features pjrt` (requires the vendored `xla` \
+                 crate) to execute AOT models"
+            )
+        }
+
+        pub fn artifact_dir(&self) -> &Path {
+            match self.never {}
+        }
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn load(&self, _file_name: &str) -> Result<Executable> {
+            match self.never {}
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::{Executable, PjrtRuntime};

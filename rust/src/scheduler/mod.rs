@@ -95,14 +95,14 @@ impl Scheduler for MinMin {
     }
 
     fn pick(&mut self, w: &World, task: TaskId) -> Option<VmId> {
-        let demand = w.tasks[task].demand.mips;
+        let demand = w.task(task).demand.mips;
         let mut best: Option<(f64, VmId)> = None;
         for v in available_vms(w) {
             let vm = &w.vms[v];
             let n_tasks = vm.tasks.len() as f64;
             let share = vm.mips / (n_tasks + 1.0);
             let host_load = w.host_cpu_util(vm.host);
-            let eta = w.tasks[task].remaining_mi / share.min(demand).max(1.0)
+            let eta = w.task(task).remaining_mi / share.min(demand).max(1.0)
                 * (1.0 + host_load);
             if best.map(|(b, _)| eta < b).unwrap_or(true) {
                 best = Some((eta, v));
@@ -142,7 +142,7 @@ impl A3cScheduler {
     fn features(w: &World, task: TaskId, vm: VmId) -> [f64; N_FEAT] {
         let v = &w.vms[vm];
         let host = &w.hosts[v.host];
-        let demand = w.tasks[task].demand.mips;
+        let demand = w.task(task).demand.mips;
         let share = v.mips / (v.tasks.len() as f64 + 1.0);
         [
             w.host_cpu_util(v.host),
@@ -236,7 +236,7 @@ mod tests {
     fn world_with_pending_task() -> (World, TaskId) {
         let mut w = World::new(&SimConfig::test_defaults());
         let id = 0;
-        w.tasks.push(Task {
+        w.add_task(Task {
             id,
             job: 0,
             length_mi: 1000.0,
@@ -301,9 +301,9 @@ mod tests {
     fn minmin_prefers_empty_vm() {
         let (mut w, t) = world_with_pending_task();
         // Fill VM 0 with work.
-        let clone = w.tasks[t].clone();
-        let t2 = w.tasks.len();
-        w.tasks.push(Task { id: t2, ..clone });
+        let clone = w.task(t).clone();
+        let t2 = w.n_tasks();
+        w.add_task(Task { id: t2, ..clone });
         w.start_task(t2, 0, 1.0);
         let mut s = MinMin;
         let vm = s.pick(&w, t).unwrap();

@@ -80,7 +80,7 @@ impl RunMetrics {
             if demand_over(cpu) || demand_over(ram) || demand_over(net) {
                 for &v in &h.vms {
                     for &t in &w.vms[v].tasks {
-                        let d = &w.tasks[t].demand;
+                        let d = &w.task(t).demand;
                         if demand_over(cpu) {
                             m.contention += d.mips / h.mips_total;
                         }
@@ -101,7 +101,7 @@ impl RunMetrics {
             m.net_util /= up as f64;
         }
         m.energy_kwh = energy_w * interval_s / 3.6e6;
-        m.active_tasks = w.tasks.iter().filter(|t| t.is_active()).count();
+        m.active_tasks = w.active_task_count();
         self.intervals.push(m);
     }
 
@@ -200,7 +200,7 @@ mod tests {
     fn world_with_task() -> (World, TaskId) {
         let mut w = World::new(&SimConfig::test_defaults());
         let id = 0;
-        w.tasks.push(Task {
+        w.add_task(Task {
             id,
             job: 0,
             length_mi: 100.0,
@@ -259,7 +259,7 @@ mod tests {
     fn avg_execution_time_eq8() {
         let (w, t) = world_with_task();
         let mut rm = RunMetrics::default();
-        rm.record_task_done(&w.tasks[t], 50.0);
+        rm.record_task_done(w.task(t), 50.0);
         // T_C − T_S = 50, R = 12.
         assert!((rm.avg_execution_time() - 62.0).abs() < 1e-12);
     }

@@ -1,27 +1,143 @@
 //! The mutable simulation world: entity storage, capacity/contention math,
 //! task placement and exact piecewise-linear progress advancement.
+//!
+//! Entity storage is an **index-maintained registry** (DESIGN.md §3):
+//! alongside the grow-only `tasks`/`jobs` arenas the world keeps
+//! incrementally-updated membership sets — `pending`, `running`, `held`
+//! tasks, `active_jobs`, per-job active-task counters, the live
+//! speculative-clone map, and a lazy min-heap of projected finish times
+//! that is invalidated only when execution rates change.  Every hot-path
+//! query (`advance`, `next_finish_time`, placement, metrics, drain check)
+//! is O(active) instead of O(total tasks ever created).
+//!
+//! The arenas are private: consumers go through the typed accessors
+//! (`pending()`, `running()`, `active_jobs()`, `task()`, `job()`, …) and
+//! all state transitions go through world methods so the indexes can never
+//! drift from task state.  `SimConfig::reference_scans` flips every query
+//! back to the pre-index O(total) full scans — the golden-parity test and
+//! the `scale` benchmark run both modes and compare.
 
 use crate::config::SimConfig;
 use crate::sim::types::*;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashMap};
+
+/// Dense membership set over entity ids: O(1) insert/remove/contains via a
+/// swap-remove vec plus a position map, O(members) iteration.
+#[derive(Default)]
+struct IdSet {
+    dense: Vec<usize>,
+    pos: Vec<u32>,
+}
+
+const NO_POS: u32 = u32::MAX;
+
+impl IdSet {
+    fn insert(&mut self, id: usize) -> bool {
+        if id >= self.pos.len() {
+            self.pos.resize(id + 1, NO_POS);
+        }
+        if self.pos[id] != NO_POS {
+            return false;
+        }
+        self.pos[id] = self.dense.len() as u32;
+        self.dense.push(id);
+        true
+    }
+
+    fn remove(&mut self, id: usize) -> bool {
+        if id >= self.pos.len() || self.pos[id] == NO_POS {
+            return false;
+        }
+        let i = self.pos[id] as usize;
+        let last = *self.dense.last().unwrap();
+        self.dense[i] = last;
+        self.pos[last] = i as u32;
+        self.dense.pop();
+        self.pos[id] = NO_POS;
+        true
+    }
+
+    fn contains(&self, id: usize) -> bool {
+        id < self.pos.len() && self.pos[id] != NO_POS
+    }
+
+    fn len(&self) -> usize {
+        self.dense.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.dense.is_empty()
+    }
+
+    /// Members in ascending id order (the order the pre-index full scans
+    /// produced — required for bit-identical replay).
+    fn sorted(&self) -> Vec<usize> {
+        let mut v = self.dense.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Total-ordered f64 wrapper for heap keys (etas are never NaN).
+#[derive(Clone, Copy, PartialEq)]
+struct EtaKey(f64);
+
+impl Eq for EtaKey {}
+
+impl PartialOrd for EtaKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EtaKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}
 
 /// Entity storage + derived execution rates.
 pub struct World {
     pub now: f64,
     pub hosts: Vec<Host>,
     pub vms: Vec<Vm>,
-    pub tasks: Vec<Task>,
-    pub jobs: Vec<Job>,
+    tasks: Vec<Task>,
+    jobs: Vec<Job>,
     /// Reserved-utilization knob (Fig. 6/8 sweep).
     pub reserved_util: f64,
     /// Per-task execution rate in MI/s (slowdown already applied);
-    /// recomputed lazily when `rates_dirty`.
+    /// recomputed lazily when `rates_dirty`.  Entries are valid only when
+    /// their epoch stamp matches the current epoch — this avoids the
+    /// O(total) zero-fill the seed engine paid on every recompute.
     rates: Vec<f64>,
+    rate_epoch: Vec<u64>,
+    epoch: u64,
     rates_dirty: bool,
     /// Latest raw M_H snapshot (set by the coordinator's feature extractor
     /// each interval; consumed by job-submission generative sampling).
     pub latest_m_h: Vec<f32>,
     /// Completed-task log for metrics: (task, completion_time).
     pub completed_log: Vec<TaskId>,
+    /// Parity/debug mode: answer queries via the seed engine's O(total)
+    /// full scans instead of the indexes.
+    reference_scans: bool,
+    // ------------------------------------------------ incremental indexes
+    pending_set: IdSet,
+    running_set: IdSet,
+    held_set: IdSet,
+    active_job_set: IdSet,
+    /// Tasks in an active state (pending/running/held) per job.
+    job_active_tasks: Vec<usize>,
+    /// Active speculative copies, fleet-wide.
+    live_clones: usize,
+    /// original task → its (single) live speculative clone.
+    active_clone: HashMap<TaskId, TaskId>,
+    /// Min-heap of (projected absolute finish time, task) over running
+    /// tasks with positive rate; rebuilt whenever rates are recomputed and
+    /// valid exactly while `!rates_dirty` (etas are time-invariant under
+    /// constant rates).
+    finish_heap: BinaryHeap<Reverse<(EtaKey, TaskId)>>,
 }
 
 impl World {
@@ -70,15 +186,287 @@ impl World {
             jobs: Vec::new(),
             reserved_util: cfg.reserved_util,
             rates: Vec::new(),
+            rate_epoch: Vec::new(),
+            epoch: 0,
             rates_dirty: true,
             latest_m_h: Vec::new(),
             completed_log: Vec::new(),
+            reference_scans: cfg.reference_scans,
+            pending_set: IdSet::default(),
+            running_set: IdSet::default(),
+            held_set: IdSet::default(),
+            active_job_set: IdSet::default(),
+            job_active_tasks: Vec::new(),
+            live_clones: 0,
+            active_clone: HashMap::new(),
+            finish_heap: BinaryHeap::new(),
+        }
+    }
+
+    // ------------------------------------------------------------ registry
+
+    /// Register a new task (id must be `n_tasks()`); indexes it by state.
+    pub fn add_task(&mut self, t: Task) -> TaskId {
+        let id = self.tasks.len();
+        debug_assert_eq!(t.id, id, "task ids are dense");
+        if t.job >= self.job_active_tasks.len() {
+            self.job_active_tasks.resize(t.job + 1, 0);
+        }
+        let job = t.job;
+        let active = t.is_active();
+        let spec_of = t.speculative_of;
+        self.tasks.push(t);
+        if active {
+            self.job_active_tasks[job] += 1;
+            if let Some(orig) = spec_of {
+                debug_assert!(
+                    !self.active_clone.contains_key(&orig),
+                    "task {orig} already has a live clone"
+                );
+                self.live_clones += 1;
+                self.active_clone.insert(orig, id);
+            }
+        }
+        self.index_enter_state(id);
+        id
+    }
+
+    /// Register a new job (id must be `n_jobs()`).
+    pub fn add_job(&mut self, j: Job) -> JobId {
+        let id = self.jobs.len();
+        debug_assert_eq!(j.id, id, "job ids are dense");
+        if id >= self.job_active_tasks.len() {
+            self.job_active_tasks.resize(id + 1, 0);
+        }
+        let active = j.is_active();
+        self.jobs.push(j);
+        if active {
+            self.active_job_set.insert(id);
+        }
+        id
+    }
+
+    /// Mark a job done at the current time (all tasks completed).
+    pub fn finish_job(&mut self, job: JobId) {
+        if self.jobs[job].is_active() {
+            self.jobs[job].state = JobState::Done { t: self.now };
+            self.active_job_set.remove(job);
+        }
+    }
+
+    /// Record a mitigation action against a task (prediction scoring).
+    pub fn mark_mitigated(&mut self, task: TaskId) {
+        self.tasks[task].mitigated = true;
+    }
+
+    /// Set the ground-truth Pareto parameters sampled at submission.
+    pub fn set_job_ground_truth(&mut self, job: JobId, alpha: f64, beta: f64) {
+        self.jobs[job].true_alpha = alpha;
+        self.jobs[job].true_beta = beta;
+    }
+
+    /// Set a job's absolute SLA deadline.
+    pub fn set_job_sla_deadline(&mut self, job: JobId, deadline: f64) {
+        self.jobs[job].sla_deadline = deadline;
+    }
+
+    fn index_enter_state(&mut self, id: TaskId) {
+        match self.tasks[id].state {
+            TaskState::Pending => {
+                self.pending_set.insert(id);
+            }
+            TaskState::Running => {
+                self.running_set.insert(id);
+            }
+            TaskState::Held { .. } => {
+                self.held_set.insert(id);
+            }
+            _ => {}
+        }
+    }
+
+    fn index_leave_state(&mut self, id: TaskId) {
+        match self.tasks[id].state {
+            TaskState::Pending => {
+                self.pending_set.remove(id);
+            }
+            TaskState::Running => {
+                self.running_set.remove(id);
+            }
+            TaskState::Held { .. } => {
+                self.held_set.remove(id);
+            }
+            _ => {}
+        }
+    }
+
+    /// The single choke point for task state changes: keeps the membership
+    /// sets, per-job counters and clone map consistent.
+    fn set_task_state(&mut self, id: TaskId, state: TaskState) {
+        let was_active = self.tasks[id].is_active();
+        self.index_leave_state(id);
+        self.tasks[id].state = state;
+        self.index_enter_state(id);
+        let is_active = self.tasks[id].is_active();
+        if was_active == is_active {
+            return;
+        }
+        let job = self.tasks[id].job;
+        if is_active {
+            self.job_active_tasks[job] += 1;
+        } else {
+            self.job_active_tasks[job] -= 1;
+        }
+        if let Some(orig) = self.tasks[id].speculative_of {
+            if is_active {
+                debug_assert!(!self.active_clone.contains_key(&orig));
+                self.live_clones += 1;
+                self.active_clone.insert(orig, id);
+            } else {
+                self.live_clones -= 1;
+                if self.active_clone.get(&orig) == Some(&id) {
+                    self.active_clone.remove(&orig);
+                }
+            }
         }
     }
 
     // ------------------------------------------------------------ queries
 
-    /// Active (pending/running/held) tasks of a job.
+    /// Read a task.
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id]
+    }
+
+    /// Read a job.
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.jobs[id]
+    }
+
+    /// Total tasks ever created (dense id space).
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total jobs ever created (dense id space).
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Pending tasks, ascending id (the placement queue).
+    pub fn pending(&self) -> Vec<TaskId> {
+        if self.reference_scans {
+            return self
+                .tasks
+                .iter()
+                .filter(|t| t.state == TaskState::Pending)
+                .map(|t| t.id)
+                .collect();
+        }
+        self.pending_set.sorted()
+    }
+
+    /// Running tasks, ascending id.
+    pub fn running(&self) -> Vec<TaskId> {
+        if self.reference_scans {
+            return self.tasks.iter().filter(|t| t.is_running()).map(|t| t.id).collect();
+        }
+        self.running_set.sorted()
+    }
+
+    /// Held (Wrangler-delayed) tasks, ascending id.
+    pub fn held(&self) -> Vec<TaskId> {
+        if self.reference_scans {
+            return self
+                .tasks
+                .iter()
+                .filter(|t| matches!(t.state, TaskState::Held { .. }))
+                .map(|t| t.id)
+                .collect();
+        }
+        self.held_set.sorted()
+    }
+
+    /// Jobs still active, ascending id.
+    pub fn active_jobs(&self) -> Vec<JobId> {
+        if self.reference_scans {
+            return self.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        }
+        self.active_job_set.sorted()
+    }
+
+    /// Whether any job is still active (the drain-loop check).
+    pub fn has_active_jobs(&self) -> bool {
+        if self.reference_scans {
+            return self.jobs.iter().any(|j| j.is_active());
+        }
+        !self.active_job_set.is_empty()
+    }
+
+    /// Number of active jobs.
+    pub fn active_job_count(&self) -> usize {
+        if self.reference_scans {
+            return self.jobs.iter().filter(|j| j.is_active()).count();
+        }
+        self.active_job_set.len()
+    }
+
+    /// Number of tasks in an active state (pending/running/held).
+    pub fn active_task_count(&self) -> usize {
+        if self.reference_scans {
+            return self.tasks.iter().filter(|t| t.is_active()).count();
+        }
+        self.pending_set.len() + self.running_set.len() + self.held_set.len()
+    }
+
+    /// Active tasks of one job (counter-backed fast path for emptiness).
+    /// Counts every task carrying the job id — **including live
+    /// speculative clones** — unlike `active_tasks`, which walks the
+    /// job's original task list only.
+    pub fn job_active_count(&self, job: JobId) -> usize {
+        self.job_active_tasks.get(job).copied().unwrap_or(0)
+    }
+
+    /// Live speculative copies fleet-wide (the baselines' clone budgets).
+    pub fn live_clone_count(&self) -> usize {
+        if self.reference_scans {
+            return self
+                .tasks
+                .iter()
+                .filter(|t| t.speculative_of.is_some() && t.is_active())
+                .count();
+        }
+        self.live_clones
+    }
+
+    /// The live speculative clone of `task`, if any.
+    pub fn clone_of(&self, task: TaskId) -> Option<TaskId> {
+        if self.reference_scans {
+            // Clones are appended after their original; scan backwards.
+            return self
+                .tasks
+                .iter()
+                .rev()
+                .find(|t| t.speculative_of == Some(task) && t.is_active())
+                .map(|t| t.id);
+        }
+        self.active_clone.get(&task).copied()
+    }
+
+    /// All tasks, including dead ones.  O(total) — conservation tests and
+    /// debugging only; hot-path code must use the set accessors above.
+    pub fn debug_tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    /// All jobs.  O(total) — tests and debugging only.
+    pub fn debug_jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Active (pending/running/held) tasks of a job — **originals only**
+    /// (speculative clones are not in `Job::tasks`); see
+    /// `job_active_count` for the clone-inclusive counter.
     pub fn active_tasks(&self, job: JobId) -> Vec<TaskId> {
         self.jobs[job]
             .tasks
@@ -172,8 +560,8 @@ impl World {
     /// ground-truth distribution.
     pub fn start_task(&mut self, task: TaskId, vm: VmId, slowdown: f64) {
         debug_assert!(self.tasks[task].vm.is_none(), "task already placed");
+        self.set_task_state(task, TaskState::Running);
         let t = &mut self.tasks[task];
-        t.state = TaskState::Running;
         t.vm = Some(vm);
         t.last_vm = Some(vm);
         t.slowdown = slowdown.max(1e-3);
@@ -195,44 +583,99 @@ impl World {
     /// Mark a task completed now and detach it.
     pub fn complete_task(&mut self, task: TaskId) {
         self.unplace_task(task);
-        self.tasks[task].state = TaskState::Completed { t: self.now };
+        self.set_task_state(task, TaskState::Completed { t: self.now });
         self.tasks[task].remaining_mi = 0.0;
         self.completed_log.push(task);
+    }
+
+    /// Complete a task whose result arrived via its speculative clone: the
+    /// logical task is done but this execution did not itself finish (it
+    /// keeps its residual work and is not appended to the completion log).
+    pub fn complete_superseded(&mut self, task: TaskId) {
+        self.unplace_task(task);
+        self.set_task_state(task, TaskState::Completed { t: self.now });
     }
 
     /// Kill a task (lost race / superseded) and detach it.
     pub fn kill_task(&mut self, task: TaskId) {
         self.unplace_task(task);
-        self.tasks[task].state = TaskState::Killed;
+        self.set_task_state(task, TaskState::Killed);
     }
 
     /// Reset a task to pending with full work (restart after fault/rerun);
     /// accumulates restart bookkeeping.
     pub fn reset_task(&mut self, task: TaskId, restart_penalty_s: f64) {
         self.unplace_task(task);
+        self.set_task_state(task, TaskState::Pending);
         let t = &mut self.tasks[task];
-        t.state = TaskState::Pending;
         t.remaining_mi = t.length_mi;
         t.restarts += 1;
         t.restart_time += restart_penalty_s;
     }
 
+    /// Put a pending task on hold until `until` (Wrangler-style delaying).
+    pub fn hold_task(&mut self, task: TaskId, until: f64) -> bool {
+        if self.tasks[task].state == TaskState::Pending {
+            self.set_task_state(task, TaskState::Held { until });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release held tasks whose hold expired (back to Pending).
+    pub fn release_expired_holds(&mut self) -> usize {
+        let now = self.now;
+        // Both modes share one expiry predicate; only the candidate id
+        // source differs (full scan vs held set), so the parity contract
+        // cannot drift if the epsilon or the Held match ever changes.
+        let candidates: Vec<TaskId> = if self.reference_scans {
+            (0..self.tasks.len()).collect()
+        } else {
+            self.held_set.sorted()
+        };
+        let expired: Vec<TaskId> = candidates
+            .into_iter()
+            .filter(|&t| match self.tasks[t].state {
+                TaskState::Held { until } => now + 1e-9 >= until,
+                _ => false,
+            })
+            .collect();
+        for &t in &expired {
+            self.set_task_state(t, TaskState::Pending);
+        }
+        expired.len()
+    }
+
     // ----------------------------------------------------- rate computation
 
-    /// Recompute per-task MI/s rates from the current topology.
+    /// Recompute per-task MI/s rates from the current topology, and rebuild
+    /// the projected-finish-time heap in the same pass.
     ///
     /// Model: each task's fair demand on its VM is
     /// `min(demand.mips, vm.mips / n_tasks)`; a host whose aggregate VM
     /// demand exceeds its effective capacity (after background + reserved
     /// load) scales every resident task proportionally — this is the
     /// resource-contention mechanism (Eq. 9's "overloaded" condition).
+    // Index loops are deliberate: they split borrows across `hosts`/`vms`/
+    // `tasks`/`rates`/`finish_heap` fields, which iterator chains cannot.
+    #[allow(clippy::needless_range_loop)]
     fn recompute_rates(&mut self) {
         if self.rates.len() < self.tasks.len() {
             self.rates.resize(self.tasks.len(), 0.0);
+            self.rate_epoch.resize(self.tasks.len(), 0);
         }
-        for r in self.rates.iter_mut() {
-            *r = 0.0;
+        self.epoch += 1;
+        let epoch = self.epoch;
+        if self.reference_scans {
+            // Seed-faithful O(total) zero-fill; the indexed path instead
+            // invalidates by epoch stamp so dead tasks cost nothing.
+            for r in self.rates.iter_mut() {
+                *r = 0.0;
+            }
         }
+        self.finish_heap.clear();
+        let now = self.now;
         for h in 0..self.hosts.len() {
             let host = &self.hosts[h];
             if !host.is_up(self.now) {
@@ -244,17 +687,39 @@ impl World {
             }
             let capacity = host.effective_mips(self.reserved_util);
             let scale = (capacity / demand).min(1.0);
-            for &v in &host.vms {
+            for vi in 0..self.hosts[h].vms.len() {
+                let v = self.hosts[h].vms[vi];
                 let vm = &self.vms[v];
                 let n = vm.tasks.len().max(1) as f64;
                 let fair = vm.mips / n;
-                for &t in &vm.tasks {
+                for ti in 0..self.vms[v].tasks.len() {
+                    let t = self.vms[v].tasks[ti];
                     let nominal = self.tasks[t].demand.mips.min(fair).max(1.0);
-                    self.rates[t] = nominal * scale / self.tasks[t].slowdown;
+                    let rate = nominal * scale / self.tasks[t].slowdown;
+                    self.rates[t] = rate;
+                    self.rate_epoch[t] = epoch;
+                    // Reference mode answers `next_finish_time` by full
+                    // scan, so it must not pay (or rely on) heap upkeep.
+                    if !self.reference_scans && rate > 0.0 && self.tasks[t].is_running() {
+                        self.finish_heap.push(Reverse((
+                            EtaKey(now + self.tasks[t].remaining_mi / rate),
+                            t,
+                        )));
+                    }
                 }
             }
         }
         self.rates_dirty = false;
+    }
+
+    /// Rate of a task under the current epoch (0 if not computed = idle,
+    /// dead, or on a down host).
+    fn rate_of(&self, task: TaskId) -> f64 {
+        if task < self.rates.len() && self.rate_epoch[task] == self.epoch {
+            self.rates[task]
+        } else {
+            0.0
+        }
     }
 
     /// Force rate recomputation on next use (topology/load changed).
@@ -267,33 +732,57 @@ impl World {
         if self.rates_dirty {
             self.recompute_rates();
         }
-        self.rates.get(task).copied().unwrap_or(0.0)
+        self.rate_of(task)
     }
 
     /// Earliest projected completion time among running tasks.
+    ///
+    /// Indexed mode peeks the lazy finish-time heap (O(1) when rates are
+    /// clean); the returned eta is always re-derived from the task's live
+    /// remaining work so both modes share one arithmetic definition (and
+    /// `advance` is guaranteed to make progress — a cached value could
+    /// land an ulp short of the completion threshold and stall the loop).
+    ///
+    /// Caveat: the heap orders by etas cached at recompute time.  Etas are
+    /// time-invariant under clean rates in exact arithmetic, but if time
+    /// advanced since the rebuild (fault events that do not touch rates),
+    /// two etas within a few ulps of each other could rank differently
+    /// than a fresh scan.  Candidate etas derive from independent
+    /// continuous draws (Pareto slowdowns, normal task sizes), so such
+    /// near-ties have effectively zero measure; the parity suite runs both
+    /// modes across seeds/fault-rates to back this empirically.
+    #[allow(clippy::needless_range_loop)]
     pub fn next_finish_time(&mut self) -> Option<f64> {
         if self.rates_dirty {
             self.recompute_rates();
         }
-        let now = self.now;
-        let mut best: Option<f64> = None;
-        for t in 0..self.tasks.len() {
-            if self.tasks[t].is_running() {
-                let rate = self.rates[t];
-                if rate > 0.0 {
-                    let eta = now + self.tasks[t].remaining_mi / rate;
-                    best = Some(match best {
-                        Some(b) => b.min(eta),
-                        None => eta,
-                    });
+        if self.reference_scans {
+            let now = self.now;
+            let mut best: Option<f64> = None;
+            for t in 0..self.tasks.len() {
+                if self.tasks[t].is_running() {
+                    let rate = self.rate_of(t);
+                    if rate > 0.0 {
+                        let eta = now + self.tasks[t].remaining_mi / rate;
+                        best = Some(match best {
+                            Some(b) => b.min(eta),
+                            None => eta,
+                        });
+                    }
                 }
             }
+            return best;
         }
-        best
+        self.finish_heap.peek().map(|Reverse((_, t))| {
+            let t = *t;
+            self.now + self.tasks[t].remaining_mi / self.rate_of(t)
+        })
     }
 
     /// Advance simulated time to `to`, consuming work on all running
-    /// tasks.  Returns tasks whose remaining work reached zero.
+    /// tasks.  Returns tasks whose remaining work reached zero, in
+    /// ascending id order.
+    #[allow(clippy::needless_range_loop)]
     pub fn advance(&mut self, to: f64) -> Vec<TaskId> {
         debug_assert!(to >= self.now - 1e-9, "time must be monotone");
         if self.rates_dirty {
@@ -305,9 +794,22 @@ impl World {
             return Vec::new();
         }
         let mut done = Vec::new();
-        for t in 0..self.tasks.len() {
-            if self.tasks[t].is_running() {
-                let rate = self.rates[t];
+        if self.reference_scans {
+            for t in 0..self.tasks.len() {
+                if self.tasks[t].is_running() {
+                    let rate = self.rate_of(t);
+                    if rate > 0.0 {
+                        self.tasks[t].remaining_mi -= rate * dt;
+                        if self.tasks[t].remaining_mi <= 1e-6 {
+                            done.push(t);
+                        }
+                    }
+                }
+            }
+        } else {
+            for i in 0..self.running_set.dense.len() {
+                let t = self.running_set.dense[i];
+                let rate = self.rate_of(t);
                 if rate > 0.0 {
                     self.tasks[t].remaining_mi -= rate * dt;
                     if self.tasks[t].remaining_mi <= 1e-6 {
@@ -315,6 +817,7 @@ impl World {
                     }
                 }
             }
+            done.sort_unstable();
         }
         done
     }
@@ -365,6 +868,96 @@ impl World {
         }
         m
     }
+
+    // ---------------------------------------------------------- invariants
+
+    /// Cross-check every incremental index against a from-scratch O(total)
+    /// recount.  Panics (with a description) on any drift.  Test/debug
+    /// only — this is intentionally the full scan the indexes replace.
+    pub fn assert_consistent(&self) {
+        let mut pend = Vec::new();
+        let mut run = Vec::new();
+        let mut held = Vec::new();
+        let mut job_active = vec![0usize; self.job_active_tasks.len()];
+        let mut clones = 0usize;
+        let mut clone_map: HashMap<TaskId, TaskId> = HashMap::new();
+        for t in &self.tasks {
+            match t.state {
+                TaskState::Pending => pend.push(t.id),
+                TaskState::Running => run.push(t.id),
+                TaskState::Held { .. } => held.push(t.id),
+                _ => {}
+            }
+            if t.is_active() {
+                if t.job >= job_active.len() {
+                    job_active.resize(t.job + 1, 0);
+                }
+                job_active[t.job] += 1;
+                if let Some(orig) = t.speculative_of {
+                    clones += 1;
+                    let prev = clone_map.insert(orig, t.id);
+                    assert!(prev.is_none(), "two live clones of task {orig}");
+                }
+            }
+        }
+        assert_eq!(self.pending_set.sorted(), pend, "pending set drift");
+        assert_eq!(self.running_set.sorted(), run, "running set drift");
+        assert_eq!(self.held_set.sorted(), held, "held set drift");
+        assert_eq!(self.live_clones, clones, "live-clone counter drift");
+        assert_eq!(self.active_clone.len(), clone_map.len(), "clone map size drift");
+        for (orig, clone) in &clone_map {
+            assert_eq!(
+                self.active_clone.get(orig),
+                Some(clone),
+                "clone map drift for task {orig}"
+            );
+        }
+        for (j, &n) in job_active.iter().enumerate() {
+            assert_eq!(
+                self.job_active_tasks.get(j).copied().unwrap_or(0),
+                n,
+                "active-task counter drift for job {j}"
+            );
+        }
+        let active_jobs: Vec<JobId> =
+            self.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        assert_eq!(self.active_job_set.sorted(), active_jobs, "active-job set drift");
+        for t in &self.tasks {
+            match t.state {
+                TaskState::Running => {
+                    let vm = t.vm.expect("running task must be placed");
+                    assert_eq!(
+                        self.vms[vm].tasks.iter().filter(|&&x| x == t.id).count(),
+                        1,
+                        "task {} not resident exactly once on vm {vm}",
+                        t.id
+                    );
+                }
+                _ => assert!(t.vm.is_none(), "non-running task {} still placed", t.id),
+            }
+        }
+        if !self.rates_dirty && !self.reference_scans {
+            let mut heap_ids: Vec<TaskId> =
+                self.finish_heap.iter().map(|Reverse((_, t))| *t).collect();
+            heap_ids.sort_unstable();
+            let expect: Vec<TaskId> =
+                run.iter().copied().filter(|&t| self.rate_of(t) > 0.0).collect();
+            assert_eq!(heap_ids, expect, "finish-heap membership drift");
+        }
+        // Membership sets must contain only live states (spot-check via
+        // contains on a few dead ids).
+        for t in &self.tasks {
+            if !t.is_active() {
+                assert!(
+                    !self.pending_set.contains(t.id)
+                        && !self.running_set.contains(t.id)
+                        && !self.held_set.contains(t.id),
+                    "dead task {} still indexed",
+                    t.id
+                );
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -372,14 +965,15 @@ mod tests {
     use super::*;
     use crate::config::SimConfig;
     use crate::sim::types::{TaskDemand, TaskState};
+    use crate::util::ptest;
 
     fn world() -> World {
         World::new(&SimConfig::test_defaults())
     }
 
     fn add_task(w: &mut World, job: JobId, length: f64, mips: f64) -> TaskId {
-        let id = w.tasks.len();
-        w.tasks.push(Task {
+        let id = w.n_tasks();
+        w.add_task(Task {
             id,
             job,
             length_mi: length,
@@ -395,8 +989,7 @@ mod tests {
             slowdown: 1.0,
             speculative_of: None,
             mitigated: false,
-        });
-        id
+        })
     }
 
     #[test]
@@ -469,8 +1062,8 @@ mod tests {
         let t = add_task(&mut w, 0, 1000.0, 100.0);
         w.start_task(t, 0, 1.0);
         w.advance(3.0);
-        assert!((w.tasks[t].remaining_mi - 700.0).abs() < 1e-9);
-        assert!((w.tasks[t].progress() - 0.3).abs() < 1e-9);
+        assert!((w.task(t).remaining_mi - 700.0).abs() < 1e-9);
+        assert!((w.task(t).progress() - 0.3).abs() < 1e-9);
         let eta = w.next_finish_time().unwrap();
         assert!((eta - 10.0).abs() < 1e-9);
     }
@@ -493,11 +1086,12 @@ mod tests {
         w.start_task(t, 0, 1.0);
         w.advance(5.0);
         w.reset_task(t, 30.0);
-        assert_eq!(w.tasks[t].state, TaskState::Pending);
-        assert_eq!(w.tasks[t].remaining_mi, 1000.0);
-        assert_eq!(w.tasks[t].restarts, 1);
-        assert_eq!(w.tasks[t].restart_time, 30.0);
+        assert_eq!(w.task(t).state, TaskState::Pending);
+        assert_eq!(w.task(t).remaining_mi, 1000.0);
+        assert_eq!(w.task(t).restarts, 1);
+        assert_eq!(w.task(t).restart_time, 30.0);
         assert!(w.vms[0].tasks.is_empty());
+        w.assert_consistent();
     }
 
     #[test]
@@ -510,10 +1104,11 @@ mod tests {
         w.advance(1.0);
         w.complete_task(t1);
         w.kill_task(t2);
-        assert!(matches!(w.tasks[t1].state, TaskState::Completed { .. }));
-        assert_eq!(w.tasks[t2].state, TaskState::Killed);
+        assert!(matches!(w.task(t1).state, TaskState::Completed { .. }));
+        assert_eq!(w.task(t2).state, TaskState::Killed);
         assert!(w.vms[0].tasks.is_empty());
         assert_eq!(w.completed_log, vec![t1]);
+        w.assert_consistent();
     }
 
     #[test]
@@ -538,5 +1133,227 @@ mod tests {
         assert!((w.hosts[0].straggler_ema - 0.2).abs() < 1e-12);
         w.note_straggler(0, false);
         assert!((w.hosts[0].straggler_ema - 0.16).abs() < 1e-12);
+    }
+
+    // ------------------------------------------------- index registry
+
+    #[test]
+    fn sets_track_lifecycle() {
+        let mut w = world();
+        let t1 = add_task(&mut w, 0, 1000.0, 100.0);
+        let t2 = add_task(&mut w, 0, 1000.0, 100.0);
+        assert_eq!(w.pending(), vec![t1, t2]);
+        assert!(w.running().is_empty());
+        assert_eq!(w.active_task_count(), 2);
+        assert_eq!(w.job_active_count(0), 2);
+
+        w.start_task(t1, 0, 1.0);
+        assert_eq!(w.pending(), vec![t2]);
+        assert_eq!(w.running(), vec![t1]);
+
+        assert!(w.hold_task(t2, 50.0));
+        assert_eq!(w.held(), vec![t2]);
+        assert!(w.pending().is_empty());
+        assert_eq!(w.release_expired_holds(), 0);
+        w.advance(50.0);
+        assert_eq!(w.release_expired_holds(), 1);
+        assert_eq!(w.pending(), vec![t2]);
+
+        w.complete_task(t1);
+        assert!(w.running().is_empty());
+        assert_eq!(w.job_active_count(0), 1);
+        w.kill_task(t2);
+        assert_eq!(w.active_task_count(), 0);
+        assert_eq!(w.job_active_count(0), 0);
+        w.assert_consistent();
+    }
+
+    #[test]
+    fn active_job_set_follows_finish_job() {
+        let mut w = world();
+        let t = add_task(&mut w, 0, 1000.0, 100.0);
+        w.add_job(Job {
+            id: 0,
+            tasks: vec![t],
+            submit_t: 0.0,
+            deadline_driven: false,
+            sla_deadline: 1e9,
+            sla_weight: 1.0,
+            state: JobState::Active,
+            true_alpha: 2.0,
+            true_beta: 1.0,
+        });
+        assert!(w.has_active_jobs());
+        assert_eq!(w.active_jobs(), vec![0]);
+        w.start_task(t, 0, 1.0);
+        w.advance(10.0);
+        w.complete_task(t);
+        w.finish_job(0);
+        assert!(!w.has_active_jobs());
+        assert_eq!(w.active_job_count(), 0);
+        assert!(matches!(w.job(0).state, JobState::Done { .. }));
+        w.assert_consistent();
+    }
+
+    #[test]
+    fn clone_map_tracks_single_live_clone() {
+        let mut w = world();
+        let orig = add_task(&mut w, 0, 1000.0, 100.0);
+        w.start_task(orig, 0, 4.0);
+        let clone_id = w.n_tasks();
+        w.add_task(Task {
+            id: clone_id,
+            job: 0,
+            length_mi: 1000.0,
+            demand: w.task(orig).demand,
+            state: TaskState::Pending,
+            vm: None,
+            last_vm: None,
+            remaining_mi: 1000.0,
+            submit_t: 0.0,
+            first_start_t: None,
+            restart_time: 0.0,
+            restarts: 0,
+            slowdown: 1.0,
+            speculative_of: Some(orig),
+            mitigated: true,
+        });
+        assert_eq!(w.clone_of(orig), Some(clone_id));
+        assert_eq!(w.live_clone_count(), 1);
+        w.kill_task(clone_id);
+        assert_eq!(w.clone_of(orig), None);
+        assert_eq!(w.live_clone_count(), 0);
+        w.assert_consistent();
+    }
+
+    #[test]
+    fn finish_heap_matches_scan_minimum() {
+        let mut w = world();
+        let mut r = world();
+        // Mirror worlds: identical ops, one indexed, one reference.
+        r.reference_scans = true;
+        for (len, mips, vm, slow) in
+            [(1000.0, 100.0, 0usize, 1.0), (4000.0, 200.0, 1, 2.0), (900.0, 50.0, 2, 1.0)]
+        {
+            let a = add_task(&mut w, 0, len, mips);
+            let b = add_task(&mut r, 0, len, mips);
+            assert_eq!(a, b);
+            w.start_task(a, vm, slow);
+            r.start_task(b, vm, slow);
+        }
+        let fast = w.next_finish_time();
+        let slow = r.next_finish_time();
+        assert_eq!(fast, slow, "heap vs scan minimum");
+        // Advance both to the first finish and compare again.
+        let te = fast.unwrap();
+        assert_eq!(w.advance(te), r.advance(te));
+        w.assert_consistent();
+    }
+
+    /// Satellite: property-style invariant check — pending/running/held and
+    /// per-job counters stay consistent with task states under random
+    /// place/hold/kill/complete/reset/speculate sequences.
+    #[test]
+    fn prop_indexes_consistent_under_random_ops() {
+        ptest::check("world-index-consistency", 30, |rng| {
+            let mut w = world();
+            // 2–4 jobs with 1–5 tasks each.
+            let n_jobs = 2 + rng.below(3);
+            for j in 0..n_jobs {
+                let q = 1 + rng.below(5);
+                let mut tasks = Vec::new();
+                for _ in 0..q {
+                    tasks.push(add_task(&mut w, j, rng.range(500.0, 5000.0), rng.range(80.0, 400.0)));
+                }
+                w.add_job(Job {
+                    id: j,
+                    tasks,
+                    submit_t: 0.0,
+                    deadline_driven: rng.chance(0.5),
+                    sla_deadline: 1e9,
+                    sla_weight: 1.0,
+                    state: JobState::Active,
+                    true_alpha: 2.0,
+                    true_beta: 1.0,
+                });
+            }
+            for _ in 0..150 {
+                match rng.below(8) {
+                    0 => {
+                        // place a pending task
+                        let p = w.pending();
+                        if let Some(&t) = p.first() {
+                            let vm = rng.below(w.vms.len());
+                            if w.vm_available(vm) {
+                                w.start_task(t, vm, rng.range(1.0, 6.0));
+                            }
+                        }
+                    }
+                    1 => {
+                        let r = w.running();
+                        if !r.is_empty() {
+                            w.complete_task(r[rng.below(r.len())]);
+                        }
+                    }
+                    2 => {
+                        let r = w.running();
+                        if !r.is_empty() {
+                            w.kill_task(r[rng.below(r.len())]);
+                        }
+                    }
+                    3 => {
+                        let r = w.running();
+                        if !r.is_empty() {
+                            w.reset_task(r[rng.below(r.len())], 30.0);
+                        }
+                    }
+                    4 => {
+                        let p = w.pending();
+                        if !p.is_empty() {
+                            w.hold_task(p[rng.below(p.len())], w.now + rng.range(1.0, 100.0));
+                        }
+                    }
+                    5 => {
+                        let dt = rng.range(0.1, 60.0);
+                        let to = w.now + dt;
+                        for t in w.advance(to) {
+                            w.complete_task(t);
+                        }
+                        w.release_expired_holds();
+                    }
+                    6 => {
+                        // speculate a running original via the mitigation path
+                        let r = w.running();
+                        let orig = r
+                            .into_iter()
+                            .find(|&t| w.task(t).speculative_of.is_none() && w.clone_of(t).is_none());
+                        if let Some(t) = orig {
+                            let _ = crate::mitigation::speculate(&mut w, t, rng.range(1.0, 3.0));
+                        }
+                    }
+                    _ => {
+                        // close out jobs whose tasks are all inactive
+                        let jobs = w.active_jobs();
+                        for j in jobs {
+                            if w.job_active_count(j) == 0 {
+                                w.finish_job(j);
+                            }
+                        }
+                    }
+                }
+                w.assert_consistent();
+            }
+            // Accessors agree with a forced reference re-scan.
+            let pend = w.pending();
+            let run = w.running();
+            let held = w.held();
+            let jobs = w.active_jobs();
+            w.reference_scans = true;
+            if pend != w.pending() || run != w.running() || held != w.held() || jobs != w.active_jobs()
+            {
+                return Err("indexed accessors disagree with reference scans".into());
+            }
+            Ok(())
+        });
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! This image has no network access and only the `xla`/`anyhow` crates are
 //! vendored, so the usual ecosystem pieces (rand, serde, clap, criterion,
-//! proptest) are implemented here from scratch — see DESIGN.md §3.
+//! proptest) are implemented here from scratch — see DESIGN.md §6.
 
 pub mod cli;
 pub mod json;

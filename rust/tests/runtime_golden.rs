@@ -1,8 +1,32 @@
 //! Integration: PJRT runtime numerics parity with the Python golden vectors.
 //! This pins the entire AOT bridge (jax -> HLO text -> xla crate -> PJRT).
+//!
+//! Skips (instead of failing) when the artifact directory or the PJRT
+//! backend is unavailable, so the hermetic simulator test suite stays
+//! green on machines without `make artifacts` / the `pjrt` feature.
 
 use start_sim::runtime::{LstmState, Manifest, PjrtRuntime, StartModel};
 use start_sim::util::json;
+use std::path::PathBuf;
+
+fn runtime() -> Option<(PathBuf, Manifest, PjrtRuntime)> {
+    let dir = start_sim::find_artifact_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping golden test: no artifact manifest ({e:#})");
+            return None;
+        }
+    };
+    let rt = match PjrtRuntime::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping golden test: PJRT unavailable ({e:#})");
+            return None;
+        }
+    };
+    Some((dir, manifest, rt))
+}
 
 fn load_golden(dir: &std::path::Path) -> json::Json {
     let text = std::fs::read_to_string(dir.join("golden.json")).expect("golden.json");
@@ -15,9 +39,7 @@ fn close(a: f64, b: f64, tol: f64) -> bool {
 
 #[test]
 fn start_step_matches_python() {
-    let dir = start_sim::find_artifact_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let Some((dir, manifest, rt)) = runtime() else { return };
     let model = StartModel::load(&rt, &manifest).expect("model");
     let golden = load_golden(&dir);
     let g = golden.get("start_step").expect("start_step golden");
@@ -44,9 +66,7 @@ fn start_step_matches_python() {
 
 #[test]
 fn start_rollout_matches_python() {
-    let dir = start_sim::find_artifact_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let Some((dir, manifest, rt)) = runtime() else { return };
     let model = StartModel::load(&rt, &manifest).expect("model");
     let golden = load_golden(&dir);
     let g = golden.get("start_rollout").expect("rollout golden");
@@ -63,9 +83,7 @@ fn start_rollout_matches_python() {
 
 #[test]
 fn igru_matches_python() {
-    let dir = start_sim::find_artifact_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let Some((dir, manifest, rt)) = runtime() else { return };
     let model = start_sim::runtime::IgruModel::load(&rt, &manifest).expect("igru");
     let golden = load_golden(&dir);
     let g = golden.get("igru_step").expect("igru golden");

@@ -1,0 +1,151 @@
+//! Golden parity: the O(active)-indexed `World` registry must reproduce
+//! the seed engine's full-scan semantics **bit for bit**.
+//!
+//! `SimConfig::reference_scans` keeps the pre-refactor O(total) query
+//! paths alive inside `World` (same arithmetic, seed iteration order).
+//! Every technique is run twice from the same seed — indexed vs reference
+//! — and the resulting `RunMetrics` are compared for exact equality, so
+//! the paper's figures are provably unaffected by the refactor.
+//!
+//! Model-free techniques run hermetically; START / IGRU-SD join in when
+//! the AOT artifacts are available.
+
+use start_sim::baselines::{
+    DollyManager, GrassManager, LateManager, NearestFitManager, RppsManager, SgcManager,
+    WranglerManager,
+};
+use start_sim::config::{SimConfig, Technique};
+use start_sim::coordinator::Models;
+use start_sim::runtime::Manifest;
+use start_sim::scheduler;
+use start_sim::sim::engine::{Manager, NullManager, Simulation};
+use start_sim::sim::RunMetrics;
+use start_sim::util::rng::Pcg;
+
+/// Managers constructible without AOT models.
+fn model_free_manager(t: Technique) -> Box<dyn Manager> {
+    match t {
+        Technique::Wrangler => Box::new(WranglerManager::new()),
+        Technique::Grass => Box::new(GrassManager::new()),
+        Technique::Dolly => Box::new(DollyManager::new()),
+        Technique::Sgc => Box::new(SgcManager::new()),
+        Technique::NearestFit => Box::new(NearestFitManager::new()),
+        Technique::Late => Box::new(LateManager::new()),
+        Technique::Rpps => Box::new(RppsManager::new()),
+        _ => Box::new(NullManager),
+    }
+}
+
+fn parity_cfg(technique: Technique, reference: bool) -> SimConfig {
+    let mut cfg = SimConfig::test_defaults();
+    cfg.n_intervals = 10;
+    cfg.n_workloads = 80;
+    cfg.fault_rate = 1.0; // exercise resets, downtime, clone kills
+    cfg.technique = technique;
+    cfg.reference_scans = reference;
+    cfg
+}
+
+fn run_model_free(technique: Technique, reference: bool) -> RunMetrics {
+    let cfg = parity_cfg(technique, reference);
+    let manifest =
+        Manifest::load(start_sim::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
+    let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+    let mut sim =
+        Simulation::new(cfg.clone(), &manifest, sched, model_free_manager(technique));
+    for _ in 0..cfg.n_intervals {
+        sim.step_interval(true);
+    }
+    let mut extra = 0;
+    let limit = cfg.drain_limit();
+    while sim.world.has_active_jobs() && extra < limit {
+        sim.step_interval(false);
+        extra += 1;
+    }
+    sim.world.assert_consistent();
+    sim.metrics
+}
+
+/// Exact (bitwise-value) equality of every deterministic metric field.
+/// `manager_overhead_s` is wall clock and deliberately excluded.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, label: &str) {
+    assert_eq!(a.tasks_done, b.tasks_done, "{label}: tasks_done");
+    assert_eq!(a.jobs_done, b.jobs_done, "{label}: jobs_done");
+    assert_eq!(a.speculations, b.speculations, "{label}: speculations");
+    assert_eq!(a.reruns, b.reruns, "{label}: reruns");
+    assert_eq!(a.exec_times, b.exec_times, "{label}: exec_times");
+    assert_eq!(a.restart_times, b.restart_times, "{label}: restart_times");
+    assert_eq!(a.completion_times, b.completion_times, "{label}: completion_times");
+    assert_eq!(a.mitigation_delays, b.mitigation_delays, "{label}: mitigation_delays");
+    assert_eq!(a.straggler_pred, b.straggler_pred, "{label}: straggler_pred");
+    assert_eq!(a.sla_violated_weight, b.sla_violated_weight, "{label}: sla_violated_weight");
+    assert_eq!(a.sla_total_weight, b.sla_total_weight, "{label}: sla_total_weight");
+    assert_eq!(a.confusion.tp, b.confusion.tp, "{label}: confusion.tp");
+    assert_eq!(a.confusion.fp, b.confusion.fp, "{label}: confusion.fp");
+    assert_eq!(a.confusion.fn_, b.confusion.fn_, "{label}: confusion.fn");
+    assert_eq!(a.confusion.tn, b.confusion.tn, "{label}: confusion.tn");
+    assert_eq!(a.intervals.len(), b.intervals.len(), "{label}: interval count");
+    for (i, (x, y)) in a.intervals.iter().zip(&b.intervals).enumerate() {
+        assert_eq!(x.t, y.t, "{label}: interval {i} t");
+        assert_eq!(x.energy_kwh, y.energy_kwh, "{label}: interval {i} energy");
+        assert_eq!(x.cpu_util, y.cpu_util, "{label}: interval {i} cpu");
+        assert_eq!(x.ram_util, y.ram_util, "{label}: interval {i} ram");
+        assert_eq!(x.disk_util, y.disk_util, "{label}: interval {i} disk");
+        assert_eq!(x.net_util, y.net_util, "{label}: interval {i} net");
+        assert_eq!(x.contention, y.contention, "{label}: interval {i} contention");
+        assert_eq!(x.active_tasks, y.active_tasks, "{label}: interval {i} active_tasks");
+        assert_eq!(x.hosts_down, y.hosts_down, "{label}: interval {i} hosts_down");
+    }
+}
+
+#[test]
+fn indexed_world_is_bit_identical_for_model_free_techniques() {
+    for technique in [
+        Technique::None,
+        Technique::Late,
+        Technique::Grass,
+        Technique::Dolly,
+        Technique::Sgc,
+        Technique::Wrangler,
+        Technique::NearestFit,
+        Technique::Rpps,
+    ] {
+        let indexed = run_model_free(technique, false);
+        let reference = run_model_free(technique, true);
+        assert!(indexed.tasks_done > 0, "{}: empty run", technique.name());
+        assert_metrics_identical(&indexed, &reference, technique.name());
+    }
+}
+
+#[test]
+fn indexed_world_is_bit_identical_across_seeds_and_faults() {
+    for (seed, fault_rate) in [(7u64, 0.0), (11, 2.5), (23, 0.6)] {
+        let run = |reference: bool| {
+            let mut cfg = parity_cfg(Technique::Grass, reference);
+            cfg.seed = seed;
+            cfg.fault_rate = fault_rate;
+            let manifest = Manifest::load(start_sim::find_artifact_dir())
+                .unwrap_or_else(|_| Manifest::test_default());
+            let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+            Simulation::new(cfg, &manifest, sched, model_free_manager(Technique::Grass)).run()
+        };
+        let label = format!("grass seed={seed} faults={fault_rate}");
+        assert_metrics_identical(&run(false), &run(true), &label);
+    }
+}
+
+#[test]
+fn indexed_world_is_bit_identical_for_model_techniques() {
+    // START / IGRU-SD need the AOT models; covered when artifacts exist.
+    let Ok(models) = Models::load_default() else {
+        eprintln!("skipping model-technique parity: AOT artifacts/PJRT unavailable");
+        return;
+    };
+    for technique in [Technique::Start, Technique::IgruSd] {
+        let run = |reference: bool| {
+            let cfg = parity_cfg(technique, reference);
+            start_sim::coordinator::run_one(&cfg, &models).expect(technique.name())
+        };
+        assert_metrics_identical(&run(false), &run(true), technique.name());
+    }
+}
