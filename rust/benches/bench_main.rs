@@ -8,9 +8,19 @@
 //! paper-scale numbers.
 //!
 //! The `scale` group measures the O(active) world registry against the
-//! seed engine's O(total) reference scans at 1×/10×/50× task counts and
-//! writes machine-readable results to `BENCH_scale.json` (the perf
-//! trajectory the CI workflow archives).
+//! seed engine's O(total) reference scans at 1×/10×/50× task counts; the
+//! `placement` group measures the O(1) load accounting + availability
+//! index (DESIGN.md §9) on a placement-bound profile (large fleet, heavy
+//! arrivals, no faults).  Both write machine-readable results to
+//! `BENCH_scale.json` / `BENCH_placement.json` at the **repo root** (the
+//! perf trajectory tracked per PR).
+//!
+//! Flags (after the optional name filter):
+//!   --fast    run only the 1×/10× cells (the CI profile)
+//!   --check   compare each measured indexed-vs-reference speedup against
+//!             the `min_speedup` floor in the committed baseline file and
+//!             exit non-zero on regression.  Speedup ratios are
+//!             machine-independent, so the floors hold on any runner.
 
 use start_sim::config::{SchedulerKind, SimConfig, Technique};
 use start_sim::coordinator::{run_one, Models};
@@ -20,8 +30,11 @@ use start_sim::predictor::{FeatureExtractor, StartPredictor};
 use start_sim::runtime::{Manifest, StartModel};
 use start_sim::sim::engine::{NullManager, Simulation};
 use start_sim::sim::World;
+use start_sim::util::json::{self, Json};
 use start_sim::util::rng::Pcg;
 use start_sim::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Time `f` with warmup; returns per-iteration seconds (sorted samples).
@@ -50,14 +63,22 @@ fn secs(s: f64) -> std::time::Duration {
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let filter = args.first().cloned().unwrap_or_default();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let fast = raw.iter().any(|a| a == "--fast");
+    let check = raw.iter().any(|a| a == "--check");
+    let filter =
+        raw.iter().find(|a| !a.starts_with('-')).cloned().unwrap_or_default();
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
-    println!("start-sim bench harness (filter: {filter:?})\n");
+    println!("start-sim bench harness (filter: {filter:?}, fast: {fast}, check: {check})\n");
 
+    let mut failures: Vec<String> = Vec::new();
     // ------------------------------------------ O(active) scaling cells
     if run("scale") {
-        scale_benches();
+        scale_benches(fast, check, &mut failures);
+    }
+    // ------------------------------- placement-bound cells (DESIGN.md §9)
+    if run("placement") {
+        placement_benches(fast, check, &mut failures);
     }
     // ---------------------------------------------------- micro benches
     if run("micro") {
@@ -90,6 +111,117 @@ fn main() {
             Err(e) => println!("bench {name}: FAILED: {e:#}"),
         }
     }
+    if !failures.is_empty() {
+        eprintln!("\nbench --check FAILED ({} regression(s)):", failures.len());
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+/// Repo root (one level above the crate): where the committed
+/// `BENCH_*.json` trajectory files live.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Per-cell `min_speedup` floors from a committed baseline file.
+fn load_floors(path: &Path) -> Option<BTreeMap<usize, f64>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = json::parse(&text).ok()?;
+    let mut floors = BTreeMap::new();
+    for cell in doc.get("cells")?.as_arr()? {
+        let scale = cell.get("scale")?.as_usize()?;
+        if let Some(f) = cell.get("min_speedup").and_then(Json::as_f64) {
+            floors.insert(scale, f);
+        }
+    }
+    Some(floors)
+}
+
+/// One measured sweep cell (indexed and reference timings of one config).
+struct CellResult {
+    scale: usize,
+    n_workloads: usize,
+    n_intervals: usize,
+    tasks_done: usize,
+    indexed_s: f64,
+    reference_s: f64,
+}
+
+/// Check measured speedups against the committed floors (read **before**
+/// overwriting the baseline) and rewrite the trajectory file, carrying
+/// each cell's floor forward.
+fn finish_sweep(
+    name: &str,
+    file_name: &str,
+    profile: &str,
+    results: &[CellResult],
+    default_floor: fn(usize) -> f64,
+    check: bool,
+    failures: &mut Vec<String>,
+) {
+    let path = repo_root().join(file_name);
+    let floors = load_floors(&path);
+    if check && floors.is_none() {
+        failures.push(format!(
+            "{name}: no readable committed baseline at {}",
+            path.display()
+        ));
+    }
+    let mut cells = Vec::new();
+    for r in results {
+        let floor = floors
+            .as_ref()
+            .and_then(|f| f.get(&r.scale).copied())
+            .unwrap_or_else(|| default_floor(r.scale));
+        let speedup = r.reference_s / r.indexed_s.max(1e-12);
+        if check && speedup < floor {
+            failures.push(format!(
+                "{name} {}x: indexed-vs-reference speedup {speedup:.2}x regressed below \
+                 the committed floor {floor:.2}x",
+                r.scale
+            ));
+        }
+        cells.push(format!(
+            "    {{\"scale\": {}, \"n_workloads\": {}, \"n_intervals\": {}, \
+             \"tasks_done\": {}, \"indexed_s\": {:.6}, \"reference_s\": {:.6}, \
+             \"speedup\": {speedup:.2}, \"min_speedup\": {floor}}}",
+            r.scale, r.n_workloads, r.n_intervals, r.tasks_done, r.indexed_s, r.reference_s
+        ));
+    }
+    let json_text = format!(
+        "{{\n  \"bench\": \"{name}\",\n  \"unit\": \"seconds_wall\",\n  \"profile\": \
+         \"{profile}\",\n  \"cells\": [\n{}\n  ]\n}}\n",
+        cells.join(",\n")
+    );
+    match std::fs::write(&path, &json_text) {
+        Ok(()) => println!("bench {name}: wrote {}\n", path.display()),
+        Err(e) => println!("bench {name}: could not write {}: {e}\n", path.display()),
+    }
+}
+
+/// Committed floors for the `scale` sweep (mirrors BENCH_scale.json).
+fn scale_floor(scale: usize) -> f64 {
+    match scale {
+        0..=1 => 0.8,
+        2..=10 => 2.0,
+        _ => 5.0,
+    }
+}
+
+/// Committed floors for the `placement` sweep (mirrors
+/// BENCH_placement.json; the 50× floor is the acceptance criterion).
+fn placement_floor(scale: usize) -> f64 {
+    match scale {
+        0..=1 => 0.8,
+        2..=10 => 2.0,
+        _ => 3.0,
+    }
 }
 
 /// One full no-manager simulation; returns best-of-N wall seconds and
@@ -115,12 +247,12 @@ fn run_scale_cell(cfg: &SimConfig, manifest: &Manifest, reference: bool, reps: u
 /// the per-interval *active* population stays flat while *total* tasks
 /// grow — the regime where the indexed registry's O(active) queries beat
 /// the seed engine's O(total) scans asymptotically.
-fn scale_benches() {
+fn scale_benches(fast: bool, check: bool, failures: &mut Vec<String>) {
     let manifest = Manifest::test_default();
-    let mut cells = Vec::new();
-    for &(scale, n_workloads, n_intervals) in
-        &[(1usize, 200usize, 12usize), (10, 2_000, 120), (50, 10_000, 600)]
-    {
+    let all = [(1usize, 200usize, 12usize), (10, 2_000, 120), (50, 10_000, 600)];
+    let cells = if fast { &all[..2] } else { &all[..] };
+    let mut results = Vec::new();
+    for &(scale, n_workloads, n_intervals) in cells {
         let mut cfg = SimConfig::test_defaults();
         cfg.scheduler = SchedulerKind::RoundRobin;
         cfg.n_workloads = n_workloads;
@@ -136,20 +268,58 @@ fn scale_benches() {
             secs(indexed_s),
             secs(reference_s),
         );
-        cells.push(format!(
-            "    {{\"scale\": {scale}, \"n_workloads\": {n_workloads}, \"n_intervals\": {n_intervals}, \
-             \"tasks_done\": {tasks_done}, \"indexed_s\": {indexed_s:.6}, \
-             \"reference_s\": {reference_s:.6}, \"speedup\": {speedup:.2}}}"
-        ));
+        results.push(CellResult { scale, n_workloads, n_intervals, tasks_done, indexed_s, reference_s });
     }
-    let json = format!(
-        "{{\n  \"bench\": \"scale\",\n  \"unit\": \"seconds_wall\",\n  \"cells\": [\n{}\n  ]\n}}\n",
-        cells.join(",\n")
+    let profile = if fast { "fast" } else { "full" };
+    finish_sweep("scale", "BENCH_scale.json", profile, &results, scale_floor, check, failures);
+}
+
+/// The placement-bound sweep: fleet size and arrival pressure grow
+/// together while faults are disabled, so wall time is dominated by
+/// `Scheduler::pick` over the candidate list and the per-candidate
+/// host-load reads.  MinMin maximizes per-candidate work (it scores every
+/// available VM), making this the sharpest probe of the O(1) load
+/// accounting + availability index vs the reference rescans.
+fn placement_benches(fast: bool, check: bool, failures: &mut Vec<String>) {
+    let manifest = Manifest::test_default();
+    // (scale, reps): fleet pm_counts and workload both scale; the 50×
+    // cell is 3500 VMs placing 10k tasks over 10 intervals.
+    let all = [(1usize, 5usize), (10, 3), (50, 2)];
+    let cells = if fast { &all[..2] } else { &all[..] };
+    let mut results = Vec::new();
+    for &(scale, reps) in cells {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.scheduler = SchedulerKind::MinMin;
+        cfg.fault_rate = 0.0;
+        for c in cfg.pm_counts.iter_mut() {
+            *c *= scale;
+        }
+        let n_workloads = 200 * scale;
+        let n_intervals = 10;
+        cfg.n_workloads = n_workloads;
+        cfg.n_intervals = n_intervals;
+        let (indexed_s, tasks_done) = run_scale_cell(&cfg, &manifest, false, reps);
+        let (reference_s, tasks_ref) = run_scale_cell(&cfg, &manifest, true, reps);
+        assert_eq!(tasks_done, tasks_ref, "placement cell {scale}x: mode parity broken");
+        let speedup = reference_s / indexed_s.max(1e-12);
+        println!(
+            "bench placement_{scale}x ({} vms / {n_workloads} tasks)   indexed {:>9.3?}  reference {:>9.3?}  speedup {speedup:>6.1}x",
+            cfg.total_vms(),
+            secs(indexed_s),
+            secs(reference_s),
+        );
+        results.push(CellResult { scale, n_workloads, n_intervals, tasks_done, indexed_s, reference_s });
+    }
+    let profile = if fast { "fast" } else { "full" };
+    finish_sweep(
+        "placement",
+        "BENCH_placement.json",
+        profile,
+        &results,
+        placement_floor,
+        check,
+        failures,
     );
-    match std::fs::write("BENCH_scale.json", &json) {
-        Ok(()) => println!("bench scale: wrote BENCH_scale.json\n"),
-        Err(e) => println!("bench scale: could not write BENCH_scale.json: {e}\n"),
-    }
 }
 
 fn micro_benches() {

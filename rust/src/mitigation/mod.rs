@@ -197,7 +197,7 @@ mod tests {
         });
         assert!(hold(&mut w, id, 50.0));
         assert_eq!(release_held(&mut w), 0);
-        w.now = 50.0;
+        w.advance(50.0);
         assert_eq!(release_held(&mut w), 1);
         assert_eq!(w.task(id).state, TaskState::Pending);
         w.assert_consistent();

@@ -7,11 +7,18 @@
 //! TD(0) critic, rewarded with negative normalized response time.  Random
 //! placement (used to diversify training data in §4.4), round-robin and
 //! min-min are also provided.
+//!
+//! All policies draw candidates from `World::available_vms` — the
+//! availability index (DESIGN.md §9) — and score them with the world's
+//! O(1) per-host load aggregates, so a `pick` costs O(available) (or
+//! O(log available) for round-robin) instead of rescanning every VM and
+//! every resident task on each candidate's host.
 
 use crate::config::SchedulerKind;
 use crate::sim::types::*;
 use crate::sim::world::World;
 use crate::util::rng::Pcg;
+use std::collections::{HashMap, VecDeque};
 
 /// Placement policy interface.
 pub trait Scheduler: Send {
@@ -32,13 +39,10 @@ pub fn build(kind: SchedulerKind, rng: Pcg) -> Box<dyn Scheduler> {
     }
 }
 
-fn available_vms(w: &World) -> impl Iterator<Item = VmId> + '_ {
-    (0..w.vms.len()).filter(|&v| w.vm_available(v))
-}
-
 // ---------------------------------------------------------------- Random
 
-/// Uniform random placement over available VMs.
+/// Uniform random placement over available VMs: one index into the
+/// availability slice, no candidate Vec.
 pub struct RandomScheduler {
     rng: Pcg,
 }
@@ -49,7 +53,7 @@ impl Scheduler for RandomScheduler {
     }
 
     fn pick(&mut self, w: &World, _task: TaskId) -> Option<VmId> {
-        let candidates: Vec<VmId> = available_vms(w).collect();
+        let candidates = w.available_vms();
         if candidates.is_empty() {
             None
         } else {
@@ -71,15 +75,17 @@ impl Scheduler for RoundRobin {
     }
 
     fn pick(&mut self, w: &World, _task: TaskId) -> Option<VmId> {
-        let n = w.vms.len();
-        for i in 0..n {
-            let v = (self.next + i) % n;
-            if w.vm_available(v) {
-                self.next = v + 1;
-                return Some(v);
-            }
+        // The availability slice is ascending, so the cyclic scan from
+        // `next` collapses to one binary search: first available VM with
+        // id >= next, wrapping to the smallest available id.
+        let avail = w.available_vms();
+        if avail.is_empty() {
+            return None;
         }
-        None
+        let i = avail.partition_point(|&v| v < self.next);
+        let v = if i < avail.len() { avail[i] } else { avail[0] };
+        self.next = v + 1;
+        Some(v)
     }
 }
 
@@ -97,7 +103,7 @@ impl Scheduler for MinMin {
     fn pick(&mut self, w: &World, task: TaskId) -> Option<VmId> {
         let demand = w.task(task).demand.mips;
         let mut best: Option<(f64, VmId)> = None;
-        for v in available_vms(w) {
+        for &v in w.available_vms().iter() {
             let vm = &w.vms[v];
             let n_tasks = vm.tasks.len() as f64;
             let share = vm.mips / (n_tasks + 1.0);
@@ -116,6 +122,11 @@ impl Scheduler for MinMin {
 
 const N_FEAT: usize = 6;
 
+/// Most pending-gradient entries retained; beyond this the oldest (by
+/// first placement) are evicted — tasks that never report a response
+/// (lost to kills/reruns) must not pin memory forever.
+const MAX_PENDING: usize = 4096;
+
 /// Online actor-critic surrogate of A3C-R2N2 [32].
 ///
 /// Features per (task, VM) pair: host CPU util, VM queue depth, MIPS fit,
@@ -129,14 +140,35 @@ pub struct A3cScheduler {
     /// Critic weights.
     v: [f64; N_FEAT],
     lr: f64,
-    /// Pending gradients keyed by task: (features of the chosen VM, mean
-    /// features across candidates, value estimate).
-    pending: Vec<(TaskId, [f64; N_FEAT], [f64; N_FEAT])>,
+    /// Pending gradients keyed by task id for O(1) feedback lookup:
+    /// (features of the chosen VM, mean features across candidates).
+    /// A re-picked task (rerun/restart) overwrites its entry — feedback
+    /// applies to the newest placement.
+    pending: HashMap<TaskId, ([f64; N_FEAT], [f64; N_FEAT])>,
+    /// Insertion order of first placement, driving FIFO eviction.  May
+    /// hold ids already consumed by `feedback` (or re-picked); those are
+    /// skipped lazily and compacted when the queue outgrows the map.
+    pending_fifo: VecDeque<TaskId>,
+    // Per-pick scratch buffers, reused across calls so a pick allocates
+    // nothing in steady state.
+    cand_buf: Vec<VmId>,
+    feat_buf: Vec<[f64; N_FEAT]>,
+    exp_buf: Vec<f64>,
 }
 
 impl A3cScheduler {
     pub fn new(rng: Pcg) -> Self {
-        Self { rng, w: [0.0; N_FEAT], v: [0.0; N_FEAT], lr: 0.05, pending: Vec::new() }
+        Self {
+            rng,
+            w: [0.0; N_FEAT],
+            v: [0.0; N_FEAT],
+            lr: 0.05,
+            pending: HashMap::new(),
+            pending_fifo: VecDeque::new(),
+            cand_buf: Vec::new(),
+            feat_buf: Vec::new(),
+            exp_buf: Vec::new(),
+        }
     }
 
     fn features(w: &World, task: TaskId, vm: VmId) -> [f64; N_FEAT] {
@@ -168,26 +200,37 @@ impl Scheduler for A3cScheduler {
     }
 
     fn pick(&mut self, w: &World, task: TaskId) -> Option<VmId> {
-        // Sample up to 32 candidates to bound per-decision cost.
-        let mut candidates: Vec<VmId> = available_vms(w).collect();
-        if candidates.is_empty() {
+        // Sample up to 32 candidates to bound per-decision cost.  The
+        // candidate list is copied into a reused scratch buffer (the RNG
+        // shuffle needs ownership); features and softmax terms likewise
+        // reuse their buffers, so steady-state picks allocate nothing.
+        self.cand_buf.clear();
+        self.cand_buf.extend_from_slice(&w.available_vms());
+        if self.cand_buf.is_empty() {
             return None;
         }
-        if candidates.len() > 32 {
-            self.rng.shuffle(&mut candidates);
-            candidates.truncate(32);
+        if self.cand_buf.len() > 32 {
+            self.rng.shuffle(&mut self.cand_buf);
+            self.cand_buf.truncate(32);
         }
-        let feats: Vec<[f64; N_FEAT]> = candidates
-            .iter()
-            .map(|&v| Self::features(w, task, v))
-            .collect();
-        let scores: Vec<f64> = feats.iter().map(|f| self.score(f)).collect();
-        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let exps: Vec<f64> = scores.iter().map(|s| (s - max).exp()).collect();
-        let total: f64 = exps.iter().sum();
+        self.feat_buf.clear();
+        for &v in &self.cand_buf {
+            self.feat_buf.push(Self::features(w, task, v));
+        }
+        // Scores are written into the exp buffer, then exponentiated in
+        // place once the max is known (same arithmetic as two passes).
+        self.exp_buf.clear();
+        for f in &self.feat_buf {
+            self.exp_buf.push(self.score(f));
+        }
+        let max = self.exp_buf.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for s in self.exp_buf.iter_mut() {
+            *s = (*s - max).exp();
+        }
+        let total: f64 = self.exp_buf.iter().sum();
         let mut pick = self.rng.f64() * total;
-        let mut chosen = candidates.len() - 1;
-        for (i, e) in exps.iter().enumerate() {
+        let mut chosen = self.cand_buf.len() - 1;
+        for (i, e) in self.exp_buf.iter().enumerate() {
             pick -= e;
             if pick <= 0.0 {
                 chosen = i;
@@ -196,23 +239,29 @@ impl Scheduler for A3cScheduler {
         }
         // Mean features = softmax-expected gradient baseline term.
         let mut mean = [0.0; N_FEAT];
-        for (f, e) in feats.iter().zip(&exps) {
+        for (f, e) in self.feat_buf.iter().zip(&self.exp_buf) {
             for k in 0..N_FEAT {
                 mean[k] += f[k] * e / total;
             }
         }
-        self.pending.push((task, feats[chosen], mean));
-        if self.pending.len() > 4096 {
-            self.pending.drain(..2048);
+        self.pending.insert(task, (self.feat_buf[chosen], mean));
+        self.pending_fifo.push_back(task);
+        while self.pending.len() > MAX_PENDING {
+            let Some(old) = self.pending_fifo.pop_front() else { break };
+            self.pending.remove(&old);
         }
-        Some(candidates[chosen])
+        if self.pending_fifo.len() > 2 * MAX_PENDING {
+            // Compact ids already consumed by feedback / overwritten picks.
+            let live = &self.pending;
+            self.pending_fifo.retain(|t| live.contains_key(t));
+        }
+        Some(self.cand_buf[chosen])
     }
 
     fn feedback(&mut self, _w: &World, task: TaskId, response_norm: f64) {
-        let Some(pos) = self.pending.iter().position(|(t, _, _)| *t == task) else {
+        let Some((chosen, mean)) = self.pending.remove(&task) else {
             return;
         };
-        let (_, chosen, mean) = self.pending.swap_remove(pos);
         let reward = -response_norm.min(10.0);
         let value: f64 = self.v.iter().zip(&chosen).map(|(v, x)| v * x).sum();
         let advantage = reward - value;
@@ -275,7 +324,7 @@ mod tests {
     fn no_scheduler_places_on_down_fleet() {
         let (mut w, t) = world_with_pending_task();
         for h in 0..w.hosts.len() {
-            w.hosts[h].down_until = Some(1e12);
+            w.set_host_down(h, 1e12);
         }
         for kind in [
             SchedulerKind::Random,

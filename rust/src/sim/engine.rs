@@ -473,15 +473,15 @@ impl Simulation {
         match fault {
             Fault::Host { pick, intervals } => {
                 let h = pick % self.world.hosts.len();
-                let downtime = intervals as f64 * self.cfg.interval_s;
-                self.world.hosts[h].down_until = Some(self.world.now + downtime);
+                let until = self.world.now + intervals as f64 * self.cfg.interval_s;
+                self.world.set_host_down(h, until);
                 // Every task running there restarts (paper §1: node failure
-                // ⇒ re-execute its tasks).
-                let victims: Vec<TaskId> = self.world.hosts[h]
-                    .vms
-                    .iter()
-                    .flat_map(|&v| self.world.vms[v].tasks.clone())
-                    .collect();
+                // ⇒ re-execute its tasks).  Victims are gathered with one
+                // flat copy per VM task list — no per-VM Vec clones.
+                let mut victims: Vec<TaskId> = Vec::new();
+                for &v in &self.world.hosts[h].vms {
+                    victims.extend_from_slice(&self.world.vms[v].tasks);
+                }
                 for t in victims {
                     self.world.reset_task(t, 30.0);
                 }
@@ -500,7 +500,8 @@ impl Simulation {
             }
             Fault::VmCreation { pick } => {
                 let v = pick % self.world.vms.len();
-                self.world.vms[v].ready_at = self.world.now + self.cfg.interval_s;
+                let ready = self.world.now + self.cfg.interval_s;
+                self.world.set_vm_ready_at(v, ready);
             }
         }
     }

@@ -295,7 +295,7 @@ mod tests {
         let (mut w, _) = world_with_task();
         let n = w.hosts.len();
         for h in 0..n - 1 {
-            w.hosts[h].down_until = Some(1e9);
+            w.set_host_down(h, 1e9);
         }
         let mut rm = RunMetrics::default();
         rm.snapshot(&w, 300.0);

@@ -10,15 +10,29 @@
 //! query (`advance`, `next_finish_time`, placement, metrics, drain check)
 //! is O(active) instead of O(total tasks ever created).
 //!
+//! Resource-load queries are **incrementally accounted** (DESIGN.md §9):
+//! every VM carries cached demand subtotals (`ResLoad`) recomputed with
+//! the reference arithmetic whenever its resident task set changes, and
+//! every host carries the fold of its VMs' subtotals in `host.vms` order,
+//! so `host_cpu_util` / `host_ram_util` / `host_disk_util` /
+//! `host_bw_util` / `host_task_count` are O(1) reads instead of rescans
+//! of every task on the host.  An **availability index** (member set +
+//! wake-time heap + sorted cache, advanced as `now` moves) makes
+//! `available_vms` enumerate only placeable VMs instead of filtering
+//! `0..vms.len()`.
+//!
 //! The arenas are private: consumers go through the typed accessors
 //! (`pending()`, `running()`, `active_jobs()`, `task()`, `job()`, …) and
 //! all state transitions go through world methods so the indexes can never
-//! drift from task state.  `SimConfig::reference_scans` flips every query
-//! back to the pre-index O(total) full scans — the golden-parity test and
-//! the `scale` benchmark run both modes and compare.
+//! drift from task state.  Host up/down and VM readiness changes likewise
+//! go through `set_host_down` / `set_vm_ready_at`.
+//! `SimConfig::reference_scans` flips every query back to the pre-index
+//! O(total)/O(fleet) full scans — the golden-parity test and the `scale`
+//! and `placement` benchmarks run both modes and compare.
 
 use crate::config::SimConfig;
 use crate::sim::types::*;
+use std::borrow::Cow;
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap};
 
@@ -97,6 +111,23 @@ impl Ord for EtaKey {
     }
 }
 
+/// Cached resource-demand subtotal for one VM (or the fold of a host's
+/// VMs).  `mips` is the fair-share-capped CPU demand (`vm_demand`);
+/// ram/disk/bw are plain sums of resident task demand.
+///
+/// Bit-exactness contract: a VM's subtotal is always **recomputed from
+/// scratch** with the reference arithmetic when its task set changes
+/// (never adjusted by ±delta, which would drift under float
+/// non-associativity), and a host's aggregate is re-folded over
+/// `host.vms` order — the exact grouping the reference scans use.
+#[derive(Clone, Copy, Default, PartialEq, Debug)]
+struct ResLoad {
+    mips: f64,
+    ram_gb: f64,
+    disk_gb: f64,
+    bw_kbps: f64,
+}
+
 /// Entity storage + derived execution rates.
 pub struct World {
     pub now: f64,
@@ -138,6 +169,27 @@ pub struct World {
     /// valid exactly while `!rates_dirty` (etas are time-invariant under
     /// constant rates).
     finish_heap: BinaryHeap<Reverse<(EtaKey, TaskId)>>,
+    // --------------------------------------------- load accounting (§9)
+    /// Per-VM cached demand subtotals, refreshed whenever the VM's task
+    /// set changes (place/complete/kill/reset/hold-release).
+    vm_load: Vec<ResLoad>,
+    /// Per-host fold of its VMs' subtotals in `host.vms` order.
+    host_load: Vec<ResLoad>,
+    /// Per-host resident-task counter (`host_task_count` in O(1)).
+    host_tasks: Vec<usize>,
+    // ------------------------------------------- availability index (§9)
+    /// VMs currently placeable (`vm_available`): ready and on an up host.
+    avail_set: IdSet,
+    /// `avail_set` in ascending id order — the exact candidate order of
+    /// the reference `0..vms.len()` filter scan.  Rebuilt only when the
+    /// set changed (`avail_dirty`), so steady-state queries are O(1).
+    avail_sorted: Vec<VmId>,
+    avail_dirty: bool,
+    /// Min-heap of (wake time, vm) for VMs that left the available set:
+    /// wake = max(ready_at, down_until).  Popped as `now` advances.
+    /// Duplicates are allowed (a VM hit by several faults pushes several
+    /// entries); stale pops are filtered against live state.
+    suspend_heap: BinaryHeap<Reverse<(EtaKey, VmId)>>,
 }
 
 impl World {
@@ -178,6 +230,14 @@ impl World {
                 hosts.push(host);
             }
         }
+        // At t = 0 every VM is ready (`ready_at == 0.0`) on an up host,
+        // so the availability index starts full.
+        let n_vms = vms.len();
+        let n_hosts = hosts.len();
+        let mut avail_set = IdSet::default();
+        for v in 0..n_vms {
+            avail_set.insert(v);
+        }
         World {
             now: 0.0,
             hosts,
@@ -200,6 +260,13 @@ impl World {
             live_clones: 0,
             active_clone: HashMap::new(),
             finish_heap: BinaryHeap::new(),
+            vm_load: vec![ResLoad::default(); n_vms],
+            host_load: vec![ResLoad::default(); n_hosts],
+            host_tasks: vec![0; n_hosts],
+            avail_set,
+            avail_sorted: (0..n_vms).collect(),
+            avail_dirty: false,
+            suspend_heap: BinaryHeap::new(),
         }
     }
 
@@ -491,66 +558,228 @@ impl World {
         v.ready_at <= self.now && self.hosts[v.host].is_up(self.now)
     }
 
-    /// Sum of task MIPS demand currently on a VM (capped per task by fair share).
+    /// Sum of task MIPS demand currently on a VM (capped per task by fair
+    /// share).  O(1) via the cached subtotal; reference mode recomputes.
     fn vm_demand(&self, vm: VmId) -> f64 {
-        let v = &self.vms[vm];
-        let n = v.tasks.len().max(1) as f64;
-        let fair = v.mips / n;
-        v.tasks
-            .iter()
-            .map(|&t| self.tasks[t].demand.mips.min(fair).max(1.0))
-            .sum()
+        if self.reference_scans {
+            let v = &self.vms[vm];
+            let n = v.tasks.len().max(1) as f64;
+            let fair = v.mips / n;
+            return v
+                .tasks
+                .iter()
+                .map(|&t| self.tasks[t].demand.mips.min(fair).max(1.0))
+                .sum();
+        }
+        self.vm_load[vm].mips
     }
 
     /// Host CPU utilization in [0, 1] including background + reserved load.
+    /// O(1) via the per-host aggregate; reference mode re-sums per VM.
     pub fn host_cpu_util(&self, host: HostId) -> f64 {
         let h = &self.hosts[host];
         if !h.is_up(self.now) {
             return 0.0;
         }
-        let demand: f64 = h.vms.iter().map(|&v| self.vm_demand(v)).sum();
+        let demand: f64 = if self.reference_scans {
+            h.vms.iter().map(|&v| self.vm_demand(v)).sum()
+        } else {
+            self.host_load[host].mips
+        };
         (demand / h.mips_total + h.background_load + self.reserved_util).min(1.0)
     }
 
-    /// Host RAM utilization in [0, 1].
+    /// Host RAM utilization in [0, 1].  Both modes group the sum per VM
+    /// (subtotal-then-fold) so the arithmetic is bitwise shared.
     pub fn host_ram_util(&self, host: HostId) -> f64 {
         let h = &self.hosts[host];
-        let used: f64 = h
-            .vms
-            .iter()
-            .flat_map(|&v| self.vms[v].tasks.iter())
-            .map(|&t| self.tasks[t].demand.ram_gb)
-            .sum();
+        let used: f64 = if self.reference_scans {
+            // Grouped per VM (not one flat sum over all host tasks) so the
+            // fold order matches the indexed subtotal-then-aggregate path.
+            h.vms
+                .iter()
+                .map(|&v| {
+                    self.vms[v].tasks.iter().map(|&t| self.tasks[t].demand.ram_gb).sum::<f64>()
+                })
+                .sum()
+        } else {
+            self.host_load[host].ram_gb
+        };
         (used / h.ram_gb + 0.5 * h.background_load + 0.5 * self.reserved_util).min(1.0)
     }
 
     /// Host disk utilization in [0, 1].
     pub fn host_disk_util(&self, host: HostId) -> f64 {
         let h = &self.hosts[host];
-        let used: f64 = h
-            .vms
-            .iter()
-            .flat_map(|&v| self.vms[v].tasks.iter())
-            .map(|&t| self.tasks[t].demand.disk_gb)
-            .sum();
+        let used: f64 = if self.reference_scans {
+            h.vms
+                .iter()
+                .map(|&v| {
+                    self.vms[v].tasks.iter().map(|&t| self.tasks[t].demand.disk_gb).sum::<f64>()
+                })
+                .sum()
+        } else {
+            self.host_load[host].disk_gb
+        };
         (used / h.disk_gb + 0.3 * self.reserved_util).min(1.0)
     }
 
     /// Host network utilization in [0, 1].
     pub fn host_bw_util(&self, host: HostId) -> f64 {
         let h = &self.hosts[host];
-        let used: f64 = h
-            .vms
-            .iter()
-            .flat_map(|&v| self.vms[v].tasks.iter())
-            .map(|&t| self.tasks[t].demand.bw_kbps)
-            .sum();
+        let used: f64 = if self.reference_scans {
+            h.vms
+                .iter()
+                .map(|&v| {
+                    self.vms[v].tasks.iter().map(|&t| self.tasks[t].demand.bw_kbps).sum::<f64>()
+                })
+                .sum()
+        } else {
+            self.host_load[host].bw_kbps
+        };
         (used / h.bw_kbps.max(1e-9) + 0.3 * self.reserved_util).min(1.0)
     }
 
-    /// Number of running tasks on a host.
+    /// Number of resident tasks on a host (counter-backed).
     pub fn host_task_count(&self, host: HostId) -> usize {
-        self.hosts[host].vms.iter().map(|&v| self.vms[v].tasks.len()).sum()
+        if self.reference_scans {
+            return self.hosts[host].vms.iter().map(|&v| self.vms[v].tasks.len()).sum();
+        }
+        self.host_tasks[host]
+    }
+
+    // ------------------------------------------------- load accounting
+
+    /// Reference-arithmetic demand subtotal of one VM: fair-share-capped
+    /// MIPS plus plain ram/disk/bw sums, folded in `vm.tasks` order.
+    /// This is the **single definition** both modes share — the indexed
+    /// caches are always produced by this exact fold.
+    fn compute_vm_load(&self, vm: VmId) -> ResLoad {
+        let v = &self.vms[vm];
+        let n = v.tasks.len().max(1) as f64;
+        let fair = v.mips / n;
+        let mut l = ResLoad::default();
+        for &t in &v.tasks {
+            let d = &self.tasks[t].demand;
+            l.mips += d.mips.min(fair).max(1.0);
+            l.ram_gb += d.ram_gb;
+            l.disk_gb += d.disk_gb;
+            l.bw_kbps += d.bw_kbps;
+        }
+        l
+    }
+
+    /// Refresh one VM's cached subtotal and re-fold its host's aggregate
+    /// (in `host.vms` order, matching the reference grouping bit for bit).
+    /// Called on every task placement/detachment; O(tasks-on-vm +
+    /// vms-on-host), independent of fleet size.
+    fn refresh_vm_load(&mut self, vm: VmId) {
+        self.vm_load[vm] = self.compute_vm_load(vm);
+        let host = self.vms[vm].host;
+        let mut agg = ResLoad::default();
+        for &v in &self.hosts[host].vms {
+            let l = &self.vm_load[v];
+            agg.mips += l.mips;
+            agg.ram_gb += l.ram_gb;
+            agg.disk_gb += l.disk_gb;
+            agg.bw_kbps += l.bw_kbps;
+        }
+        self.host_load[host] = agg;
+    }
+
+    // ----------------------------------------------- availability index
+
+    /// Absolute time at which a VM (re)enters the available set: the later
+    /// of its readiness and its host's recovery.  `<= now` iff available.
+    fn vm_wake_time(&self, vm: VmId) -> f64 {
+        let v = &self.vms[vm];
+        v.ready_at.max(self.hosts[v.host].down_until.unwrap_or(f64::NEG_INFINITY))
+    }
+
+    /// Reconcile one VM's membership in the availability index with its
+    /// live state; schedules a wake-up when it is currently unavailable.
+    fn refresh_vm_availability(&mut self, vm: VmId) {
+        if self.reference_scans {
+            return;
+        }
+        if self.vm_available(vm) {
+            if self.avail_set.insert(vm) {
+                self.avail_dirty = true;
+            }
+        } else {
+            if self.avail_set.remove(vm) {
+                self.avail_dirty = true;
+            }
+            // Wake time is strictly in the future whenever the VM is
+            // unavailable, so re-popping the same entry cannot loop.
+            self.suspend_heap.push(Reverse((EtaKey(self.vm_wake_time(vm)), vm)));
+        }
+    }
+
+    /// Rebuild the sorted candidate cache if membership changed.
+    fn rebuild_avail_cache(&mut self) {
+        if self.avail_dirty {
+            self.avail_sorted = self.avail_set.sorted();
+            self.avail_dirty = false;
+        }
+    }
+
+    /// Pop matured wake-ups as `now` advances and re-admit their VMs.
+    /// Stale entries (VM re-suspended with a later wake, or already
+    /// re-admitted via an earlier duplicate) are filtered by re-checking
+    /// live state.
+    fn sync_availability(&mut self) {
+        if self.reference_scans {
+            return;
+        }
+        while let Some(&Reverse((EtaKey(wake), vm))) = self.suspend_heap.peek() {
+            if wake > self.now {
+                break;
+            }
+            self.suspend_heap.pop();
+            if !self.avail_set.contains(vm) {
+                self.refresh_vm_availability(vm);
+            }
+        }
+        self.rebuild_avail_cache();
+    }
+
+    /// Take a host down until `until`, updating the availability index.
+    /// All host up/down transitions must go through here (not by writing
+    /// `down_until` directly) so the index cannot drift.
+    // Index loop splits the borrow of `hosts[host].vms` from the `&mut
+    // self` availability refresh, as in `recompute_rates`.
+    #[allow(clippy::needless_range_loop)]
+    pub fn set_host_down(&mut self, host: HostId, until: f64) {
+        self.hosts[host].down_until = Some(until);
+        if !self.reference_scans {
+            for vi in 0..self.hosts[host].vms.len() {
+                let vm = self.hosts[host].vms[vi];
+                self.refresh_vm_availability(vm);
+            }
+            self.rebuild_avail_cache();
+        }
+    }
+
+    /// Set a VM's readiness time, updating the availability index.
+    pub fn set_vm_ready_at(&mut self, vm: VmId, ready_at: f64) {
+        self.vms[vm].ready_at = ready_at;
+        if !self.reference_scans {
+            self.refresh_vm_availability(vm);
+            self.rebuild_avail_cache();
+        }
+    }
+
+    /// Currently placeable VMs in ascending id order — the scheduler
+    /// candidate list.  Indexed mode borrows the cached slice (O(1) when
+    /// availability is unchanged); reference mode materializes the seed's
+    /// full filter scan.  Content and order are identical, so downstream
+    /// RNG streams (Random/A3C sampling) cannot diverge between modes.
+    pub fn available_vms(&self) -> Cow<'_, [VmId]> {
+        if self.reference_scans {
+            return Cow::Owned((0..self.vms.len()).filter(|&v| self.vm_available(v)).collect());
+        }
+        Cow::Borrowed(&self.avail_sorted)
     }
 
     // --------------------------------------------------------- placement
@@ -570,6 +799,10 @@ impl World {
         }
         self.vms[vm].tasks.push(task);
         self.rates_dirty = true;
+        if !self.reference_scans {
+            self.host_tasks[self.vms[vm].host] += 1;
+            self.refresh_vm_load(vm);
+        }
     }
 
     /// Remove a task from its VM (completion, kill, restart).
@@ -577,6 +810,10 @@ impl World {
         if let Some(vm) = self.tasks[task].vm.take() {
             self.vms[vm].tasks.retain(|&t| t != task);
             self.rates_dirty = true;
+            if !self.reference_scans {
+                self.host_tasks[self.vms[vm].host] -= 1;
+                self.refresh_vm_load(vm);
+            }
         }
     }
 
@@ -681,7 +918,11 @@ impl World {
             if !host.is_up(self.now) {
                 continue;
             }
-            let demand: f64 = host.vms.iter().map(|&v| self.vm_demand(v)).sum();
+            let demand: f64 = if self.reference_scans {
+                host.vms.iter().map(|&v| self.vm_demand(v)).sum()
+            } else {
+                self.host_load[h].mips
+            };
             if demand <= 0.0 {
                 continue;
             }
@@ -790,6 +1031,10 @@ impl World {
         }
         let dt = (to - self.now).max(0.0);
         self.now = to;
+        // Re-admit VMs whose ready/recovery time has now passed.  `now`
+        // only moves here, so the availability index is exact at every
+        // query point.
+        self.sync_availability();
         if dt == 0.0 {
             return Vec::new();
         }
@@ -833,12 +1078,12 @@ impl World {
     /// Pick the up-VM on the host with the lowest straggler moving average
     /// (the paper's mitigation target choice), breaking ties toward
     /// unloaded hosts so mitigation does not itself create contention.
+    /// Candidates come from the availability index (ascending id — the
+    /// order the pre-index `0..vms.len()` filter produced), and the
+    /// per-host key reads the O(1) aggregates.
     pub fn best_mitigation_vm(&self, exclude_host: Option<HostId>) -> Option<VmId> {
         let mut best: Option<((i64, i64, usize), VmId)> = None;
-        for v in 0..self.vms.len() {
-            if !self.vm_available(v) {
-                continue;
-            }
+        for &v in self.available_vms().iter() {
             let host = self.vms[v].host;
             if Some(host) == exclude_host {
                 continue;
@@ -957,6 +1202,47 @@ impl World {
                 );
             }
         }
+        // Load accounting + availability index (maintained only in indexed
+        // mode).  Loads must match a from-scratch recount **bitwise** —
+        // the caches are defined as the reference fold, not an
+        // approximation of it.
+        if !self.reference_scans {
+            for v in 0..self.vms.len() {
+                let expect = self.compute_vm_load(v);
+                assert!(
+                    self.vm_load[v] == expect,
+                    "vm {v} load drift: cached {:?} recount {expect:?}",
+                    self.vm_load[v]
+                );
+            }
+            for h in 0..self.hosts.len() {
+                let mut agg = ResLoad::default();
+                let mut ntasks = 0usize;
+                for &v in &self.hosts[h].vms {
+                    let l = self.compute_vm_load(v);
+                    agg.mips += l.mips;
+                    agg.ram_gb += l.ram_gb;
+                    agg.disk_gb += l.disk_gb;
+                    agg.bw_kbps += l.bw_kbps;
+                    ntasks += self.vms[v].tasks.len();
+                }
+                assert!(
+                    self.host_load[h] == agg,
+                    "host {h} load drift: cached {:?} recount {agg:?}",
+                    self.host_load[h]
+                );
+                assert_eq!(self.host_tasks[h], ntasks, "host {h} task-counter drift");
+            }
+            // The availability index is exact whenever `now` last moved
+            // through `advance` (which syncs) — tests that poke `now`
+            // directly must not call this.
+            let avail: Vec<VmId> =
+                (0..self.vms.len()).filter(|&v| self.vm_available(v)).collect();
+            assert_eq!(self.avail_set.sorted(), avail, "availability set drift");
+            if !self.avail_dirty {
+                assert_eq!(self.avail_sorted, avail, "availability cache drift");
+            }
+        }
     }
 }
 
@@ -1073,10 +1359,91 @@ mod tests {
         let mut w = world();
         let t = add_task(&mut w, 0, 1000.0, 100.0);
         w.start_task(t, 0, 1.0);
-        w.hosts[w.vms[0].host].down_until = Some(1e9);
+        let h = w.vms[0].host;
+        w.set_host_down(h, 1e9);
         w.mark_rates_dirty();
         assert_eq!(w.task_rate(t), 0.0);
         assert!(w.next_finish_time().is_none());
+        w.assert_consistent();
+    }
+
+    #[test]
+    fn availability_index_tracks_downtime_and_readiness() {
+        let mut w = world();
+        let n = w.vms.len();
+        assert_eq!(w.available_vms().len(), n, "all VMs available at t=0");
+
+        // Host goes down: its VMs leave the candidate list immediately.
+        let h = w.vms[0].host;
+        let on_host = w.hosts[h].vms.len();
+        w.set_host_down(h, 40.0);
+        assert_eq!(w.available_vms().len(), n - on_host);
+        assert!(!w.vm_available(0));
+        w.assert_consistent();
+
+        // A VM elsewhere becomes unready.
+        let other = *w.hosts[h + 1].vms.first().unwrap();
+        w.set_vm_ready_at(other, 25.0);
+        assert_eq!(w.available_vms().len(), n - on_host - 1);
+        w.assert_consistent();
+
+        // Advancing past the wake times re-admits, in ascending id order.
+        w.advance(30.0);
+        assert!(w.vm_available(other));
+        assert_eq!(w.available_vms().len(), n - on_host);
+        w.advance(45.0);
+        let avail = w.available_vms().into_owned();
+        assert_eq!(avail.len(), n);
+        assert!(avail.windows(2).all(|p| p[0] < p[1]), "ascending order");
+        w.assert_consistent();
+    }
+
+    #[test]
+    fn overlapping_host_faults_keep_latest_recovery() {
+        let mut w = world();
+        let h = w.vms[0].host;
+        // Second fault extends the outage; the first wake entry is stale.
+        w.set_host_down(h, 20.0);
+        w.set_host_down(h, 60.0);
+        w.advance(25.0);
+        assert!(!w.vm_available(0), "stale wake must not re-admit");
+        w.assert_consistent();
+        // And a shortened outage re-admits at the earlier time.
+        w.set_host_down(h, 30.0);
+        w.advance(31.0);
+        assert!(w.vm_available(0));
+        w.assert_consistent();
+    }
+
+    #[test]
+    fn load_aggregates_match_reference_arithmetic() {
+        let mut w = world();
+        let mut r = world();
+        r.reference_scans = true;
+        for (i, vm) in [(0usize, 0usize), (1, 0), (2, 1), (3, 4)] {
+            let len = 1000.0 + 7.0 * i as f64;
+            let mips = 90.0 + 13.0 * i as f64;
+            let a = add_task(&mut w, 0, len, mips);
+            let b = add_task(&mut r, 0, len, mips);
+            assert_eq!(a, b);
+            w.start_task(a, vm, 1.0);
+            r.start_task(b, vm, 1.0);
+        }
+        for h in 0..w.hosts.len() {
+            assert_eq!(w.host_cpu_util(h), r.host_cpu_util(h), "cpu host {h}");
+            assert_eq!(w.host_ram_util(h), r.host_ram_util(h), "ram host {h}");
+            assert_eq!(w.host_disk_util(h), r.host_disk_util(h), "disk host {h}");
+            assert_eq!(w.host_bw_util(h), r.host_bw_util(h), "bw host {h}");
+            assert_eq!(w.host_task_count(h), r.host_task_count(h), "count host {h}");
+        }
+        // Detach one and re-check: subtotals are recomputed, not drifted.
+        w.complete_task(1);
+        r.complete_task(1);
+        for h in 0..w.hosts.len() {
+            assert_eq!(w.host_cpu_util(h), r.host_cpu_util(h), "cpu after detach {h}");
+            assert_eq!(w.host_ram_util(h), r.host_ram_util(h), "ram after detach {h}");
+        }
+        w.assert_consistent();
     }
 
     #[test]
@@ -1278,7 +1645,7 @@ mod tests {
                 });
             }
             for _ in 0..150 {
-                match rng.below(8) {
+                match rng.below(11) {
                     0 => {
                         // place a pending task
                         let p = w.pending();
@@ -1331,7 +1698,7 @@ mod tests {
                             let _ = crate::mitigation::speculate(&mut w, t, rng.range(1.0, 3.0));
                         }
                     }
-                    _ => {
+                    7 => {
                         // close out jobs whose tasks are all inactive
                         let jobs = w.active_jobs();
                         for j in jobs {
@@ -1340,18 +1707,66 @@ mod tests {
                             }
                         }
                     }
+                    8 => {
+                        // host fault (possibly overlapping a live outage)
+                        let h = rng.below(w.hosts.len());
+                        let until = w.now + rng.range(1.0, 80.0);
+                        w.set_host_down(h, until);
+                        w.mark_rates_dirty();
+                    }
+                    9 => {
+                        // VM readiness delay (VmCreation-style fault)
+                        let v = rng.below(w.vms.len());
+                        let at = w.now + rng.range(1.0, 50.0);
+                        w.set_vm_ready_at(v, at);
+                    }
+                    _ => {
+                        // background-load shift (rate-change event)
+                        let h = rng.below(w.hosts.len());
+                        w.hosts[h].background_load = rng.range(0.0, 0.6);
+                        w.mark_rates_dirty();
+                    }
                 }
                 w.assert_consistent();
             }
-            // Accessors agree with a forced reference re-scan.
+            // Accessors agree with a forced reference re-scan — including
+            // the load aggregates and the availability index, bitwise.
             let pend = w.pending();
             let run = w.running();
             let held = w.held();
             let jobs = w.active_jobs();
+            let avail = w.available_vms().into_owned();
+            let utils: Vec<(f64, f64, f64, f64, usize)> = (0..w.hosts.len())
+                .map(|h| {
+                    (
+                        w.host_cpu_util(h),
+                        w.host_ram_util(h),
+                        w.host_disk_util(h),
+                        w.host_bw_util(h),
+                        w.host_task_count(h),
+                    )
+                })
+                .collect();
             w.reference_scans = true;
             if pend != w.pending() || run != w.running() || held != w.held() || jobs != w.active_jobs()
             {
                 return Err("indexed accessors disagree with reference scans".into());
+            }
+            if avail != w.available_vms().into_owned() {
+                return Err("availability index disagrees with reference scan".into());
+            }
+            for (h, &(cpu, ram, disk, bw, n)) in utils.iter().enumerate() {
+                let refer =
+                    (w.host_cpu_util(h), w.host_ram_util(h), w.host_disk_util(h), w.host_bw_util(h));
+                if (cpu, ram, disk, bw) != refer {
+                    return Err(format!(
+                        "host {h} aggregates disagree: indexed {:?} reference {refer:?}",
+                        (cpu, ram, disk, bw)
+                    ));
+                }
+                if n != w.host_task_count(h) {
+                    return Err(format!("host {h} task count disagrees"));
+                }
             }
             Ok(())
         });

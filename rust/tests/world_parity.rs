@@ -14,7 +14,7 @@ use start_sim::baselines::{
     DollyManager, GrassManager, LateManager, NearestFitManager, RppsManager, SgcManager,
     WranglerManager,
 };
-use start_sim::config::{SimConfig, Technique};
+use start_sim::config::{SchedulerKind, SimConfig, Technique};
 use start_sim::coordinator::Models;
 use start_sim::runtime::Manifest;
 use start_sim::scheduler;
@@ -46,8 +46,7 @@ fn parity_cfg(technique: Technique, reference: bool) -> SimConfig {
     cfg
 }
 
-fn run_model_free(technique: Technique, reference: bool) -> RunMetrics {
-    let cfg = parity_cfg(technique, reference);
+fn run_with_cfg(cfg: SimConfig, technique: Technique) -> RunMetrics {
     let manifest =
         Manifest::load(start_sim::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
     let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
@@ -64,6 +63,10 @@ fn run_model_free(technique: Technique, reference: bool) -> RunMetrics {
     }
     sim.world.assert_consistent();
     sim.metrics
+}
+
+fn run_model_free(technique: Technique, reference: bool) -> RunMetrics {
+    run_with_cfg(parity_cfg(technique, reference), technique)
 }
 
 /// Exact (bitwise-value) equality of every deterministic metric field.
@@ -131,6 +134,46 @@ fn indexed_world_is_bit_identical_across_seeds_and_faults() {
         };
         let label = format!("grass seed={seed} faults={fault_rate}");
         assert_metrics_identical(&run(false), &run(true), &label);
+    }
+}
+
+/// Placement-heavy cell: high arrival pressure and frequent faults so the
+/// run is dominated by `Scheduler::pick`, availability churn and the
+/// per-host aggregates — the paths this PR made O(1)/O(available).  Every
+/// scheduler kind must replay bit-identically against the reference
+/// scans for every model-free technique.
+#[test]
+fn indexed_world_is_bit_identical_for_all_scheduler_kinds() {
+    for kind in [
+        SchedulerKind::Random,
+        SchedulerKind::RoundRobin,
+        SchedulerKind::MinMin,
+        SchedulerKind::A3c,
+    ] {
+        for technique in [
+            Technique::None,
+            Technique::Late,
+            Technique::Grass,
+            Technique::Dolly,
+            Technique::Sgc,
+            Technique::Wrangler,
+            Technique::NearestFit,
+            Technique::Rpps,
+        ] {
+            let run = |reference: bool| {
+                let mut cfg = parity_cfg(technique, reference);
+                cfg.scheduler = kind;
+                cfg.n_intervals = 6;
+                cfg.n_workloads = 160; // ~2.3 tasks/VM of arrival pressure
+                cfg.fault_rate = 1.5; // heavy availability churn
+                run_with_cfg(cfg, technique)
+            };
+            let indexed = run(false);
+            let reference = run(true);
+            let label = format!("{:?}/{}", kind, technique.name());
+            assert!(indexed.tasks_done > 0, "{label}: empty run");
+            assert_metrics_identical(&indexed, &reference, &label);
+        }
     }
 }
 
