@@ -45,6 +45,6 @@ fn main() -> Result<()> {
     println!("SLA violation rate : {:.1} % (Eq. 13)", 100.0 * m.sla_violation_rate());
     println!("straggler MAPE     : {:.1} % (Eq. 14)", m.straggler_mape());
     println!("mitigations        : {} speculations, {} re-runs", m.speculations, m.reruns);
-    println!("prediction overhead: {:.0} ms total", 1e3 * m.manager_overhead_s);
+    println!("prediction overhead: {:.0} ms total", 1e3 * m.manager_overhead_s());
     Ok(())
 }

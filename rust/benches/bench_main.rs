@@ -69,7 +69,13 @@ fn main() {
     let filter =
         raw.iter().find(|a| !a.starts_with('-')).cloned().unwrap_or_default();
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
-    println!("start-sim bench harness (filter: {filter:?}, fast: {fast}, check: {check})\n");
+    println!("start-sim bench harness (filter: {filter:?}, fast: {fast}, check: {check})");
+    // The `--check` floors must hold with the trace layer compiled in but
+    // disabled (every sink below is TraceSink::off — the zero-cost path).
+    println!(
+        "sim-trace feature: {}; sinks disabled for all cells\n",
+        if cfg!(feature = "sim-trace") { "compiled in" } else { "compiled out" }
+    );
 
     let mut failures: Vec<String> = Vec::new();
     // ------------------------------------------ O(active) scaling cells
@@ -87,7 +93,13 @@ fn main() {
     // ------------------------------------------- per-figure regenerators
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let art = start_sim::find_artifact_dir();
-    type FigFn = fn(Profile, usize, &std::path::PathBuf) -> anyhow::Result<start_sim::experiments::ExperimentResult>;
+    type FigFn = fn(
+        Profile,
+        usize,
+        &std::path::PathBuf,
+        &start_sim::experiments::ExpOpts,
+    ) -> anyhow::Result<start_sim::experiments::ExperimentResult>;
+    let fig_opts = start_sim::experiments::ExpOpts::default();
     let figs: Vec<(&str, FigFn)> = vec![
         ("fig2", figures::fig2 as FigFn),
         ("fig5", figures::fig5 as FigFn),
@@ -103,7 +115,7 @@ fn main() {
             continue;
         }
         let t0 = Instant::now();
-        match f(Profile::Fast, threads, &art) {
+        match f(Profile::Fast, threads, &art, &fig_opts) {
             Ok(result) => {
                 result.print();
                 println!("bench {name}: regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());

@@ -14,6 +14,7 @@ use crate::runtime::{IgruModel, Manifest, PjrtRuntime, StartModel};
 
 use crate::sim::engine::{Manager, NullManager, Simulation};
 use crate::sim::metrics::RunMetrics;
+use crate::sim::trace::TraceSink;
 use crate::util::rng::Pcg;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -49,6 +50,24 @@ impl Models {
     }
 }
 
+/// Instantiate a manager that needs no AOT models (the reactive
+/// baselines); `None` for the prediction-based techniques (START,
+/// IGRU-SD).  Shared by [`build_manager`], the hermetic run path, and
+/// the parity/replay test suites.
+pub fn model_free_manager(technique: Technique) -> Option<Box<dyn Manager>> {
+    Some(match technique {
+        Technique::Start | Technique::IgruSd => return None,
+        Technique::Wrangler => Box::new(WranglerManager::new()),
+        Technique::Grass => Box::new(GrassManager::new()),
+        Technique::Dolly => Box::new(DollyManager::new()),
+        Technique::Sgc => Box::new(SgcManager::new()),
+        Technique::NearestFit => Box::new(NearestFitManager::new()),
+        Technique::Late => Box::new(LateManager::new()),
+        Technique::Rpps => Box::new(RppsManager::new()),
+        Technique::None => Box::new(NullManager),
+    })
+}
+
 /// Instantiate the manager for a technique.
 ///
 /// Prediction-based techniques (START, IGRU-SD) consume the AOT models;
@@ -67,23 +86,48 @@ pub fn build_manager(technique: Technique, models: &Models, cfg: &SimConfig) -> 
         Technique::IgruSd => {
             Box::new(IgruSdManager::new(IgruPredictor::new(Rc::clone(&models.igru), 1.15)))
         }
-        Technique::Wrangler => Box::new(WranglerManager::new()),
-        Technique::Grass => Box::new(GrassManager::new()),
-        Technique::Dolly => Box::new(DollyManager::new()),
-        Technique::Sgc => Box::new(SgcManager::new()),
-        Technique::NearestFit => Box::new(NearestFitManager::new()),
-        Technique::Late => Box::new(LateManager::new()),
-        Technique::Rpps => Box::new(RppsManager::new()),
-        Technique::None => Box::new(NullManager),
+        other => model_free_manager(other).expect("model-free technique"),
     })
 }
 
 /// Run one simulation cell (one technique, one config) end to end.
 pub fn run_one(cfg: &SimConfig, models: &Models) -> Result<RunMetrics> {
+    Ok(run_one_traced(cfg, models, TraceSink::off())?.0)
+}
+
+/// [`run_one`] with an event sink installed (sim/trace.rs): returns the
+/// sink alongside the metrics.  File sinks still need
+/// `TraceSink::finish` to flush.
+pub fn run_one_traced(
+    cfg: &SimConfig,
+    models: &Models,
+    sink: TraceSink,
+) -> Result<(RunMetrics, TraceSink)> {
     let scheduler = crate::scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
     let manager = build_manager(cfg.technique, models, cfg)?;
-    let sim = Simulation::new(cfg.clone(), &models.manifest, scheduler, manager);
-    Ok(sim.run())
+    let mut sim = Simulation::new(cfg.clone(), &models.manifest, scheduler, manager);
+    sim.set_trace(sink);
+    Ok(sim.run_traced())
+}
+
+/// Run a *model-free* cell without any artifact directory: uses the real
+/// manifest when one is discoverable, else the canned test-default
+/// (adequate — model-free managers never dispatch the AOT models).  The
+/// `simulate` CLI falls back to this, and CI uses it to produce a sample
+/// trace on a bare checkout.
+pub fn run_one_hermetic(cfg: &SimConfig, sink: TraceSink) -> Result<(RunMetrics, TraceSink)> {
+    let manager = model_free_manager(cfg.technique).ok_or_else(|| {
+        anyhow::anyhow!(
+            "technique {:?} needs the AOT models; no artifact directory available",
+            cfg.technique
+        )
+    })?;
+    let manifest =
+        Manifest::load(crate::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
+    let scheduler = crate::scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+    let mut sim = Simulation::new(cfg.clone(), &manifest, scheduler, manager);
+    sim.set_trace(sink);
+    Ok(sim.run_traced())
 }
 
 /// A labelled experiment cell.
@@ -93,17 +137,47 @@ pub struct Cell {
     pub cfg: SimConfig,
 }
 
+/// Options for [`run_many_opts`].
+#[derive(Clone, Default)]
+pub struct RunOpts {
+    /// When set, each cell streams a JSONL event trace to
+    /// `<dir>/<sanitized label>.jsonl`.
+    pub trace_dir: Option<PathBuf>,
+}
+
+/// Turn a cell label into a safe file stem (`fig10|Grass|42` →
+/// `fig10_Grass_42`).
+pub fn sanitize_label(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect()
+}
+
 /// Run cells on a worker pool.  Each worker owns its own PJRT client (the
 /// leader/worker topology: the leader distributes cells over an mpsc
 /// queue and collects `(label, metrics)` results).
 pub fn run_many(cells: Vec<Cell>, threads: usize, art_dir: PathBuf) -> Result<Vec<(String, RunMetrics)>> {
+    run_many_opts(cells, threads, art_dir, RunOpts::default())
+}
+
+/// [`run_many`] with observability options.  Results come back in
+/// *submission order* (ordered reduction: workers tag each result with
+/// its cell index and the leader slots it), so downstream tables are
+/// deterministic regardless of worker interleaving.
+pub fn run_many_opts(
+    cells: Vec<Cell>,
+    threads: usize,
+    art_dir: PathBuf,
+    opts: RunOpts,
+) -> Result<Vec<(String, RunMetrics)>> {
     let threads = threads.max(1).min(cells.len().max(1));
-    let (work_tx, work_rx) = mpsc::channel::<Cell>();
+    let (work_tx, work_rx) = mpsc::channel::<(usize, Cell)>();
     let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
-    let (res_tx, res_rx) = mpsc::channel::<Result<(String, RunMetrics)>>();
+    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<(String, RunMetrics)>)>();
     let n_cells = cells.len();
-    for cell in cells {
-        work_tx.send(cell).unwrap();
+    for item in cells.into_iter().enumerate() {
+        work_tx.send(item).unwrap();
     }
     drop(work_tx);
     let mut handles = Vec::new();
@@ -111,31 +185,56 @@ pub fn run_many(cells: Vec<Cell>, threads: usize, art_dir: PathBuf) -> Result<Ve
         let rx = Arc::clone(&work_rx);
         let tx = res_tx.clone();
         let dir = art_dir.clone();
+        let opts = opts.clone();
         handles.push(std::thread::spawn(move || {
             let models = match Models::load(dir) {
                 Ok(m) => m,
                 Err(e) => {
-                    let _ = tx.send(Err(e));
+                    let _ = tx.send((usize::MAX, Err(e)));
                     return;
                 }
             };
             loop {
                 let cell = { rx.lock().unwrap().recv() };
-                let Ok(cell) = cell else { break };
-                let result = run_one(&cell.cfg, &models).map(|m| (cell.label, m));
-                if tx.send(result).is_err() {
+                let Ok((idx, cell)) = cell else { break };
+                let result = (|| -> Result<(String, RunMetrics)> {
+                    let sink = match &opts.trace_dir {
+                        Some(d) => {
+                            TraceSink::file(d.join(format!("{}.jsonl", sanitize_label(&cell.label))))?
+                        }
+                        None => TraceSink::off(),
+                    };
+                    let (m, mut sink) = run_one_traced(&cell.cfg, &models, sink)?;
+                    sink.finish()?;
+                    Ok((cell.label, m))
+                })();
+                if tx.send((idx, result)).is_err() {
                     break;
                 }
             }
         }));
     }
     drop(res_tx);
-    let mut out = Vec::with_capacity(n_cells);
-    for r in res_rx {
-        out.push(r?);
+    let mut slots: Vec<Option<(String, RunMetrics)>> = (0..n_cells).map(|_| None).collect();
+    let mut first_err = None;
+    for (idx, r) in res_rx {
+        match r {
+            Ok(pair) if idx < n_cells => slots[idx] = Some(pair),
+            Ok(_) => {}
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
     }
     for h in handles {
         let _ = h.join();
     }
-    Ok(out)
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow::anyhow!("cell {i} produced no result")))
+        .collect()
 }

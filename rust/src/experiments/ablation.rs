@@ -9,13 +9,18 @@
 //! * fused-rollout window: T = 5 vs T = 1 (does the LSTM memory help?)
 
 use crate::config::{SchedulerKind, SimConfig, Technique};
-use crate::coordinator::{run_many, Cell};
+use crate::coordinator::{run_many_opts, Cell, RunOpts};
 use crate::experiments::common::*;
 use crate::experiments::report::Table;
 use anyhow::Result;
 use std::path::PathBuf;
 
-pub fn ablation(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn ablation(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let mut base = profile.base_config();
     base.technique = Technique::Start;
     let seeds = [42u64, 43, 44];
@@ -48,7 +53,11 @@ pub fn ablation(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<E
             cells.push(Cell { label: format!("{label}|START|{seed}"), cfg });
         }
     }
-    let results = run_many(cells, threads, art_dir.clone())?;
+    let run_opts = RunOpts { trace_dir: opts.trace_dir.as_ref().map(|d| d.join("ablation")) };
+    let results = run_many_opts(cells, threads, art_dir.clone(), run_opts)?;
+    if opts.profile {
+        println!("{}", phase_table("ablation", &results).render());
+    }
 
     let exec = group_results(&results, |m| m.avg_execution_time());
     let sla = group_results(&results, |m| m.sla_violation_rate());

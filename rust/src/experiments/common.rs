@@ -53,6 +53,36 @@ impl Profile {
     }
 }
 
+/// Observability options threaded from the experiment CLI into every
+/// figure's runner (DESIGN.md §10).
+#[derive(Clone, Default)]
+pub struct ExpOpts {
+    /// When set, each cell streams a JSONL event trace to
+    /// `<dir>/<figure id>/<sanitized cell label>.jsonl`.
+    pub trace_dir: Option<PathBuf>,
+    /// Print a per-figure phase-timing table (profiler counters).
+    pub profile: bool,
+}
+
+/// Aggregate the phase profiler across a figure's result set: the
+/// per-figure timing table printed under `--profile`.
+pub fn phase_table(id: &str, results: &[(String, RunMetrics)]) -> Table {
+    use crate::sim::trace::Phase;
+    let mut t = Table::new(
+        &format!("{id} — phase wall time summed over {} cells", results.len()),
+        &["phase", "seconds", "calls"],
+    );
+    let mut total = 0.0;
+    for p in Phase::ALL {
+        let secs: f64 = results.iter().map(|(_, m)| m.profile.seconds(p)).sum();
+        let calls: u64 = results.iter().map(|(_, m)| m.profile.calls(p)).sum();
+        total += secs;
+        t.row(vec![p.name().to_string(), format!("{secs:.4}"), calls.to_string()]);
+    }
+    t.row(vec!["total".to_string(), format!("{total:.4}"), "".to_string()]);
+    t
+}
+
 /// Results of one experiment: rendered tables + raw per-cell metrics.
 pub struct ExperimentResult {
     pub id: &'static str,
@@ -100,7 +130,8 @@ pub fn metrics_json(m: &RunMetrics) -> Json {
         ("net_util", Json::Num(net)),
         ("mape", Json::Num(m.straggler_mape())),
         ("f1", Json::Num(m.confusion.f1())),
-        ("overhead_s", Json::Num(m.manager_overhead_s)),
+        ("overhead_s", Json::Num(m.manager_overhead_s())),
+        ("phases", m.profile.to_json()),
         ("speculations", Json::Num(m.speculations as f64)),
         ("reruns", Json::Num(m.reruns as f64)),
         ("exec_var", Json::Num(m.exec_summary().variance())),

@@ -6,7 +6,7 @@
 //! target.
 
 use crate::config::{SimConfig, Technique};
-use crate::coordinator::{run_many, Cell};
+use crate::coordinator::{run_many_opts, Cell, RunOpts};
 use crate::experiments::common::*;
 use crate::experiments::report::Table;
 use crate::sim::metrics::RunMetrics;
@@ -32,13 +32,23 @@ fn kwh(v: f64) -> String {
     format!("{v:.2}")
 }
 
-/// Shared runner: cells → results (+ raw dump entries).
+/// Shared runner: cells → results (+ raw dump entries).  Observability
+/// fans out here: `--trace <dir>` streams one JSONL file per cell into
+/// `<dir>/<figure id>/`, `--profile` prints the figure's phase-timing
+/// table from the profiler counters (DESIGN.md §10).
 fn execute(
+    id: &str,
     cells: Vec<Cell>,
     threads: usize,
     art_dir: &PathBuf,
+    opts: &ExpOpts,
 ) -> Result<Vec<(String, RunMetrics)>> {
-    run_many(cells, threads, art_dir.clone())
+    let run_opts = RunOpts { trace_dir: opts.trace_dir.as_ref().map(|d| d.join(id)) };
+    let results = run_many_opts(cells, threads, art_dir.clone(), run_opts)?;
+    if opts.profile {
+        println!("{}", phase_table(id, &results).render());
+    }
+    Ok(results)
 }
 
 fn raw_map(results: &[(String, RunMetrics)]) -> BTreeMap<String, Json> {
@@ -50,7 +60,12 @@ fn raw_map(results: &[(String, RunMetrics)]) -> BTreeMap<String, Json> {
 /// Fig. 2: F1 of straggler classification vs the hyper-parameters k
 /// (straggler multiple), I (inference period) and T (window length).
 /// Expectation: k = 1.5, I = 1, T = 5 is the grid optimum.
-pub fn fig2(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig2(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let base = {
         let mut c = profile.base_config();
         c.technique = Technique::Start;
@@ -83,7 +98,7 @@ pub fn fig2(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
             cells.push(Cell { label: format!("T={t}|START|{seed}"), cfg });
         }
     }
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig2", cells, threads, art_dir, opts)?;
     let grouped = group_results(&results, |m| m.confusion.f1());
     let mut tables = Vec::new();
     for (axis, points) in [
@@ -108,7 +123,12 @@ pub fn fig2(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
 /// eliminates the detection delay that reactive methods pay before
 /// mitigating.  Reported: mean time-from-start-to-mitigation and mean
 /// response of mitigated tasks.
-pub fn fig5(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig5(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let mut base = profile.base_config();
     base.fault_rate = 1.0;
     let techniques =
@@ -123,7 +143,7 @@ pub fn fig5(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
             cells.push(Cell { label: format!("x|{}|{seed}", t.name()), cfg });
         }
     }
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig5", cells, threads, art_dir, opts)?;
     let delay = group_results(&results, |m| {
         if m.mitigation_delays.is_empty() {
             0.0
@@ -147,7 +167,12 @@ pub fn fig5(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
 // ------------------------------------------------------------------ FIG 6
 
 /// Fig. 6a–d: QoS vs reserved utilization (20/40/60/80 %).
-pub fn fig6(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig6(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let base = profile.base_config();
     let techniques = Technique::paper_set();
     let seeds = [42u64, 43, 44, 45, 46];
@@ -163,7 +188,7 @@ pub fn fig6(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
         })
         .collect();
     let cells = technique_sweep_cells(&base, &techniques, &sweep, &seeds);
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig6", cells, threads, art_dir, opts)?;
     let order: Vec<String> = levels.iter().map(|&u| format!("{:.0}%", u * 100.0)).collect();
     let tables = vec![
         sweep_table("Fig.6a — Execution time (s) vs reserved utilization", &order, &techniques,
@@ -181,7 +206,12 @@ pub fn fig6(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
 // ------------------------------------------------------------------ FIG 7
 
 /// Fig. 7a–h: QoS + utilizations vs number of workloads.
-pub fn fig7(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig7(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let base = profile.base_config();
     let techniques = Technique::paper_set();
     let seeds = [42u64, 43, 44, 45, 46];
@@ -197,7 +227,7 @@ pub fn fig7(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
         })
         .collect();
     let cells = technique_sweep_cells(&base, &techniques, &sweep, &seeds);
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig7", cells, threads, art_dir, opts)?;
     let order: Vec<String> = points.iter().map(|n| format!("{n}")).collect();
     let tables = vec![
         sweep_table("Fig.7a — Execution time (s) vs workloads", &order, &techniques,
@@ -223,7 +253,12 @@ pub fn fig7(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
 // ------------------------------------------------------------------ FIG 8
 
 /// Fig. 8a–d: completion-time spread per reserved-utilization level.
-pub fn fig8(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig8(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let base = profile.base_config();
     let techniques = Technique::paper_set();
     let seeds = [42u64, 43, 44];
@@ -239,7 +274,7 @@ pub fn fig8(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
         })
         .collect();
     let cells = technique_sweep_cells(&base, &techniques, &sweep, &seeds);
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig8", cells, threads, art_dir, opts)?;
     let order: Vec<String> = levels.iter().map(|&u| format!("{:.0}%", u * 100.0)).collect();
     let tables = vec![
         sweep_table("Fig.8 — completion-time std (s): straggler spread", &order, &techniques,
@@ -257,7 +292,12 @@ pub fn fig8(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
 /// Fig. 9: prediction accuracy (MAPE) of START vs IGRU-SD vs RPPS as host
 /// heterogeneity churns (number of Xeon-hosted VMs out of 200 varies,
 /// with VM/host failures injected).
-pub fn fig9(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig9(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let mut base = profile.base_config();
     base.fault_rate = 1.5; // the paper's "injected VM failures"
     let techniques = [Technique::Start, Technique::IgruSd, Technique::Rpps];
@@ -279,7 +319,7 @@ pub fn fig9(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
             }
         }
     }
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig9", cells, threads, art_dir, opts)?;
     let grouped = group_results(&results, |m| m.straggler_mape());
     let order: Vec<String> = xeon_vm_counts.iter().map(|n| format!("{n}")).collect();
     let mut table = Table::new(
@@ -301,7 +341,12 @@ pub fn fig9(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Exper
 // ----------------------------------------------------------------- FIG 10
 
 /// Fig. 10: manager overhead amortized over total task execution time.
-pub fn fig10(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn fig10(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let base = profile.base_config();
     let mut techniques = Technique::paper_set();
     techniques.push(Technique::Late);
@@ -315,25 +360,33 @@ pub fn fig10(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Expe
             cells.push(Cell { label: format!("x|{}|{seed}", t.name()), cfg });
         }
     }
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("fig10", cells, threads, art_dir, opts)?;
+    // One shared definition of overhead: the profiler's predict+mitigate
+    // counters (RunMetrics::manager_overhead_s), split out per phase in
+    // the two rightmost columns so the figure shows where the time goes.
     let overhead = group_results(&results, |m| {
         let total_exec: f64 = m.exec_times.iter().sum();
         if total_exec > 0.0 {
-            100.0 * m.manager_overhead_s / total_exec
+            100.0 * m.manager_overhead_s() / total_exec
         } else {
             0.0
         }
     });
-    let wall = group_results(&results, |m| m.manager_overhead_s);
+    let wall = group_results(&results, |m| m.manager_overhead_s());
+    let predict = group_results(&results, |m| m.profile.seconds(crate::sim::trace::Phase::Predict));
+    let mitigate =
+        group_results(&results, |m| m.profile.seconds(crate::sim::trace::Phase::Mitigate));
     let mut table = Table::new(
         "Fig.10 — manager overhead (% of total task exec time; wall s)",
-        &["technique", "overhead %", "wall s"],
+        &["technique", "overhead %", "wall s", "predict s", "mitigate s"],
     );
     for t in &techniques {
         table.row(vec![
             t.name().to_string(),
             format!("{:.4}", overhead["x"].get(t.name()).copied().unwrap_or(f64::NAN)),
             format!("{:.3}", wall["x"].get(t.name()).copied().unwrap_or(f64::NAN)),
+            format!("{:.3}", predict["x"].get(t.name()).copied().unwrap_or(f64::NAN)),
+            format!("{:.3}", mitigate["x"].get(t.name()).copied().unwrap_or(f64::NAN)),
         ]);
     }
     Ok(ExperimentResult { id: "fig10", tables: vec![table], raw: raw_map(&results) })
@@ -342,7 +395,12 @@ pub fn fig10(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<Expe
 // --------------------------------------------------------------- HEADLINE
 
 /// §1 headline: START vs best baseline on the four QoS metrics.
-pub fn headline(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<ExperimentResult> {
+pub fn headline(
+    profile: Profile,
+    threads: usize,
+    art_dir: &PathBuf,
+    opts: &ExpOpts,
+) -> Result<ExperimentResult> {
     let base = profile.base_config();
     let techniques = Technique::paper_set();
     let seeds = [42u64, 43, 44, 45, 46];
@@ -355,7 +413,7 @@ pub fn headline(profile: Profile, threads: usize, art_dir: &PathBuf) -> Result<E
             cells.push(Cell { label: format!("x|{}|{seed}", t.name()), cfg });
         }
     }
-    let results = execute(cells, threads, art_dir)?;
+    let results = execute("headline", cells, threads, art_dir, opts)?;
     let metrics: Vec<(&str, Box<dyn Fn(&RunMetrics) -> f64>, bool)> = vec![
         ("exec time (s)", Box::new(|m: &RunMetrics| m.avg_execution_time()), true),
         ("contention", Box::new(|m: &RunMetrics| m.avg_contention()), true),

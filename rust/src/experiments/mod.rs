@@ -1,11 +1,13 @@
 //! Experiment harness — regenerates every table and figure in the paper's
 //! evaluation (DESIGN.md §4).  `start-sim experiment <fig2|fig5|fig6|fig7|
-//! fig8|fig9|fig10|headline|all> [--paper] [--threads N] [--out results]`.
+//! fig8|fig9|fig10|headline|all> [--paper] [--threads N] [--out results]
+//! [--trace DIR] [--profile]` — the last two stream per-cell JSONL event
+//! traces and print per-figure phase-timing tables (DESIGN.md §10).
 pub mod ablation;
 pub mod common;
 pub mod figures;
 pub mod report;
-pub use common::{ExperimentResult, Profile};
+pub use common::{ExpOpts, ExperimentResult, Profile};
 pub use report::Table;
 
 use crate::util::cli::Args;
@@ -22,6 +24,7 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     )?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let art_dir = crate::find_artifact_dir();
+    let opts = ExpOpts { trace_dir: args.opt_path("trace"), profile: args.flag("profile") };
     let ids: Vec<&str> = if which == "all" {
         vec!["fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "headline", "ablation"]
     } else {
@@ -30,15 +33,15 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     for id in ids {
         let t0 = std::time::Instant::now();
         let result = match id {
-            "fig2" => figures::fig2(profile, threads, &art_dir)?,
-            "fig5" => figures::fig5(profile, threads, &art_dir)?,
-            "fig6" => figures::fig6(profile, threads, &art_dir)?,
-            "fig7" => figures::fig7(profile, threads, &art_dir)?,
-            "fig8" => figures::fig8(profile, threads, &art_dir)?,
-            "fig9" => figures::fig9(profile, threads, &art_dir)?,
-            "fig10" => figures::fig10(profile, threads, &art_dir)?,
-            "headline" => figures::headline(profile, threads, &art_dir)?,
-            "ablation" => ablation::ablation(profile, threads, &art_dir)?,
+            "fig2" => figures::fig2(profile, threads, &art_dir, &opts)?,
+            "fig5" => figures::fig5(profile, threads, &art_dir, &opts)?,
+            "fig6" => figures::fig6(profile, threads, &art_dir, &opts)?,
+            "fig7" => figures::fig7(profile, threads, &art_dir, &opts)?,
+            "fig8" => figures::fig8(profile, threads, &art_dir, &opts)?,
+            "fig9" => figures::fig9(profile, threads, &art_dir, &opts)?,
+            "fig10" => figures::fig10(profile, threads, &art_dir, &opts)?,
+            "headline" => figures::headline(profile, threads, &art_dir, &opts)?,
+            "ablation" => ablation::ablation(profile, threads, &art_dir, &opts)?,
             other => anyhow::bail!("unknown experiment {other:?}"),
         };
         result.print();

@@ -74,8 +74,22 @@ pub fn launcher_main() -> anyhow::Result<()> {
         Some("simulate") => {
             let mut cfg = config::SimConfig::paper_defaults();
             cfg.apply_cli(&args)?;
-            let models = coordinator::Models::load_default()?;
-            let m = coordinator::run_one(&cfg, &models)?;
+            let trace_path = args.opt_path("trace");
+            let sink = match &trace_path {
+                Some(p) => sim::TraceSink::file(p)?,
+                None => sim::TraceSink::off(),
+            };
+            // Full model stack when artifacts are present; model-free
+            // techniques degrade to a hermetic run otherwise (canned
+            // manifest — the simulator itself needs no AOT models).
+            let (m, mut sink) = match coordinator::Models::load_default() {
+                Ok(models) => coordinator::run_one_traced(&cfg, &models, sink)?,
+                Err(e) => {
+                    eprintln!("note: artifacts unavailable ({e}); running hermetic model-free");
+                    coordinator::run_one_hermetic(&cfg, sink)?
+                }
+            };
+            let n_events = sink.finish()?;
             println!("technique={} jobs={} tasks={}", cfg.technique.name(), m.jobs_done, m.tasks_done);
             println!("avg exec time      : {:.1} s", m.avg_execution_time());
             println!("energy             : {:.2} kWh", m.total_energy_kwh());
@@ -84,7 +98,41 @@ pub fn launcher_main() -> anyhow::Result<()> {
             println!("straggler MAPE     : {:.1} %", m.straggler_mape());
             println!("F1                 : {:.3}", m.confusion.f1());
             println!("overhead           : {:.2} s ({} spec, {} rerun)",
-                m.manager_overhead_s, m.speculations, m.reruns);
+                m.manager_overhead_s(), m.speculations, m.reruns);
+            if args.flag("profile") {
+                println!("phase profile:");
+                for p in sim::Phase::ALL {
+                    println!(
+                        "  {:<10} {:>10.4} s  ({} calls)",
+                        p.name(),
+                        m.profile.seconds(p),
+                        m.profile.calls(p)
+                    );
+                }
+                println!("  {:<10} {:>10.4} s", "total", m.profile.total_seconds());
+            }
+            if let Some(path) = &trace_path {
+                println!("trace              : {} events -> {}", n_events, path.display());
+                // Keystone invariant, checked on every traced CLI run:
+                // the JSONL stream alone re-derives the metrics exactly.
+                if path.extension().and_then(|e| e.to_str()) != Some("csv") {
+                    let events = sim::trace::load_jsonl(path)?;
+                    let replayed = sim::trace::replay(&events);
+                    match m.diff_deterministic(&replayed) {
+                        None => println!("replay parity      : OK"),
+                        Some(d) => anyhow::bail!("replay parity FAILED: {d}"),
+                    }
+                }
+            }
+            if let Some(out) = args.opt_path("out") {
+                if let Some(dir) = out.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                std::fs::write(&out, experiments::common::metrics_json(&m).dump())?;
+                println!("metrics            : {}", out.display());
+            }
             Ok(())
         }
         Some("experiment") => experiments::run_from_cli(&args),

@@ -12,6 +12,7 @@ use crate::predictor::FeatureExtractor;
 use crate::runtime::Manifest;
 use crate::sim::faults::{Fault, FaultInjector};
 use crate::sim::metrics::RunMetrics;
+use crate::sim::trace::{Event, FaultEvent, MitigationKind, Phase, TraceSink};
 use crate::sim::types::*;
 use crate::sim::world::World;
 use crate::trace::generative::Generative;
@@ -158,6 +159,25 @@ impl Simulation {
         self.manager.name()
     }
 
+    /// Install an event sink (sim/trace.rs §10) and record the run
+    /// header.  World transitions and engine decisions are recorded from
+    /// here on; retrieve with [`Simulation::run_traced`].
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.world.set_trace(sink);
+        let seed = self.cfg.seed;
+        let n_intervals = self.cfg.n_intervals;
+        let interval_s = self.cfg.interval_s;
+        let technique = self.manager.name().to_string();
+        let scheduler = format!("{:?}", self.cfg.scheduler);
+        self.world.trace_record(|| Event::Meta {
+            seed,
+            n_intervals,
+            interval_s,
+            technique,
+            scheduler,
+        });
+    }
+
     /// Run to completion; returns the metrics.
     ///
     /// Interval metrics (energy, utilization, contention) cover exactly
@@ -165,7 +185,14 @@ impl Simulation {
     /// phase completes outstanding jobs for the response/SLA metrics but
     /// does not extend the energy window, so techniques are compared on
     /// identical wall-clock energy budgets.
-    pub fn run(mut self) -> RunMetrics {
+    pub fn run(self) -> RunMetrics {
+        self.run_traced().0
+    }
+
+    /// Like [`Simulation::run`], but also returns the event sink
+    /// installed via [`Simulation::set_trace`] (callers flush file sinks
+    /// with `TraceSink::finish`).
+    pub fn run_traced(mut self) -> (RunMetrics, TraceSink) {
         let n = self.cfg.n_intervals;
         for _ in 0..n {
             self.step_interval(true);
@@ -179,12 +206,20 @@ impl Simulation {
             self.step_interval(false);
             extra += 1;
         }
-        self.metrics
+        let sink = self.world.take_trace();
+        (self.metrics, sink)
     }
 
     /// Advance one scheduling interval.
+    ///
+    /// Each phase is wall-timed into `metrics.profile` with *contiguous*
+    /// `Instant`s (each phase's end is the next phase's start), so any
+    /// sum of adjacent phases equals one measurement across them — in
+    /// particular predict+mitigate is exactly the old Fig. 10 lump
+    /// timing around the manager block.
     pub fn step_interval(&mut self, arrivals: bool) {
         let t0 = self.interval as f64 * self.cfg.interval_s;
+        let mark0 = Instant::now();
         self.advance_to(t0);
         // 1. Background (PlanetLab) load for this interval.
         for h in 0..self.world.hosts.len() {
@@ -194,6 +229,8 @@ impl Simulation {
         // 2. Release expired holds, snapshot features.
         mitigation::release_held(&mut self.world);
         self.fx.snapshot(&mut self.world);
+        let mark1 = Instant::now();
+        self.metrics.profile.add(Phase::Advance, mark1 - mark0);
         // 3. Job arrivals.
         if arrivals {
             let specs = self.workload.arrivals();
@@ -202,18 +239,28 @@ impl Simulation {
                 self.manager.on_job_arrival(&self.world, &self.fx, job);
             }
         }
+        let mark2 = Instant::now();
+        self.metrics.profile.add(Phase::Arrivals, mark2 - mark1);
         // 4. Place pending tasks.
         self.place_pending();
-        // 5. Straggler management (timed — Fig. 10 overhead).
-        let t_mgr = Instant::now();
+        let mark3 = Instant::now();
+        self.metrics.profile.add(Phase::Placement, mark3 - mark2);
+        // 5. Straggler management (Fig. 10 overhead = predict + mitigate).
         let actions = self.manager.on_interval(&self.world, &self.fx);
+        let mark4 = Instant::now();
+        self.metrics.profile.add(Phase::Predict, mark4 - mark3);
         self.apply_actions(actions);
-        self.metrics.manager_overhead_s += t_mgr.elapsed().as_secs_f64();
+        let mark5 = Instant::now();
+        self.metrics.profile.add(Phase::Mitigate, mark5 - mark4);
         // 6. Metrics snapshot (main horizon only — drain intervals finish
         //    jobs but do not extend the energy/utilization window).
         if arrivals {
             self.metrics.snapshot(&self.world, self.cfg.interval_s);
+            let idx = self.interval;
+            let snap = self.metrics.intervals.last().unwrap().clone();
+            self.world.trace_record(|| Event::Interval { index: idx, snapshot: snap });
         }
+        self.metrics.profile.add(Phase::Metrics, mark5.elapsed());
         self.interval += 1;
     }
 
@@ -299,6 +346,8 @@ impl Simulation {
         for t in self.world.pending() {
             if let Some(vm) = self.scheduler.pick(&self.world, t) {
                 if !self.manager.filter_placement(&self.world, t, vm) {
+                    let now = self.world.now;
+                    self.world.trace_record(|| Event::Veto { t: now, task: t, vm });
                     continue;
                 }
                 let job = self.world.task(t).job;
@@ -324,26 +373,53 @@ impl Simulation {
                     let job = self.world.task(t).job;
                     let slowdown = self.sample_slowdown(job);
                     let started = self.world.task(t).first_start_t;
-                    if mitigation::speculate(&mut self.world, t, slowdown).is_some() {
+                    let applied = mitigation::speculate(&mut self.world, t, slowdown).is_some();
+                    if applied {
                         self.metrics.speculations += 1;
                         if let Some(s) = started {
                             self.metrics.mitigation_delays.push(self.world.now - s);
                         }
                     }
+                    let now = self.world.now;
+                    self.world.trace_record(|| Event::Mitigate {
+                        t: now,
+                        task: t,
+                        kind: MitigationKind::Speculate,
+                        applied,
+                        started,
+                    });
                 }
                 Action::Rerun(t) => {
                     let job = self.world.task(t).job;
                     let slowdown = self.sample_slowdown(job);
                     let started = self.world.task(t).first_start_t;
-                    if mitigation::rerun(&mut self.world, t, slowdown, 30.0).is_some() {
+                    let applied =
+                        mitigation::rerun(&mut self.world, t, slowdown, 30.0).is_some();
+                    if applied {
                         self.metrics.reruns += 1;
                         if let Some(s) = started {
                             self.metrics.mitigation_delays.push(self.world.now - s);
                         }
                     }
+                    let now = self.world.now;
+                    self.world.trace_record(|| Event::Mitigate {
+                        t: now,
+                        task: t,
+                        kind: MitigationKind::Rerun,
+                        applied,
+                        started,
+                    });
                 }
                 Action::Hold(t, until) => {
-                    mitigation::hold(&mut self.world, t, until);
+                    let applied = mitigation::hold(&mut self.world, t, until);
+                    let now = self.world.now;
+                    self.world.trace_record(|| Event::Mitigate {
+                        t: now,
+                        task: t,
+                        kind: MitigationKind::Hold,
+                        applied,
+                        started: None,
+                    });
                 }
             }
         }
@@ -415,6 +491,14 @@ impl Simulation {
         // Prediction scoring (Fig. 2 F1): "predicted" = the manager
         // mitigated or flagged this task.
         self.metrics.confusion.record(t.mitigated, was_straggler);
+        let (job_id, mitigated) = (t.job, t.mitigated);
+        self.world.trace_record(|| Event::TaskResult {
+            t: now,
+            task,
+            job: job_id,
+            mitigated,
+            straggler: was_straggler,
+        });
         match (t.mitigated, was_straggler) {
             (true, false) => self.k_window.0 += 1,  // false positive
             (false, true) => self.k_window.1 += 1,  // false negative
@@ -447,6 +531,12 @@ impl Simulation {
             let predicted = self.manager.predicted_stragglers(jid).unwrap_or(actual as f64);
             let job = self.world.job(jid).clone();
             self.metrics.record_job_done(&job, now, predicted, actual);
+            self.world.trace_record(|| Event::JobScore {
+                t: now,
+                job: jid,
+                predicted_es: predicted,
+                actual_stragglers: actual,
+            });
         }
     }
 
@@ -474,6 +564,11 @@ impl Simulation {
             Fault::Host { pick, intervals } => {
                 let h = pick % self.world.hosts.len();
                 let until = self.world.now + intervals as f64 * self.cfg.interval_s;
+                let now = self.world.now;
+                self.world.trace_record(|| Event::Fault {
+                    t: now,
+                    fault: FaultEvent::Host { host: h, until },
+                });
                 self.world.set_host_down(h, until);
                 // Every task running there restarts (paper §1: node failure
                 // ⇒ re-execute its tasks).  Victims are gathered with one
@@ -494,13 +589,24 @@ impl Simulation {
                 // fault probability independent of how many tasks are
                 // left in the system.
                 let v = pick % self.world.vms.len();
-                if let Some(&t) = self.world.vms[v].tasks.first() {
+                let victim = self.world.vms[v].tasks.first().copied();
+                let now = self.world.now;
+                self.world.trace_record(|| Event::Fault {
+                    t: now,
+                    fault: FaultEvent::Cloudlet { vm: v, task: victim },
+                });
+                if let Some(t) = victim {
                     self.world.reset_task(t, 30.0);
                 }
             }
             Fault::VmCreation { pick } => {
                 let v = pick % self.world.vms.len();
                 let ready = self.world.now + self.cfg.interval_s;
+                let now = self.world.now;
+                self.world.trace_record(|| Event::Fault {
+                    t: now,
+                    fault: FaultEvent::VmCreation { vm: v, ready_at: ready },
+                });
                 self.world.set_vm_ready_at(v, ready);
             }
         }
@@ -645,6 +751,84 @@ mod tests {
             (1.6..=2.4).contains(&ratio),
             "doubling job_lambda changed arrivals by {ratio:.2}x ({base} -> {doubled})"
         );
+    }
+
+    #[cfg(feature = "sim-trace")]
+    #[test]
+    fn trace_replay_matches_live_metrics() {
+        let cfg = quick_cfg();
+        let manifest = test_manifest();
+        let sched = scheduler::build(cfg.scheduler, Pcg::seeded(cfg.seed ^ 1));
+        let mut sim = Simulation::new(cfg, &manifest, sched, Box::new(NullManager));
+        sim.set_trace(TraceSink::mem());
+        let (m, sink) = sim.run_traced();
+        assert!(!sink.is_empty());
+        let replayed = crate::sim::trace::replay(sink.events());
+        m.assert_deterministic_eq(&replayed, "engine-null-replay");
+    }
+
+    #[test]
+    fn zero_interval_run_is_clean() {
+        let mut cfg = quick_cfg();
+        cfg.n_intervals = 0;
+        cfg.n_workloads = 0;
+        let manifest = test_manifest();
+        let sched = scheduler::build(cfg.scheduler, Pcg::seeded(3));
+        let mut sim = Simulation::new(cfg, &manifest, sched, Box::new(NullManager));
+        sim.set_trace(TraceSink::mem());
+        let (m, sink) = sim.run_traced();
+        assert!(m.intervals.is_empty());
+        assert_eq!(m.tasks_done, 0);
+        // No phase ever ran: the profiler (and the Fig. 10 overhead it
+        // defines) is exactly zero, not NaN.
+        assert_eq!(m.profile.total_seconds(), 0.0);
+        assert_eq!(m.manager_overhead_s(), 0.0);
+        let replayed = crate::sim::trace::replay(sink.events());
+        m.assert_deterministic_eq(&replayed, "zero-interval");
+    }
+
+    /// Drain-phase completions (arrivals=false intervals) must replay
+    /// like any other: one-interval horizon, everything finishes during
+    /// the drain.
+    #[cfg(feature = "sim-trace")]
+    #[test]
+    fn drain_phase_only_completions_replay() {
+        let mut cfg = quick_cfg();
+        cfg.n_intervals = 1;
+        cfg.n_workloads = 40;
+        let manifest = test_manifest();
+        let sched = scheduler::build(cfg.scheduler, Pcg::seeded(cfg.seed ^ 1));
+        let mut sim = Simulation::new(cfg, &manifest, sched, Box::new(NullManager));
+        sim.set_trace(TraceSink::mem());
+        let (m, sink) = sim.run_traced();
+        assert_eq!(m.intervals.len(), 1, "drain intervals must not snapshot");
+        assert!(m.tasks_done > 0, "nothing completed");
+        let replayed = crate::sim::trace::replay(sink.events());
+        m.assert_deterministic_eq(&replayed, "drain-only");
+    }
+
+    /// An empty fleet (zero hosts/VMs) is degenerate but must not panic,
+    /// NaN the interval metrics, or break replay parity.
+    #[test]
+    fn empty_fleet_traces_cleanly() {
+        let mut cfg = quick_cfg();
+        cfg.pm_counts = vec![0; cfg.pm_counts.len()];
+        cfg.fault_rate = 0.0; // fault targeting needs a non-empty fleet
+        cfg.n_intervals = 2;
+        cfg.n_workloads = 4;
+        let manifest = test_manifest();
+        let sched = scheduler::build(cfg.scheduler, Pcg::seeded(5));
+        let mut sim = Simulation::new(cfg, &manifest, sched, Box::new(NullManager));
+        sim.set_trace(TraceSink::mem());
+        let (m, sink) = sim.run_traced();
+        assert_eq!(m.intervals.len(), 2);
+        for iv in &m.intervals {
+            assert!(iv.energy_kwh == 0.0 && iv.cpu_util == 0.0, "ghost load: {iv:?}");
+            assert!(iv.contention.is_finite());
+        }
+        assert_eq!(m.tasks_done, 0, "nothing can run on zero VMs");
+        let replayed = crate::sim::trace::replay(sink.events());
+        m.assert_deterministic_eq(&replayed, "empty-fleet");
     }
 
     #[test]

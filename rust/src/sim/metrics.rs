@@ -6,7 +6,7 @@ use crate::sim::world::World;
 use crate::util::stats::{mape, Summary};
 
 /// Snapshot of one scheduling interval.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct IntervalMetrics {
     pub t: f64,
     /// Eq. 7 energy over the interval, kWh.
@@ -40,8 +40,10 @@ pub struct RunMetrics {
     pub straggler_pred: Vec<(f64, f64)>,
     /// Straggler classification confusion (Fig. 2 F1).
     pub confusion: crate::util::stats::Confusion,
-    /// Wall-clock seconds spent inside the straggler manager (Fig. 10).
-    pub manager_overhead_s: f64,
+    /// Wall-time attribution of each interval phase (Fig. 10 overhead is
+    /// derived from the predict+mitigate counters — see
+    /// [`RunMetrics::manager_overhead_s`]).
+    pub profile: crate::sim::trace::PhaseProfile,
     /// Per-mitigation latency: time from task start to the mitigation
     /// action (Fig. 5's detection+mitigation delay).
     pub mitigation_delays: Vec<f64>,
@@ -127,6 +129,65 @@ impl RunMetrics {
         }
         self.straggler_pred.push((predicted_stragglers, actual_stragglers as f64));
         self.jobs_done += 1;
+    }
+
+    /// Fig. 10's manager overhead: wall-clock seconds spent inside the
+    /// straggler manager (prediction + mitigation).  The single shared
+    /// definition — the phase profiler's predict+mitigate counters; the
+    /// engine times those phases with contiguous `Instant`s, so the sum
+    /// spans exactly the old lump measurement around the manager block.
+    pub fn manager_overhead_s(&self) -> f64 {
+        self.profile.manager_overhead_s()
+    }
+
+    /// First mismatch between two runs over every *deterministic* field
+    /// (wall-clock — `profile` — is measurement, not simulation state,
+    /// and is excluded).  Comparisons are bitwise (`==` on f64): the
+    /// parity contract between indexed/reference worlds and between a
+    /// live run and `trace::replay` is exactness, not tolerance.
+    pub fn diff_deterministic(&self, other: &RunMetrics) -> Option<String> {
+        fn ne<T: PartialEq + std::fmt::Debug>(field: &str, a: &T, b: &T) -> Option<String> {
+            (a != b).then(|| format!("{field}: {a:?} vs {b:?}"))
+        }
+        if self.intervals.len() != other.intervals.len() {
+            return Some(format!(
+                "intervals.len: {} vs {}",
+                self.intervals.len(),
+                other.intervals.len()
+            ));
+        }
+        for (i, (a, b)) in self.intervals.iter().zip(&other.intervals).enumerate() {
+            if a != b {
+                return Some(format!("intervals[{i}]: {a:?} vs {b:?}"));
+            }
+        }
+        ne("exec_times", &self.exec_times, &other.exec_times)
+            .or_else(|| ne("restart_times", &self.restart_times, &other.restart_times))
+            .or_else(|| ne("completion_times", &self.completion_times, &other.completion_times))
+            .or_else(|| {
+                ne("sla_violated_weight", &self.sla_violated_weight, &other.sla_violated_weight)
+            })
+            .or_else(|| ne("sla_total_weight", &self.sla_total_weight, &other.sla_total_weight))
+            .or_else(|| ne("straggler_pred", &self.straggler_pred, &other.straggler_pred))
+            .or_else(|| ne("confusion.tp", &self.confusion.tp, &other.confusion.tp))
+            .or_else(|| ne("confusion.fp", &self.confusion.fp, &other.confusion.fp))
+            .or_else(|| ne("confusion.fn", &self.confusion.fn_, &other.confusion.fn_))
+            .or_else(|| ne("confusion.tn", &self.confusion.tn, &other.confusion.tn))
+            .or_else(|| {
+                ne("mitigation_delays", &self.mitigation_delays, &other.mitigation_delays)
+            })
+            .or_else(|| ne("speculations", &self.speculations, &other.speculations))
+            .or_else(|| ne("reruns", &self.reruns, &other.reruns))
+            .or_else(|| ne("jobs_done", &self.jobs_done, &other.jobs_done))
+            .or_else(|| ne("tasks_done", &self.tasks_done, &other.tasks_done))
+    }
+
+    /// Panic with the first mismatching field (test helper shared by the
+    /// world-parity and trace-replay suites).
+    pub fn assert_deterministic_eq(&self, other: &RunMetrics, label: &str) {
+        if let Some(diff) = self.diff_deterministic(other) {
+            panic!("[{label}] metrics diverge — {diff}");
+        }
     }
 
     // ------------------------------------------------------- aggregates

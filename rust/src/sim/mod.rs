@@ -18,10 +18,12 @@
 pub mod engine;
 pub mod faults;
 pub mod metrics;
+pub mod trace;
 pub mod types;
 pub mod world;
 
 pub use engine::{Manager, NullManager, Simulation};
 pub use metrics::{IntervalMetrics, RunMetrics};
+pub use trace::{Event, Phase, PhaseProfile, TraceSink};
 pub use types::*;
 pub use world::World;

@@ -1,0 +1,1357 @@
+//! Sim observability: structured event trace + phase profiler (DESIGN.md
+//! §10).  Not to be confused with `crate::trace`, the *workload* traces
+//! (PlanetLab / generative); this module records what the simulator *did*.
+//!
+//! Three pieces:
+//!
+//! * [`Event`] / [`TraceSink`] — an append-only stream of every task
+//!   lifecycle transition (admit/start/complete/kill/hold/clone), scored
+//!   predictions (E_S), mitigation actions, injected faults and
+//!   per-interval resource snapshots, recorded by `World` (state
+//!   transitions) and `Simulation` (decisions).  The sink is a no-op
+//!   unless explicitly enabled — one predicted branch per site, event
+//!   construction skipped — and with the `sim-trace` cargo feature off it
+//!   compiles to a zero-sized type (the compile-time-checked no-op path;
+//!   bench floors are measured with the sink `Off`).
+//! * [`PhaseProfile`] — wall-time attribution of each interval to
+//!   advance / arrivals / placement / predict / mitigate / metrics,
+//!   accumulated in integer nanoseconds.  Fig. 10's manager overhead is
+//!   *defined* as the predict+mitigate counters (one shared definition;
+//!   see `RunMetrics::manager_overhead_s`).
+//! * [`replay`] — the keystone invariant: a standalone reducer that
+//!   re-derives `RunMetrics` from the event stream alone, bit-identical
+//!   to the live run (`rust/tests/trace_replay.rs`), making a recorded
+//!   trace a verified ground-truth artifact instead of best-effort
+//!   logging.
+//!
+//! Serialization is JSONL (one compact object per line, lossless f64
+//! round-trip, replayable) or CSV (flat lossy view for spreadsheets),
+//! via `util::json` — no external dependencies.
+
+use crate::sim::metrics::{IntervalMetrics, RunMetrics};
+use crate::sim::types::{HostId, JobId, TaskId, VmId};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeSet, HashMap};
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+// ===================================================================== events
+
+/// Task state at admission (for set recounting; engine-created tasks are
+/// always `Pending`, tests may admit in other states).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifeState {
+    Pending,
+    Running,
+    Held,
+    Done,
+}
+
+/// Mitigation strategy tag (mirrors `mitigation::Action`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MitigationKind {
+    Speculate,
+    Rerun,
+    Hold,
+}
+
+/// An injected fault, with its resolved target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    Host { host: HostId, until: f64 },
+    Cloudlet { vm: VmId, task: Option<TaskId> },
+    VmCreation { vm: VmId, ready_at: f64 },
+}
+
+/// One trace record.  World-level events are state transitions (recorded
+/// at the registry choke points); engine-level events are decisions and
+/// metric facts.  Every event carries the simulation time `t`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Run header (first event when tracing a `Simulation`).
+    Meta { seed: u64, n_intervals: usize, interval_s: f64, technique: String, scheduler: String },
+    // ----------------------------------------------- world: task lifecycle
+    TaskAdmit {
+        t: f64,
+        task: TaskId,
+        job: JobId,
+        submit_t: f64,
+        /// `Some(orig)` marks a speculative clone of `orig`.
+        speculative_of: Option<TaskId>,
+        state: LifeState,
+    },
+    TaskStart { t: f64, task: TaskId, vm: VmId, slowdown: f64 },
+    /// Physical completion (this execution finished).
+    TaskComplete { t: f64, task: TaskId },
+    /// Logical completion via a clone (this execution did not finish).
+    TaskSuperseded { t: f64, task: TaskId },
+    TaskKill { t: f64, task: TaskId },
+    TaskReset { t: f64, task: TaskId, penalty_s: f64 },
+    TaskHold { t: f64, task: TaskId, until: f64 },
+    TaskRelease { t: f64, task: TaskId },
+    // ----------------------------------------------- world: job lifecycle
+    JobAdmit { t: f64, job: JobId, tasks: Vec<TaskId>, deadline_driven: bool, sla_weight: f64 },
+    JobSla { t: f64, job: JobId, deadline: f64 },
+    JobDone { t: f64, job: JobId },
+    // ------------------------------------------------- engine: metric facts
+    /// An original task's result became available (clone- or self-finish):
+    /// the record behind exec/restart/completion times and the confusion
+    /// counts (`mitigated` = predicted straggler, `straggler` = ground
+    /// truth).
+    TaskResult { t: f64, task: TaskId, job: JobId, mitigated: bool, straggler: bool },
+    /// Job finished: the technique's predicted straggler count E_S scored
+    /// against the realized count (Eq. 14 MAPE; SLA via `JobSla`).
+    JobScore { t: f64, job: JobId, predicted_es: f64, actual_stragglers: usize },
+    // -------------------------------------------------- engine: decisions
+    Mitigate {
+        t: f64,
+        task: TaskId,
+        kind: MitigationKind,
+        /// Whether the action took effect (a stale target is skipped).
+        applied: bool,
+        /// The task's first start time, when it had one (delay metric).
+        started: Option<f64>,
+    },
+    /// Manager vetoed a placement (Wrangler); the task stays pending.
+    Veto { t: f64, task: TaskId, vm: VmId },
+    Fault { t: f64, fault: FaultEvent },
+    /// Per-interval resource snapshot (main horizon only).
+    Interval { index: usize, snapshot: IntervalMetrics },
+}
+
+impl Event {
+    /// Simulation time of the event (Meta reports 0).
+    pub fn t(&self) -> f64 {
+        match self {
+            Event::Meta { .. } => 0.0,
+            Event::TaskAdmit { t, .. }
+            | Event::TaskStart { t, .. }
+            | Event::TaskComplete { t, .. }
+            | Event::TaskSuperseded { t, .. }
+            | Event::TaskKill { t, .. }
+            | Event::TaskReset { t, .. }
+            | Event::TaskHold { t, .. }
+            | Event::TaskRelease { t, .. }
+            | Event::JobAdmit { t, .. }
+            | Event::JobSla { t, .. }
+            | Event::JobDone { t, .. }
+            | Event::TaskResult { t, .. }
+            | Event::JobScore { t, .. }
+            | Event::Mitigate { t, .. }
+            | Event::Veto { t, .. }
+            | Event::Fault { t, .. } => *t,
+            Event::Interval { snapshot, .. } => snapshot.t,
+        }
+    }
+
+    /// Schema tag (the JSONL `ev` field / CSV `event` column).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Event::Meta { .. } => "meta",
+            Event::TaskAdmit { .. } => "task_admit",
+            Event::TaskStart { .. } => "task_start",
+            Event::TaskComplete { .. } => "task_complete",
+            Event::TaskSuperseded { .. } => "task_superseded",
+            Event::TaskKill { .. } => "task_kill",
+            Event::TaskReset { .. } => "task_reset",
+            Event::TaskHold { .. } => "task_hold",
+            Event::TaskRelease { .. } => "task_release",
+            Event::JobAdmit { .. } => "job_admit",
+            Event::JobSla { .. } => "job_sla",
+            Event::JobDone { .. } => "job_done",
+            Event::TaskResult { .. } => "task_result",
+            Event::JobScore { .. } => "job_score",
+            Event::Mitigate { .. } => "mitigate",
+            Event::Veto { .. } => "veto",
+            Event::Fault { .. } => "fault",
+            Event::Interval { .. } => "interval",
+        }
+    }
+}
+
+// ============================================================== serialization
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn opt_id(v: Option<usize>) -> Json {
+    match v {
+        Some(i) => num(i),
+        None => Json::Null,
+    }
+}
+
+fn life_str(s: LifeState) -> &'static str {
+    match s {
+        LifeState::Pending => "pending",
+        LifeState::Running => "running",
+        LifeState::Held => "held",
+        LifeState::Done => "done",
+    }
+}
+
+fn life_parse(s: &str) -> Result<LifeState> {
+    Ok(match s {
+        "pending" => LifeState::Pending,
+        "running" => LifeState::Running,
+        "held" => LifeState::Held,
+        "done" => LifeState::Done,
+        other => bail!("unknown life state {other:?}"),
+    })
+}
+
+fn kind_str(k: MitigationKind) -> &'static str {
+    match k {
+        MitigationKind::Speculate => "speculate",
+        MitigationKind::Rerun => "rerun",
+        MitigationKind::Hold => "hold",
+    }
+}
+
+fn kind_parse(s: &str) -> Result<MitigationKind> {
+    Ok(match s {
+        "speculate" => MitigationKind::Speculate,
+        "rerun" => MitigationKind::Rerun,
+        "hold" => MitigationKind::Hold,
+        other => bail!("unknown mitigation kind {other:?}"),
+    })
+}
+
+fn snapshot_json(m: &IntervalMetrics) -> Json {
+    Json::obj(vec![
+        ("t", Json::Num(m.t)),
+        ("energy_kwh", Json::Num(m.energy_kwh)),
+        ("cpu", Json::Num(m.cpu_util)),
+        ("ram", Json::Num(m.ram_util)),
+        ("disk", Json::Num(m.disk_util)),
+        ("net", Json::Num(m.net_util)),
+        ("contention", Json::Num(m.contention)),
+        ("active_tasks", num(m.active_tasks)),
+        ("hosts_down", num(m.hosts_down)),
+    ])
+}
+
+fn snapshot_parse(v: &Json) -> Result<IntervalMetrics> {
+    Ok(IntervalMetrics {
+        t: v.req_f64("t")?,
+        energy_kwh: v.req_f64("energy_kwh")?,
+        cpu_util: v.req_f64("cpu")?,
+        ram_util: v.req_f64("ram")?,
+        disk_util: v.req_f64("disk")?,
+        net_util: v.req_f64("net")?,
+        contention: v.req_f64("contention")?,
+        active_tasks: v.req_usize("active_tasks")?,
+        hosts_down: v.req_usize("hosts_down")?,
+    })
+}
+
+impl Event {
+    /// Tagged JSON object (one JSONL line when dumped).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("ev", Json::str(self.tag()))];
+        match self {
+            Event::Meta { seed, n_intervals, interval_s, technique, scheduler } => {
+                fields.push(("seed", num(*seed as usize)));
+                fields.push(("n_intervals", num(*n_intervals)));
+                fields.push(("interval_s", Json::Num(*interval_s)));
+                fields.push(("technique", Json::str(technique.clone())));
+                fields.push(("scheduler", Json::str(scheduler.clone())));
+            }
+            Event::TaskAdmit { t, task, job, submit_t, speculative_of, state } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("job", num(*job)));
+                fields.push(("submit_t", Json::Num(*submit_t)));
+                fields.push(("clone_of", opt_id(*speculative_of)));
+                fields.push(("state", Json::str(life_str(*state))));
+            }
+            Event::TaskStart { t, task, vm, slowdown } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("vm", num(*vm)));
+                fields.push(("slowdown", Json::Num(*slowdown)));
+            }
+            Event::TaskComplete { t, task }
+            | Event::TaskSuperseded { t, task }
+            | Event::TaskKill { t, task }
+            | Event::TaskRelease { t, task } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+            }
+            Event::TaskReset { t, task, penalty_s } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("penalty_s", Json::Num(*penalty_s)));
+            }
+            Event::TaskHold { t, task, until } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("until", Json::Num(*until)));
+            }
+            Event::JobAdmit { t, job, tasks, deadline_driven, sla_weight } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("job", num(*job)));
+                fields.push(("tasks", Json::Arr(tasks.iter().map(|&x| num(x)).collect())));
+                fields.push(("deadline_driven", Json::Bool(*deadline_driven)));
+                fields.push(("sla_weight", Json::Num(*sla_weight)));
+            }
+            Event::JobSla { t, job, deadline } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("job", num(*job)));
+                fields.push(("deadline", Json::Num(*deadline)));
+            }
+            Event::JobDone { t, job } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("job", num(*job)));
+            }
+            Event::TaskResult { t, task, job, mitigated, straggler } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("job", num(*job)));
+                fields.push(("mitigated", Json::Bool(*mitigated)));
+                fields.push(("straggler", Json::Bool(*straggler)));
+            }
+            Event::JobScore { t, job, predicted_es, actual_stragglers } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("job", num(*job)));
+                fields.push(("predicted_es", Json::Num(*predicted_es)));
+                fields.push(("actual", num(*actual_stragglers)));
+            }
+            Event::Mitigate { t, task, kind, applied, started } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("kind", Json::str(kind_str(*kind))));
+                fields.push(("applied", Json::Bool(*applied)));
+                fields.push((
+                    "started",
+                    match started {
+                        Some(s) => Json::Num(*s),
+                        None => Json::Null,
+                    },
+                ));
+            }
+            Event::Veto { t, task, vm } => {
+                fields.push(("t", Json::Num(*t)));
+                fields.push(("task", num(*task)));
+                fields.push(("vm", num(*vm)));
+            }
+            Event::Fault { t, fault } => {
+                fields.push(("t", Json::Num(*t)));
+                match fault {
+                    FaultEvent::Host { host, until } => {
+                        fields.push(("kind", Json::str("host")));
+                        fields.push(("host", num(*host)));
+                        fields.push(("until", Json::Num(*until)));
+                    }
+                    FaultEvent::Cloudlet { vm, task } => {
+                        fields.push(("kind", Json::str("cloudlet")));
+                        fields.push(("vm", num(*vm)));
+                        fields.push(("task", opt_id(*task)));
+                    }
+                    FaultEvent::VmCreation { vm, ready_at } => {
+                        fields.push(("kind", Json::str("vm_creation")));
+                        fields.push(("vm", num(*vm)));
+                        fields.push(("ready_at", Json::Num(*ready_at)));
+                    }
+                }
+            }
+            Event::Interval { index, snapshot } => {
+                fields.push(("index", num(*index)));
+                fields.push(("snapshot", snapshot_json(snapshot)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of `to_json` (exact f64 round-trip: the serializer prints
+    /// shortest-representation floats).
+    pub fn from_json(v: &Json) -> Result<Event> {
+        let tag = v.req_str("ev")?;
+        let t = || v.req_f64("t");
+        let task = || v.req_usize("task");
+        let job = || v.req_usize("job");
+        Ok(match tag {
+            "meta" => Event::Meta {
+                seed: v.req_f64("seed")? as u64,
+                n_intervals: v.req_usize("n_intervals")?,
+                interval_s: v.req_f64("interval_s")?,
+                technique: v.req_str("technique")?.to_string(),
+                scheduler: v.req_str("scheduler")?.to_string(),
+            },
+            "task_admit" => Event::TaskAdmit {
+                t: t()?,
+                task: task()?,
+                job: job()?,
+                submit_t: v.req_f64("submit_t")?,
+                speculative_of: v
+                    .get("clone_of")
+                    .and_then(Json::as_f64)
+                    .map(|f| f as usize),
+                state: life_parse(v.req_str("state")?)?,
+            },
+            "task_start" => Event::TaskStart {
+                t: t()?,
+                task: task()?,
+                vm: v.req_usize("vm")?,
+                slowdown: v.req_f64("slowdown")?,
+            },
+            "task_complete" => Event::TaskComplete { t: t()?, task: task()? },
+            "task_superseded" => Event::TaskSuperseded { t: t()?, task: task()? },
+            "task_kill" => Event::TaskKill { t: t()?, task: task()? },
+            "task_release" => Event::TaskRelease { t: t()?, task: task()? },
+            "task_reset" => Event::TaskReset {
+                t: t()?,
+                task: task()?,
+                penalty_s: v.req_f64("penalty_s")?,
+            },
+            "task_hold" => Event::TaskHold { t: t()?, task: task()?, until: v.req_f64("until")? },
+            "job_admit" => Event::JobAdmit {
+                t: t()?,
+                job: job()?,
+                tasks: v
+                    .req_arr("tasks")?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("non-numeric task id")))
+                    .collect::<Result<_>>()?,
+                deadline_driven: v
+                    .get("deadline_driven")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing deadline_driven"))?,
+                sla_weight: v.req_f64("sla_weight")?,
+            },
+            "job_sla" => Event::JobSla { t: t()?, job: job()?, deadline: v.req_f64("deadline")? },
+            "job_done" => Event::JobDone { t: t()?, job: job()? },
+            "task_result" => Event::TaskResult {
+                t: t()?,
+                task: task()?,
+                job: job()?,
+                mitigated: v
+                    .get("mitigated")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing mitigated"))?,
+                straggler: v
+                    .get("straggler")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing straggler"))?,
+            },
+            "job_score" => Event::JobScore {
+                t: t()?,
+                job: job()?,
+                predicted_es: v.req_f64("predicted_es")?,
+                actual_stragglers: v.req_usize("actual")?,
+            },
+            "mitigate" => Event::Mitigate {
+                t: t()?,
+                task: task()?,
+                kind: kind_parse(v.req_str("kind")?)?,
+                applied: v
+                    .get("applied")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing applied"))?,
+                started: v.get("started").and_then(Json::as_f64),
+            },
+            "veto" => Event::Veto { t: t()?, task: task()?, vm: v.req_usize("vm")? },
+            "fault" => Event::Fault {
+                t: t()?,
+                fault: match v.req_str("kind")? {
+                    "host" => FaultEvent::Host {
+                        host: v.req_usize("host")?,
+                        until: v.req_f64("until")?,
+                    },
+                    "cloudlet" => FaultEvent::Cloudlet {
+                        vm: v.req_usize("vm")?,
+                        task: v.get("task").and_then(Json::as_f64).map(|f| f as usize),
+                    },
+                    "vm_creation" => FaultEvent::VmCreation {
+                        vm: v.req_usize("vm")?,
+                        ready_at: v.req_f64("ready_at")?,
+                    },
+                    other => bail!("unknown fault kind {other:?}"),
+                },
+            },
+            "interval" => Event::Interval {
+                index: v.req_usize("index")?,
+                snapshot: snapshot_parse(
+                    v.get("snapshot").ok_or_else(|| anyhow!("missing snapshot"))?,
+                )?,
+            },
+            other => bail!("unknown event tag {other:?}"),
+        })
+    }
+
+    /// CSV header matching `csv_cells` (flat, lossy view — JSONL is the
+    /// replayable ground-truth format).
+    pub const CSV_HEADER: &'static str = "event,t,task,job,vm,x,y,tag";
+
+    /// Flattened CSV row: per-variant numeric payloads land in `x`/`y`,
+    /// categorical payloads in `tag`; absent columns stay empty.
+    pub fn csv_cells(&self) -> [String; 8] {
+        let f = |v: f64| format!("{v}");
+        let u = |v: usize| v.to_string();
+        let mut c: [String; 8] = Default::default();
+        c[0] = self.tag().to_string();
+        c[1] = f(self.t());
+        match self {
+            Event::Meta { seed, n_intervals, technique, scheduler, .. } => {
+                c[5] = u(*seed as usize);
+                c[6] = u(*n_intervals);
+                c[7] = format!("{technique}/{scheduler}");
+            }
+            Event::TaskAdmit { task, job, submit_t, speculative_of, state, .. } => {
+                c[2] = u(*task);
+                c[3] = u(*job);
+                c[5] = f(*submit_t);
+                if let Some(orig) = speculative_of {
+                    c[6] = u(*orig);
+                }
+                c[7] = life_str(*state).to_string();
+            }
+            Event::TaskStart { task, vm, slowdown, .. } => {
+                c[2] = u(*task);
+                c[4] = u(*vm);
+                c[5] = f(*slowdown);
+            }
+            Event::TaskComplete { task, .. }
+            | Event::TaskSuperseded { task, .. }
+            | Event::TaskKill { task, .. }
+            | Event::TaskRelease { task, .. } => c[2] = u(*task),
+            Event::TaskReset { task, penalty_s, .. } => {
+                c[2] = u(*task);
+                c[5] = f(*penalty_s);
+            }
+            Event::TaskHold { task, until, .. } => {
+                c[2] = u(*task);
+                c[5] = f(*until);
+            }
+            Event::JobAdmit { job, tasks, sla_weight, .. } => {
+                c[3] = u(*job);
+                c[5] = f(*sla_weight);
+                c[6] = u(tasks.len());
+            }
+            Event::JobSla { job, deadline, .. } => {
+                c[3] = u(*job);
+                c[5] = f(*deadline);
+            }
+            Event::JobDone { job, .. } => c[3] = u(*job),
+            Event::TaskResult { task, job, mitigated, straggler, .. } => {
+                c[2] = u(*task);
+                c[3] = u(*job);
+                c[5] = u(*mitigated as usize);
+                c[6] = u(*straggler as usize);
+            }
+            Event::JobScore { job, predicted_es, actual_stragglers, .. } => {
+                c[3] = u(*job);
+                c[5] = f(*predicted_es);
+                c[6] = u(*actual_stragglers);
+            }
+            Event::Mitigate { task, kind, applied, started, .. } => {
+                c[2] = u(*task);
+                c[5] = u(*applied as usize);
+                if let Some(s) = started {
+                    c[6] = f(*s);
+                }
+                c[7] = kind_str(*kind).to_string();
+            }
+            Event::Veto { task, vm, .. } => {
+                c[2] = u(*task);
+                c[4] = u(*vm);
+            }
+            Event::Fault { fault, .. } => match fault {
+                FaultEvent::Host { host, until } => {
+                    c[5] = u(*host);
+                    c[6] = f(*until);
+                    c[7] = "host".to_string();
+                }
+                FaultEvent::Cloudlet { vm, task } => {
+                    c[4] = u(*vm);
+                    if let Some(tk) = task {
+                        c[2] = u(*tk);
+                    }
+                    c[7] = "cloudlet".to_string();
+                }
+                FaultEvent::VmCreation { vm, ready_at } => {
+                    c[4] = u(*vm);
+                    c[5] = f(*ready_at);
+                    c[7] = "vm_creation".to_string();
+                }
+            },
+            Event::Interval { index, snapshot } => {
+                c[5] = u(*index);
+                c[6] = f(snapshot.energy_kwh);
+            }
+        }
+        c
+    }
+}
+
+/// Serialize events as JSONL into a writer.
+pub fn write_jsonl(events: &[Event], w: &mut impl Write) -> std::io::Result<()> {
+    for e in events {
+        writeln!(w, "{}", e.to_json().dump())?;
+    }
+    Ok(())
+}
+
+/// Parse a JSONL event stream (blank lines skipped).
+pub fn read_jsonl(text: &str) -> Result<Vec<Event>> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .enumerate()
+        .map(|(i, line)| {
+            let v = json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            Event::from_json(&v).with_context(|| format!("trace line {}", i + 1))
+        })
+        .collect()
+}
+
+/// Load a JSONL trace file.
+pub fn load_jsonl(path: impl AsRef<Path>) -> Result<Vec<Event>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    read_jsonl(&text)
+}
+
+// ======================================================================= sink
+
+/// Append-only event sink.  The default (`Off`) costs one branch per
+/// instrumentation site — the event-construction closure is never
+/// invoked.  With the `sim-trace` feature disabled the sink is a
+/// zero-sized no-op (checked by `cargo check --no-default-features`).
+#[derive(Default)]
+pub struct TraceSink {
+    #[cfg(feature = "sim-trace")]
+    inner: Inner,
+}
+
+#[cfg(feature = "sim-trace")]
+#[derive(Default)]
+enum Inner {
+    #[default]
+    Off,
+    Mem(Vec<Event>),
+    File {
+        w: std::io::BufWriter<std::fs::File>,
+        csv: bool,
+        n: usize,
+    },
+}
+
+impl TraceSink {
+    /// The disabled sink (same as `Default`).
+    pub fn off() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// Collect events in memory (replay/tests).
+    pub fn mem() -> TraceSink {
+        #[cfg(feature = "sim-trace")]
+        {
+            TraceSink { inner: Inner::Mem(Vec::new()) }
+        }
+        #[cfg(not(feature = "sim-trace"))]
+        TraceSink::default()
+    }
+
+    /// Stream events to a file: `.csv` extension writes the flat CSV
+    /// view, anything else writes replayable JSONL.
+    pub fn file(path: impl AsRef<Path>) -> Result<TraceSink> {
+        let path = path.as_ref();
+        #[cfg(feature = "sim-trace")]
+        {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("creating {}", dir.display()))?;
+                }
+            }
+            let f = std::fs::File::create(path)
+                .with_context(|| format!("creating trace {}", path.display()))?;
+            let csv = path.extension().and_then(|e| e.to_str()) == Some("csv");
+            let mut w = std::io::BufWriter::new(f);
+            if csv {
+                writeln!(w, "{}", Event::CSV_HEADER)?;
+            }
+            Ok(TraceSink { inner: Inner::File { w, csv, n: 0 } })
+        }
+        #[cfg(not(feature = "sim-trace"))]
+        {
+            bail!("trace output requires the `sim-trace` feature (path: {})", path.display())
+        }
+    }
+
+    /// Whether events are being collected.
+    #[inline(always)]
+    pub fn enabled(&self) -> bool {
+        #[cfg(feature = "sim-trace")]
+        {
+            !matches!(self.inner, Inner::Off)
+        }
+        #[cfg(not(feature = "sim-trace"))]
+        false
+    }
+
+    /// Record one event.  `f` is only invoked when the sink is enabled,
+    /// so disabled-path cost is the `Off` check.
+    #[inline(always)]
+    pub fn record(&mut self, f: impl FnOnce() -> Event) {
+        #[cfg(feature = "sim-trace")]
+        match &mut self.inner {
+            Inner::Off => {}
+            Inner::Mem(v) => v.push(f()),
+            Inner::File { w, csv, n } => {
+                let e = f();
+                let res = if *csv {
+                    writeln!(w, "{}", e.csv_cells().join(","))
+                } else {
+                    writeln!(w, "{}", e.to_json().dump())
+                };
+                if res.is_ok() {
+                    *n += 1;
+                }
+            }
+        }
+        #[cfg(not(feature = "sim-trace"))]
+        let _ = f;
+    }
+
+    /// Events collected so far (empty unless a `Mem` sink).
+    pub fn events(&self) -> &[Event] {
+        #[cfg(feature = "sim-trace")]
+        if let Inner::Mem(v) = &self.inner {
+            return v;
+        }
+        &[]
+    }
+
+    /// Consume the sink, returning collected events (`Mem` only).
+    pub fn into_events(self) -> Vec<Event> {
+        #[cfg(feature = "sim-trace")]
+        if let Inner::Mem(v) = self.inner {
+            return v;
+        }
+        Vec::new()
+    }
+
+    /// Number of events recorded.
+    pub fn len(&self) -> usize {
+        #[cfg(feature = "sim-trace")]
+        match &self.inner {
+            Inner::Off => 0,
+            Inner::Mem(v) => v.len(),
+            Inner::File { n, .. } => *n,
+        }
+        #[cfg(not(feature = "sim-trace"))]
+        0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flush buffered output (file sinks); returns the event count.
+    pub fn finish(&mut self) -> Result<usize> {
+        #[cfg(feature = "sim-trace")]
+        if let Inner::File { w, .. } = &mut self.inner {
+            w.flush().context("flushing trace")?;
+        }
+        Ok(self.len())
+    }
+}
+
+// ============================================================= phase profiler
+
+/// Interval phases, in `step_interval` order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Event loop to the interval boundary: completions, faults,
+    /// background load, hold release, feature snapshot.
+    Advance,
+    /// Job arrivals (workload generation + ground-truth sampling).
+    Arrivals,
+    /// Scheduler placement of pending tasks.
+    Placement,
+    /// `Manager::on_interval` — the technique's prediction/decision pass.
+    Predict,
+    /// Applying mitigation actions (speculate/rerun/hold).
+    Mitigate,
+    /// QoS metric snapshot.
+    Metrics,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Advance,
+        Phase::Arrivals,
+        Phase::Placement,
+        Phase::Predict,
+        Phase::Mitigate,
+        Phase::Metrics,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Advance => "advance",
+            Phase::Arrivals => "arrivals",
+            Phase::Placement => "placement",
+            Phase::Predict => "predict",
+            Phase::Mitigate => "mitigate",
+            Phase::Metrics => "metrics",
+        }
+    }
+}
+
+/// Per-run wall-time attribution, accumulated in integer nanoseconds so
+/// phase sums are exact (Duration arithmetic, no float drift): the
+/// engine times predict and mitigate with contiguous `Instant`s, so
+/// `predict + mitigate` spans exactly the old lump-sum Fig. 10
+/// measurement around the manager block.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    nanos: [u64; 6],
+    calls: [u64; 6],
+}
+
+impl PhaseProfile {
+    /// Accumulate one timed span.
+    pub fn add(&mut self, p: Phase, d: Duration) {
+        self.nanos[p as usize] += d.as_nanos() as u64;
+        self.calls[p as usize] += 1;
+    }
+
+    /// Exact accumulated nanoseconds for a phase.
+    pub fn nanos(&self, p: Phase) -> u64 {
+        self.nanos[p as usize]
+    }
+
+    /// Number of timed spans for a phase.
+    pub fn calls(&self, p: Phase) -> u64 {
+        self.calls[p as usize]
+    }
+
+    /// Accumulated seconds for a phase.
+    pub fn seconds(&self, p: Phase) -> f64 {
+        self.nanos[p as usize] as f64 * 1e-9
+    }
+
+    /// Total profiled seconds across all phases.
+    pub fn total_seconds(&self) -> f64 {
+        self.nanos.iter().sum::<u64>() as f64 * 1e-9
+    }
+
+    /// Fig. 10's manager overhead: the predict + mitigate counters (the
+    /// single definition — `RunMetrics::manager_overhead_s` delegates
+    /// here).  Summed in nanoseconds, so it equals the old contiguous
+    /// lump measurement around the manager block exactly.
+    pub fn manager_overhead_s(&self) -> f64 {
+        (self.nanos[Phase::Predict as usize] + self.nanos[Phase::Mitigate as usize]) as f64 * 1e-9
+    }
+
+    /// NaN-free JSON summary: per-phase seconds, call counts and mean
+    /// span (0 when a phase never ran — no 0/0).
+    pub fn to_json(&self) -> Json {
+        let mut phases = Vec::new();
+        for p in Phase::ALL {
+            let calls = self.calls(p);
+            let secs = self.seconds(p);
+            let mean = if calls > 0 { secs / calls as f64 } else { 0.0 };
+            phases.push((
+                p.name(),
+                Json::obj(vec![
+                    ("seconds", Json::Num(secs)),
+                    ("calls", num(calls as usize)),
+                    ("mean_s", Json::Num(mean)),
+                ]),
+            ));
+        }
+        let mut all = vec![
+            ("total_s", Json::Num(self.total_seconds())),
+            ("manager_overhead_s", Json::Num(self.manager_overhead_s())),
+        ];
+        all.extend(phases);
+        Json::obj(all)
+    }
+
+    /// One CSV row of per-phase seconds (see `csv_header`).
+    pub fn csv_row(&self, label: &str) -> String {
+        let mut cells = vec![label.to_string()];
+        for p in Phase::ALL {
+            cells.push(format!("{}", self.seconds(p)));
+        }
+        cells.push(format!("{}", self.total_seconds()));
+        cells.join(",")
+    }
+
+    pub fn csv_header() -> String {
+        let mut cells = vec!["label".to_string()];
+        for p in Phase::ALL {
+            cells.push(format!("{}_s", p.name()));
+        }
+        cells.push("total_s".to_string());
+        cells.join(",")
+    }
+}
+
+// ===================================================================== replay
+
+/// Re-derive `RunMetrics` from an event stream alone.
+///
+/// The invariant (enforced by `rust/tests/trace_replay.rs` for every
+/// scheduler × technique cell, in both indexed and `reference_scans`
+/// modes): for a live run `m` traced into `events`,
+/// `replay(&events)` equals `m` on every deterministic field — the same
+/// f64 bits, because each reduction repeats the live arithmetic on the
+/// same operands in the same order (e.g. exec time = `TaskResult.t −
+/// TaskAdmit.submit_t`, restart time = the ordered sum of `TaskReset`
+/// penalties).  Wall-clock (`profile` / manager overhead) is excluded —
+/// it is measurement, not simulation state.
+pub fn replay(events: &[Event]) -> RunMetrics {
+    let mut m = RunMetrics::default();
+    let mut submit_t: HashMap<TaskId, f64> = HashMap::new();
+    let mut restart: HashMap<TaskId, f64> = HashMap::new();
+    let mut job_weight: HashMap<JobId, f64> = HashMap::new();
+    let mut job_deadline: HashMap<JobId, f64> = HashMap::new();
+    for ev in events {
+        match ev {
+            Event::TaskAdmit { task, submit_t: s, .. } => {
+                submit_t.insert(*task, *s);
+            }
+            Event::TaskReset { task, penalty_s, .. } => {
+                *restart.entry(*task).or_insert(0.0) += penalty_s;
+            }
+            Event::TaskResult { t, task, mitigated, straggler, .. } => {
+                let s = submit_t.get(task).copied().unwrap_or(0.0);
+                m.exec_times.push(t - s);
+                m.restart_times.push(restart.get(task).copied().unwrap_or(0.0));
+                m.completion_times.push(*t);
+                m.tasks_done += 1;
+                m.confusion.record(*mitigated, *straggler);
+            }
+            Event::JobAdmit { job, sla_weight, .. } => {
+                job_weight.insert(*job, *sla_weight);
+            }
+            Event::JobSla { job, deadline, .. } => {
+                job_deadline.insert(*job, *deadline);
+            }
+            Event::JobScore { t, job, predicted_es, actual_stragglers } => {
+                let w = job_weight.get(job).copied().unwrap_or(0.0);
+                m.sla_total_weight += w;
+                if *t > job_deadline.get(job).copied().unwrap_or(0.0) {
+                    m.sla_violated_weight += w;
+                }
+                m.straggler_pred.push((*predicted_es, *actual_stragglers as f64));
+                m.jobs_done += 1;
+            }
+            Event::Mitigate { t, kind, applied, started, .. } => {
+                if *applied {
+                    match kind {
+                        MitigationKind::Speculate => m.speculations += 1,
+                        MitigationKind::Rerun => m.reruns += 1,
+                        MitigationKind::Hold => {}
+                    }
+                    if !matches!(kind, MitigationKind::Hold) {
+                        if let Some(s) = started {
+                            m.mitigation_delays.push(t - s);
+                        }
+                    }
+                }
+            }
+            Event::Interval { snapshot, .. } => m.intervals.push(snapshot.clone()),
+            _ => {}
+        }
+    }
+    m
+}
+
+// ==================================================================== recount
+
+/// Live-set recount from the event stream (the trace-consistency arm of
+/// the world property test): replays lifecycle transitions into
+/// pending/running/held task sets and the active-job set, each in
+/// ascending id order — directly comparable with the `World` accessors
+/// and `assert_consistent`'s from-scratch scan.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct Recount {
+    pub pending: Vec<TaskId>,
+    pub running: Vec<TaskId>,
+    pub held: Vec<TaskId>,
+    pub active_jobs: Vec<JobId>,
+}
+
+pub fn recount(events: &[Event]) -> Recount {
+    let mut pending: BTreeSet<TaskId> = BTreeSet::new();
+    let mut running: BTreeSet<TaskId> = BTreeSet::new();
+    let mut held: BTreeSet<TaskId> = BTreeSet::new();
+    let mut jobs: BTreeSet<JobId> = BTreeSet::new();
+    let mut clear = |id: &TaskId,
+                     p: &mut BTreeSet<TaskId>,
+                     r: &mut BTreeSet<TaskId>,
+                     h: &mut BTreeSet<TaskId>| {
+        p.remove(id);
+        r.remove(id);
+        h.remove(id);
+    };
+    for ev in events {
+        match ev {
+            Event::TaskAdmit { task, state, .. } => match state {
+                LifeState::Pending => {
+                    pending.insert(*task);
+                }
+                LifeState::Running => {
+                    running.insert(*task);
+                }
+                LifeState::Held => {
+                    held.insert(*task);
+                }
+                LifeState::Done => {}
+            },
+            Event::TaskStart { task, .. } => {
+                clear(task, &mut pending, &mut running, &mut held);
+                running.insert(*task);
+            }
+            Event::TaskComplete { task, .. }
+            | Event::TaskSuperseded { task, .. }
+            | Event::TaskKill { task, .. } => {
+                clear(task, &mut pending, &mut running, &mut held);
+            }
+            Event::TaskReset { task, .. } | Event::TaskRelease { task, .. } => {
+                clear(task, &mut pending, &mut running, &mut held);
+                pending.insert(*task);
+            }
+            Event::TaskHold { task, .. } => {
+                clear(task, &mut pending, &mut running, &mut held);
+                held.insert(*task);
+            }
+            Event::JobAdmit { job, .. } => {
+                jobs.insert(*job);
+            }
+            Event::JobDone { job, .. } => {
+                jobs.remove(job);
+            }
+            _ => {}
+        }
+    }
+    Recount {
+        pending: pending.into_iter().collect(),
+        running: running.into_iter().collect(),
+        held: held.into_iter().collect(),
+        active_jobs: jobs.into_iter().collect(),
+    }
+}
+
+// ====================================================================== tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One of every variant with awkward payloads (irrational floats,
+    /// None/Some options, empty vectors).
+    fn one_of_each() -> Vec<Event> {
+        vec![
+            Event::Meta {
+                seed: 42,
+                n_intervals: 288,
+                interval_s: 300.0,
+                technique: "START".into(),
+                scheduler: "A3c".into(),
+            },
+            Event::TaskAdmit {
+                t: 0.1 + 0.2,
+                task: 7,
+                job: 3,
+                submit_t: std::f64::consts::PI,
+                speculative_of: None,
+                state: LifeState::Pending,
+            },
+            Event::TaskAdmit {
+                t: 1.0,
+                task: 8,
+                job: 3,
+                submit_t: 1.0,
+                speculative_of: Some(7),
+                state: LifeState::Running,
+            },
+            Event::TaskStart { t: 2.5, task: 7, vm: 11, slowdown: 1.0 / 3.0 },
+            Event::TaskComplete { t: 3.0, task: 7 },
+            Event::TaskSuperseded { t: 3.0, task: 9 },
+            Event::TaskKill { t: 3.5, task: 8 },
+            Event::TaskReset { t: 4.0, task: 10, penalty_s: 30.0 },
+            Event::TaskHold { t: 4.5, task: 11, until: 600.125 },
+            Event::TaskRelease { t: 600.25, task: 11 },
+            Event::JobAdmit {
+                t: 0.0,
+                job: 3,
+                tasks: vec![7, 9, 10],
+                deadline_driven: true,
+                sla_weight: 2.5,
+            },
+            Event::JobAdmit {
+                t: 0.0,
+                job: 4,
+                tasks: vec![],
+                deadline_driven: false,
+                sla_weight: 1.0,
+            },
+            Event::JobSla { t: 0.0, job: 3, deadline: 1234.567_890_123 },
+            Event::JobDone { t: 900.0, job: 3 },
+            Event::TaskResult { t: 900.0, task: 7, job: 3, mitigated: true, straggler: false },
+            Event::JobScore { t: 900.0, job: 3, predicted_es: 1.75, actual_stragglers: 2 },
+            Event::Mitigate {
+                t: 300.0,
+                task: 7,
+                kind: MitigationKind::Speculate,
+                applied: true,
+                started: Some(12.5),
+            },
+            Event::Mitigate {
+                t: 300.0,
+                task: 9,
+                kind: MitigationKind::Hold,
+                applied: false,
+                started: None,
+            },
+            Event::Mitigate {
+                t: 300.0,
+                task: 10,
+                kind: MitigationKind::Rerun,
+                applied: true,
+                started: None,
+            },
+            Event::Veto { t: 300.0, task: 12, vm: 4 },
+            Event::Fault { t: 301.0, fault: FaultEvent::Host { host: 2, until: 901.0 } },
+            Event::Fault { t: 302.0, fault: FaultEvent::Cloudlet { vm: 5, task: Some(7) } },
+            Event::Fault { t: 302.0, fault: FaultEvent::Cloudlet { vm: 6, task: None } },
+            Event::Fault { t: 303.0, fault: FaultEvent::VmCreation { vm: 5, ready_at: 603.0 } },
+            Event::Interval {
+                index: 0,
+                snapshot: IntervalMetrics {
+                    t: 300.0,
+                    energy_kwh: 0.123_456_789_012_345,
+                    cpu_util: 0.5,
+                    ram_util: 0.25,
+                    disk_util: 0.125,
+                    net_util: 1.0 / 7.0,
+                    contention: 0.0,
+                    active_tasks: 17,
+                    hosts_down: 1,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trip_every_variant() {
+        let events = one_of_each();
+        let mut buf = Vec::new();
+        write_jsonl(&events, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let back = read_jsonl(&text).unwrap();
+        assert_eq!(events.len(), back.len());
+        for (a, b) in events.iter().zip(&back) {
+            assert_eq!(a, b, "round-trip drift for {}", a.tag());
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_bitwise_for_floats() {
+        // Shortest-representation float printing must reproduce exact
+        // bits — the replay contract relies on it.
+        for v in [0.1 + 0.2, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -123.456e-7] {
+            let e = Event::TaskStart { t: v, task: 0, vm: 0, slowdown: v };
+            let back = read_jsonl(&format!("{}\n", e.to_json().dump())).unwrap();
+            match &back[0] {
+                Event::TaskStart { t, slowdown, .. } => {
+                    assert_eq!(t.to_bits(), v.to_bits());
+                    assert_eq!(slowdown.to_bits(), v.to_bits());
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn csv_rows_have_fixed_arity() {
+        let header_cols = Event::CSV_HEADER.split(',').count();
+        for e in one_of_each() {
+            let cells = e.csv_cells();
+            assert_eq!(cells.len(), header_cols, "{}", e.tag());
+            for c in &cells {
+                assert!(!c.contains(','), "{}: cell {c:?} would break CSV", e.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn read_jsonl_rejects_garbage() {
+        assert!(read_jsonl("{\"ev\":\"task_start\"}").is_err()); // missing fields
+        assert!(read_jsonl("{\"ev\":\"warp\"}").is_err()); // unknown tag
+        assert!(read_jsonl("not json").is_err());
+        assert!(read_jsonl("").unwrap().is_empty());
+        assert!(read_jsonl("\n  \n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn replay_of_empty_stream_is_default_metrics() {
+        let m = replay(&[]);
+        assert_eq!(m.tasks_done, 0);
+        assert_eq!(m.jobs_done, 0);
+        assert!(m.intervals.is_empty());
+        assert!(m.exec_times.is_empty());
+        assert_eq!(m.sla_total_weight, 0.0);
+    }
+
+    #[test]
+    fn replay_reduces_lifecycle_arithmetic() {
+        let events = vec![
+            Event::JobAdmit {
+                t: 0.0,
+                job: 0,
+                tasks: vec![0],
+                deadline_driven: true,
+                sla_weight: 2.0,
+            },
+            Event::JobSla { t: 0.0, job: 0, deadline: 50.0 },
+            Event::TaskAdmit {
+                t: 0.0,
+                task: 0,
+                job: 0,
+                submit_t: 10.0,
+                speculative_of: None,
+                state: LifeState::Pending,
+            },
+            Event::TaskReset { t: 20.0, task: 0, penalty_s: 30.0 },
+            Event::TaskReset { t: 40.0, task: 0, penalty_s: 30.0 },
+            Event::Mitigate {
+                t: 45.0,
+                task: 0,
+                kind: MitigationKind::Rerun,
+                applied: true,
+                started: Some(15.0),
+            },
+            Event::TaskResult { t: 100.0, task: 0, job: 0, mitigated: true, straggler: true },
+            Event::JobScore { t: 100.0, job: 0, predicted_es: 1.0, actual_stragglers: 1 },
+        ];
+        let m = replay(&events);
+        assert_eq!(m.exec_times, vec![90.0]);
+        assert_eq!(m.restart_times, vec![60.0]);
+        assert_eq!(m.completion_times, vec![100.0]);
+        assert_eq!(m.mitigation_delays, vec![30.0]);
+        assert_eq!(m.reruns, 1);
+        assert_eq!(m.speculations, 0);
+        assert_eq!((m.sla_violated_weight, m.sla_total_weight), (2.0, 2.0));
+        assert_eq!(m.straggler_pred, vec![(1.0, 1.0)]);
+        assert_eq!(m.confusion.tp, 1);
+        assert_eq!(m.jobs_done, 1);
+        assert_eq!(m.tasks_done, 1);
+    }
+
+    #[test]
+    fn recount_tracks_transitions() {
+        let mk_admit = |task, state| Event::TaskAdmit {
+            t: 0.0,
+            task,
+            job: 0,
+            submit_t: 0.0,
+            speculative_of: None,
+            state,
+        };
+        let events = vec![
+            Event::JobAdmit {
+                t: 0.0,
+                job: 0,
+                tasks: vec![0, 1, 2],
+                deadline_driven: false,
+                sla_weight: 1.0,
+            },
+            mk_admit(0, LifeState::Pending),
+            mk_admit(1, LifeState::Pending),
+            mk_admit(2, LifeState::Pending),
+            Event::TaskStart { t: 1.0, task: 0, vm: 0, slowdown: 1.0 },
+            Event::TaskHold { t: 1.0, task: 1, until: 10.0 },
+            Event::TaskComplete { t: 5.0, task: 0 },
+            Event::TaskRelease { t: 10.0, task: 1 },
+        ];
+        let rc = recount(&events);
+        assert_eq!(rc.pending, vec![1, 2]);
+        assert!(rc.running.is_empty());
+        assert!(rc.held.is_empty());
+        assert_eq!(rc.active_jobs, vec![0]);
+    }
+
+    #[test]
+    fn profiler_output_is_nan_free_even_when_empty() {
+        // Zero-interval runs never tick any phase: the JSON summary must
+        // still contain only finite numbers (no 0/0 means).
+        let empty = PhaseProfile::default();
+        fn assert_finite(v: &Json, path: &str) {
+            match v {
+                Json::Num(n) => assert!(n.is_finite(), "{path} = {n}"),
+                Json::Obj(m) => {
+                    for (k, x) in m {
+                        assert_finite(x, &format!("{path}.{k}"));
+                    }
+                }
+                Json::Arr(a) => {
+                    for (i, x) in a.iter().enumerate() {
+                        assert_finite(x, &format!("{path}[{i}]"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert_finite(&empty.to_json(), "profile");
+        assert_eq!(empty.manager_overhead_s(), 0.0);
+        assert_eq!(empty.total_seconds(), 0.0);
+        // And with data: means are per-call, still finite.
+        let mut p = PhaseProfile::default();
+        p.add(Phase::Predict, Duration::from_micros(250));
+        p.add(Phase::Mitigate, Duration::from_micros(750));
+        assert_finite(&p.to_json(), "profile");
+        assert_eq!(p.manager_overhead_s(), 1e-3);
+        assert_eq!(p.calls(Phase::Predict), 1);
+        // CSV row arity matches the header.
+        assert_eq!(
+            p.csv_row("x").split(',').count(),
+            PhaseProfile::csv_header().split(',').count()
+        );
+    }
+
+    #[cfg(feature = "sim-trace")]
+    #[test]
+    fn sink_modes() {
+        let mut off = TraceSink::off();
+        off.record(|| panic!("disabled sink must not build events"));
+        assert!(!off.enabled());
+        assert_eq!(off.len(), 0);
+
+        let mut mem = TraceSink::mem();
+        assert!(mem.enabled());
+        mem.record(|| Event::TaskComplete { t: 1.0, task: 0 });
+        assert_eq!(mem.len(), 1);
+        assert_eq!(mem.events().len(), 1);
+        assert_eq!(mem.into_events().len(), 1);
+
+        let dir = std::env::temp_dir().join(format!("start_sim_trace_{}", std::process::id()));
+        let path = dir.join("t.jsonl");
+        let mut file = TraceSink::file(&path).unwrap();
+        file.record(|| Event::TaskComplete { t: 1.0, task: 0 });
+        assert_eq!(file.finish().unwrap(), 1);
+        drop(file);
+        let back = load_jsonl(&path).unwrap();
+        assert_eq!(back, vec![Event::TaskComplete { t: 1.0, task: 0 }]);
+        let csv_path = dir.join("t.csv");
+        let mut csv = TraceSink::file(&csv_path).unwrap();
+        csv.record(|| Event::TaskComplete { t: 1.0, task: 0 });
+        csv.finish().unwrap();
+        drop(csv);
+        let text = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(text.starts_with(Event::CSV_HEADER));
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -31,6 +31,7 @@
 //! and `placement` benchmarks run both modes and compare.
 
 use crate::config::SimConfig;
+use crate::sim::trace::{Event, LifeState, TraceSink};
 use crate::sim::types::*;
 use std::borrow::Cow;
 use std::cmp::{Ordering, Reverse};
@@ -190,6 +191,11 @@ pub struct World {
     /// Duplicates are allowed (a VM hit by several faults pushes several
     /// entries); stale pops are filtered against live state.
     suspend_heap: BinaryHeap<Reverse<(EtaKey, VmId)>>,
+    // ------------------------------------------------- observability (§10)
+    /// Structured event sink (sim/trace.rs): every state transition above
+    /// records through it.  Off by default — one predicted branch per
+    /// site; install with [`World::set_trace`].
+    trace: TraceSink,
 }
 
 impl World {
@@ -267,7 +273,34 @@ impl World {
             avail_sorted: (0..n_vms).collect(),
             avail_dirty: false,
             suspend_heap: BinaryHeap::new(),
+            trace: TraceSink::default(),
         }
+    }
+
+    // -------------------------------------------------------- observability
+
+    /// Install an event sink; subsequent state transitions are recorded.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// Remove and return the sink (leaves tracing off).
+    pub fn take_trace(&mut self) -> TraceSink {
+        std::mem::take(&mut self.trace)
+    }
+
+    /// Events collected so far (in-memory sinks; empty otherwise).
+    pub fn trace_events(&self) -> &[Event] {
+        self.trace.events()
+    }
+
+    /// Record an event through the sink.  The closure runs only when
+    /// tracing is enabled; it may capture any non-`World` state (the
+    /// engine records decision events through this without borrowing the
+    /// rest of the world).
+    #[inline(always)]
+    pub fn trace_record(&mut self, f: impl FnOnce() -> Event) {
+        self.trace.record(f);
     }
 
     // ------------------------------------------------------------ registry
@@ -282,6 +315,22 @@ impl World {
         let job = t.job;
         let active = t.is_active();
         let spec_of = t.speculative_of;
+        let now = self.now;
+        let submit_t = t.submit_t;
+        let life = match t.state {
+            TaskState::Pending => LifeState::Pending,
+            TaskState::Running => LifeState::Running,
+            TaskState::Held { .. } => LifeState::Held,
+            TaskState::Completed { .. } | TaskState::Killed => LifeState::Done,
+        };
+        self.trace.record(|| Event::TaskAdmit {
+            t: now,
+            task: id,
+            job,
+            submit_t,
+            speculative_of: spec_of,
+            state: life,
+        });
         self.tasks.push(t);
         if active {
             self.job_active_tasks[job] += 1;
@@ -306,6 +355,14 @@ impl World {
             self.job_active_tasks.resize(id + 1, 0);
         }
         let active = j.is_active();
+        let now = self.now;
+        self.trace.record(|| Event::JobAdmit {
+            t: now,
+            job: id,
+            tasks: j.tasks.clone(),
+            deadline_driven: j.deadline_driven,
+            sla_weight: j.sla_weight,
+        });
         self.jobs.push(j);
         if active {
             self.active_job_set.insert(id);
@@ -318,6 +375,8 @@ impl World {
         if self.jobs[job].is_active() {
             self.jobs[job].state = JobState::Done { t: self.now };
             self.active_job_set.remove(job);
+            let now = self.now;
+            self.trace.record(|| Event::JobDone { t: now, job });
         }
     }
 
@@ -335,6 +394,8 @@ impl World {
     /// Set a job's absolute SLA deadline.
     pub fn set_job_sla_deadline(&mut self, job: JobId, deadline: f64) {
         self.jobs[job].sla_deadline = deadline;
+        let now = self.now;
+        self.trace.record(|| Event::JobSla { t: now, job, deadline });
     }
 
     fn index_enter_state(&mut self, id: TaskId) {
@@ -803,6 +864,9 @@ impl World {
             self.host_tasks[self.vms[vm].host] += 1;
             self.refresh_vm_load(vm);
         }
+        let now = self.now;
+        let sd = self.tasks[task].slowdown;
+        self.trace.record(|| Event::TaskStart { t: now, task, vm, slowdown: sd });
     }
 
     /// Remove a task from its VM (completion, kill, restart).
@@ -823,6 +887,8 @@ impl World {
         self.set_task_state(task, TaskState::Completed { t: self.now });
         self.tasks[task].remaining_mi = 0.0;
         self.completed_log.push(task);
+        let now = self.now;
+        self.trace.record(|| Event::TaskComplete { t: now, task });
     }
 
     /// Complete a task whose result arrived via its speculative clone: the
@@ -831,12 +897,16 @@ impl World {
     pub fn complete_superseded(&mut self, task: TaskId) {
         self.unplace_task(task);
         self.set_task_state(task, TaskState::Completed { t: self.now });
+        let now = self.now;
+        self.trace.record(|| Event::TaskSuperseded { t: now, task });
     }
 
     /// Kill a task (lost race / superseded) and detach it.
     pub fn kill_task(&mut self, task: TaskId) {
         self.unplace_task(task);
         self.set_task_state(task, TaskState::Killed);
+        let now = self.now;
+        self.trace.record(|| Event::TaskKill { t: now, task });
     }
 
     /// Reset a task to pending with full work (restart after fault/rerun);
@@ -848,12 +918,16 @@ impl World {
         t.remaining_mi = t.length_mi;
         t.restarts += 1;
         t.restart_time += restart_penalty_s;
+        let now = self.now;
+        self.trace.record(|| Event::TaskReset { t: now, task, penalty_s: restart_penalty_s });
     }
 
     /// Put a pending task on hold until `until` (Wrangler-style delaying).
     pub fn hold_task(&mut self, task: TaskId, until: f64) -> bool {
         if self.tasks[task].state == TaskState::Pending {
             self.set_task_state(task, TaskState::Held { until });
+            let now = self.now;
+            self.trace.record(|| Event::TaskHold { t: now, task, until });
             true
         } else {
             false
@@ -880,6 +954,7 @@ impl World {
             .collect();
         for &t in &expired {
             self.set_task_state(t, TaskState::Pending);
+            self.trace.record(|| Event::TaskRelease { t: now, task: t });
         }
         expired.len()
     }
@@ -1624,6 +1699,11 @@ mod tests {
     fn prop_indexes_consistent_under_random_ops() {
         ptest::check("world-index-consistency", 30, |rng| {
             let mut w = world();
+            // Trace-consistency arm: record every transition and check,
+            // after each random op, that the event stream recounts to the
+            // same live sets as the world's indexes.
+            #[cfg(feature = "sim-trace")]
+            w.set_trace(TraceSink::mem());
             // 2–4 jobs with 1–5 tasks each.
             let n_jobs = 2 + rng.below(3);
             for j in 0..n_jobs {
@@ -1728,6 +1808,24 @@ mod tests {
                     }
                 }
                 w.assert_consistent();
+                #[cfg(feature = "sim-trace")]
+                {
+                    let rc = crate::sim::trace::recount(w.trace_events());
+                    if rc.pending != w.pending()
+                        || rc.running != w.running()
+                        || rc.held != w.held()
+                        || rc.active_jobs != w.active_jobs()
+                    {
+                        return Err(format!(
+                            "event recount disagrees with live sets: {rc:?} vs \
+                             pending={:?} running={:?} held={:?} jobs={:?}",
+                            w.pending(),
+                            w.running(),
+                            w.held(),
+                            w.active_jobs()
+                        ));
+                    }
+                }
             }
             // Accessors agree with a forced reference re-scan — including
             // the load aggregates and the availability index, bitwise.

@@ -92,6 +92,10 @@ impl Args {
             .unwrap_or(default))
     }
 
+    pub fn opt_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.opt_str(name).map(std::path::PathBuf::from)
+    }
+
     /// Record accessor usage (reserved for future --help generation).
     pub fn note(&mut self, name: &str) {
         self.seen.push(name.to_string());
@@ -156,6 +160,13 @@ mod tests {
         // A value starting with '-' but not '--' binds to the option.
         let a = parse("x --offset -3.5");
         assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn path_options() {
+        let a = parse("simulate --trace out/run.jsonl");
+        assert_eq!(a.opt_path("trace"), Some(std::path::PathBuf::from("out/run.jsonl")));
+        assert_eq!(a.opt_path("missing"), None);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Golden replay: the JSONL event trace is a *complete* record of a run —
+//! `trace::replay(events)` must re-derive `RunMetrics` from the stream
+//! alone, **bit-identical** to the live run (DESIGN.md §10).
+//!
+//! Every scheduler kind × model-free technique is run on the
+//! placement-heavy cell (high arrival pressure + heavy fault churn, the
+//! same cell as `world_parity.rs`), in both the indexed and
+//! `reference_scans` modes, with a memory sink installed; the replayed
+//! metrics are compared field-by-field with the same exactness contract
+//! as the world-parity suite.  Wall-clock (the phase profiler) is
+//! measurement, not simulation state, and is excluded by
+//! `RunMetrics::diff_deterministic`.
+#![cfg(feature = "sim-trace")]
+
+use start_sim::config::{SchedulerKind, SimConfig, Technique};
+use start_sim::coordinator::model_free_manager;
+use start_sim::runtime::Manifest;
+use start_sim::scheduler;
+use start_sim::sim::engine::Simulation;
+use start_sim::sim::trace::{self, Event, Phase, TraceSink};
+use start_sim::sim::RunMetrics;
+use start_sim::util::rng::Pcg;
+
+const SCHEDULERS: [SchedulerKind; 4] = [
+    SchedulerKind::Random,
+    SchedulerKind::RoundRobin,
+    SchedulerKind::MinMin,
+    SchedulerKind::A3c,
+];
+
+const MODEL_FREE: [Technique; 8] = [
+    Technique::None,
+    Technique::Late,
+    Technique::Grass,
+    Technique::Dolly,
+    Technique::Sgc,
+    Technique::Wrangler,
+    Technique::NearestFit,
+    Technique::Rpps,
+];
+
+/// Placement-heavy cell: ~2.3 tasks/VM of arrival pressure with heavy
+/// availability churn, so the stream exercises every event type
+/// (placements, kills, resets, holds, clones, faults, vetoes).
+fn traced_cfg(kind: SchedulerKind, technique: Technique, reference: bool) -> SimConfig {
+    let mut cfg = SimConfig::test_defaults();
+    cfg.scheduler = kind;
+    cfg.technique = technique;
+    cfg.reference_scans = reference;
+    cfg.n_intervals = 6;
+    cfg.n_workloads = 160;
+    cfg.fault_rate = 1.5;
+    cfg
+}
+
+/// Full run (intervals + drain) with a memory sink installed.
+fn run_traced_cell(cfg: &SimConfig) -> (RunMetrics, Vec<Event>) {
+    let manifest =
+        Manifest::load(start_sim::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
+    let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+    let manager = model_free_manager(cfg.technique).expect("model-free technique");
+    let mut sim = Simulation::new(cfg.clone(), &manifest, sched, manager);
+    sim.set_trace(TraceSink::mem());
+    let (metrics, sink) = sim.run_traced();
+    (metrics, sink.into_events())
+}
+
+#[test]
+fn replay_is_bit_identical_for_every_scheduler_and_technique() {
+    for kind in SCHEDULERS {
+        for technique in MODEL_FREE {
+            for reference in [false, true] {
+                let cfg = traced_cfg(kind, technique, reference);
+                let (live, events) = run_traced_cell(&cfg);
+                let label = format!(
+                    "{:?}/{}/{}",
+                    kind,
+                    technique.name(),
+                    if reference { "reference" } else { "indexed" }
+                );
+                assert!(live.tasks_done > 0, "{label}: empty run");
+                assert!(!events.is_empty(), "{label}: empty trace");
+                let replayed = trace::replay(&events);
+                live.assert_deterministic_eq(&replayed, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn replay_survives_a_jsonl_file_round_trip() {
+    let cfg = traced_cfg(SchedulerKind::MinMin, Technique::Grass, false);
+    let path = std::env::temp_dir().join("start_sim_trace_replay_roundtrip.jsonl");
+
+    // Stream the run through the real file sink (BufWriter + finish).
+    let manifest =
+        Manifest::load(start_sim::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
+    let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
+    let manager = model_free_manager(cfg.technique).expect("model-free technique");
+    let mut sim = Simulation::new(cfg.clone(), &manifest, sched, manager);
+    sim.set_trace(TraceSink::file(&path).expect("file sink"));
+    let (live, mut sink) = sim.run_traced();
+    let n = sink.finish().expect("flush");
+    assert!(n > 0, "no events streamed");
+
+    // The file alone reconstructs the run, bit for bit.
+    let events = trace::load_jsonl(&path).expect("load jsonl");
+    assert_eq!(events.len(), n, "event count survives the file round trip");
+    live.assert_deterministic_eq(&trace::replay(&events), "jsonl file round trip");
+
+    // And a second serialization of the parsed stream is byte-stable.
+    let mut buf = Vec::new();
+    trace::write_jsonl(&events, &mut buf).expect("re-serialize");
+    let reparsed = trace::read_jsonl(std::str::from_utf8(&buf).unwrap()).expect("re-parse");
+    assert_eq!(events, reparsed, "JSONL round trip is lossless");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Fig. 10 regression: `manager_overhead_s` now has one shared
+/// definition — the profiler's predict+mitigate counters.  The engine
+/// times the two phases with contiguous `Instant`s, so their sum spans
+/// exactly the old lump measurement around the manager block; this pins
+/// the delegation chain (metrics method == profile method == raw
+/// counters) bitwise on a seeded run, plus basic sanity of the counters.
+#[test]
+fn fig10_overhead_is_the_profiler_predict_plus_mitigate() {
+    let cfg = traced_cfg(SchedulerKind::RoundRobin, Technique::Grass, false);
+    let (m, _) = run_traced_cell(&cfg);
+
+    let from_counters =
+        (m.profile.nanos(Phase::Predict) + m.profile.nanos(Phase::Mitigate)) as f64 * 1e-9;
+    assert_eq!(m.manager_overhead_s().to_bits(), m.profile.manager_overhead_s().to_bits());
+    assert_eq!(m.manager_overhead_s().to_bits(), from_counters.to_bits());
+
+    assert!(m.manager_overhead_s().is_finite());
+    assert!(m.manager_overhead_s() >= 0.0);
+    assert!(m.manager_overhead_s() <= m.profile.total_seconds());
+    // Both phases are timed once per step (intervals + drain).
+    let steps = m.intervals.len() as u64;
+    assert_eq!(m.profile.calls(Phase::Predict), steps);
+    assert_eq!(m.profile.calls(Phase::Mitigate), steps);
+    assert!(m.profile.total_seconds() > 0.0, "profiler recorded nothing");
+}

@@ -10,30 +10,18 @@
 //! Model-free techniques run hermetically; START / IGRU-SD join in when
 //! the AOT artifacts are available.
 
-use start_sim::baselines::{
-    DollyManager, GrassManager, LateManager, NearestFitManager, RppsManager, SgcManager,
-    WranglerManager,
-};
 use start_sim::config::{SchedulerKind, SimConfig, Technique};
-use start_sim::coordinator::Models;
+use start_sim::coordinator::{model_free_manager, Models};
 use start_sim::runtime::Manifest;
 use start_sim::scheduler;
-use start_sim::sim::engine::{Manager, NullManager, Simulation};
+use start_sim::sim::engine::Simulation;
 use start_sim::sim::RunMetrics;
 use start_sim::util::rng::Pcg;
 
-/// Managers constructible without AOT models.
-fn model_free_manager(t: Technique) -> Box<dyn Manager> {
-    match t {
-        Technique::Wrangler => Box::new(WranglerManager::new()),
-        Technique::Grass => Box::new(GrassManager::new()),
-        Technique::Dolly => Box::new(DollyManager::new()),
-        Technique::Sgc => Box::new(SgcManager::new()),
-        Technique::NearestFit => Box::new(NearestFitManager::new()),
-        Technique::Late => Box::new(LateManager::new()),
-        Technique::Rpps => Box::new(RppsManager::new()),
-        _ => Box::new(NullManager),
-    }
+/// Manager constructible without AOT models (shared with the coordinator
+/// and `trace_replay.rs`).
+fn manager_for(t: Technique) -> Box<dyn start_sim::sim::engine::Manager> {
+    model_free_manager(t).expect("model-free technique")
 }
 
 fn parity_cfg(technique: Technique, reference: bool) -> SimConfig {
@@ -50,8 +38,7 @@ fn run_with_cfg(cfg: SimConfig, technique: Technique) -> RunMetrics {
     let manifest =
         Manifest::load(start_sim::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
     let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
-    let mut sim =
-        Simulation::new(cfg.clone(), &manifest, sched, model_free_manager(technique));
+    let mut sim = Simulation::new(cfg.clone(), &manifest, sched, manager_for(technique));
     for _ in 0..cfg.n_intervals {
         sim.step_interval(true);
     }
@@ -69,36 +56,12 @@ fn run_model_free(technique: Technique, reference: bool) -> RunMetrics {
     run_with_cfg(parity_cfg(technique, reference), technique)
 }
 
-/// Exact (bitwise-value) equality of every deterministic metric field.
-/// `manager_overhead_s` is wall clock and deliberately excluded.
+/// Exact (bitwise-value) equality of every deterministic metric field —
+/// the shared contract in `RunMetrics::assert_deterministic_eq` (wall
+/// clock / phase profile deliberately excluded; `trace_replay.rs` holds
+/// the event stream to the same standard).
 fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, label: &str) {
-    assert_eq!(a.tasks_done, b.tasks_done, "{label}: tasks_done");
-    assert_eq!(a.jobs_done, b.jobs_done, "{label}: jobs_done");
-    assert_eq!(a.speculations, b.speculations, "{label}: speculations");
-    assert_eq!(a.reruns, b.reruns, "{label}: reruns");
-    assert_eq!(a.exec_times, b.exec_times, "{label}: exec_times");
-    assert_eq!(a.restart_times, b.restart_times, "{label}: restart_times");
-    assert_eq!(a.completion_times, b.completion_times, "{label}: completion_times");
-    assert_eq!(a.mitigation_delays, b.mitigation_delays, "{label}: mitigation_delays");
-    assert_eq!(a.straggler_pred, b.straggler_pred, "{label}: straggler_pred");
-    assert_eq!(a.sla_violated_weight, b.sla_violated_weight, "{label}: sla_violated_weight");
-    assert_eq!(a.sla_total_weight, b.sla_total_weight, "{label}: sla_total_weight");
-    assert_eq!(a.confusion.tp, b.confusion.tp, "{label}: confusion.tp");
-    assert_eq!(a.confusion.fp, b.confusion.fp, "{label}: confusion.fp");
-    assert_eq!(a.confusion.fn_, b.confusion.fn_, "{label}: confusion.fn");
-    assert_eq!(a.confusion.tn, b.confusion.tn, "{label}: confusion.tn");
-    assert_eq!(a.intervals.len(), b.intervals.len(), "{label}: interval count");
-    for (i, (x, y)) in a.intervals.iter().zip(&b.intervals).enumerate() {
-        assert_eq!(x.t, y.t, "{label}: interval {i} t");
-        assert_eq!(x.energy_kwh, y.energy_kwh, "{label}: interval {i} energy");
-        assert_eq!(x.cpu_util, y.cpu_util, "{label}: interval {i} cpu");
-        assert_eq!(x.ram_util, y.ram_util, "{label}: interval {i} ram");
-        assert_eq!(x.disk_util, y.disk_util, "{label}: interval {i} disk");
-        assert_eq!(x.net_util, y.net_util, "{label}: interval {i} net");
-        assert_eq!(x.contention, y.contention, "{label}: interval {i} contention");
-        assert_eq!(x.active_tasks, y.active_tasks, "{label}: interval {i} active_tasks");
-        assert_eq!(x.hosts_down, y.hosts_down, "{label}: interval {i} hosts_down");
-    }
+    a.assert_deterministic_eq(b, label);
 }
 
 #[test]
@@ -130,7 +93,7 @@ fn indexed_world_is_bit_identical_across_seeds_and_faults() {
             let manifest = Manifest::load(start_sim::find_artifact_dir())
                 .unwrap_or_else(|_| Manifest::test_default());
             let sched = scheduler::build(cfg.scheduler, Pcg::new(cfg.seed, 0x5C8E));
-            Simulation::new(cfg, &manifest, sched, model_free_manager(Technique::Grass)).run()
+            Simulation::new(cfg, &manifest, sched, manager_for(Technique::Grass)).run()
         };
         let label = format!("grass seed={seed} faults={fault_rate}");
         assert_metrics_identical(&run(false), &run(true), &label);
