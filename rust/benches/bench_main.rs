@@ -11,8 +11,11 @@
 //! seed engine's O(total) reference scans at 1×/10×/50× task counts; the
 //! `placement` group measures the O(1) load accounting + availability
 //! index (DESIGN.md §9) on a placement-bound profile (large fleet, heavy
-//! arrivals, no faults).  Both write machine-readable results to
-//! `BENCH_scale.json` / `BENCH_placement.json` at the **repo root** (the
+//! arrivals, no faults); the `rates` group measures the dirty-host rate
+//! recomputation + incremental finish-time heap (DESIGN.md §11) on a
+//! completion-dense profile (short tasks, heavy arrivals, Dolly cloning).
+//! All write machine-readable results to `BENCH_scale.json` /
+//! `BENCH_placement.json` / `BENCH_rates.json` at the **repo root** (the
 //! perf trajectory tracked per PR).
 //!
 //! Flags (after the optional name filter):
@@ -85,6 +88,10 @@ fn main() {
     // ------------------------------- placement-bound cells (DESIGN.md §9)
     if run("placement") {
         placement_benches(fast, check, &mut failures);
+    }
+    // ------------------- completion-dense cells (DESIGN.md §11 dirty hosts)
+    if run("rates") {
+        rates_benches(fast, check, &mut failures);
     }
     // ---------------------------------------------------- micro benches
     if run("micro") {
@@ -236,6 +243,16 @@ fn placement_floor(scale: usize) -> f64 {
     }
 }
 
+/// Committed floors for the `rates` sweep (mirrors BENCH_rates.json;
+/// the 50× floor is the PR's acceptance criterion).
+fn rates_floor(scale: usize) -> f64 {
+    match scale {
+        0..=1 => 0.8,
+        2..=10 => 2.0,
+        _ => 3.0,
+    }
+}
+
 /// One full no-manager simulation; returns best-of-N wall seconds and
 /// tasks done (best-of filters scheduler noise — a single cold run on a
 /// busy machine can swing the small cells by several ×).
@@ -332,6 +349,66 @@ fn placement_benches(fast: bool, check: bool, failures: &mut Vec<String>) {
         check,
         failures,
     );
+}
+
+/// The completion-dense sweep: the regime where the dirty-host rate
+/// recomputation (DESIGN.md §11) pays off.  Long intervals make most
+/// tasks finish *within* an interval, so each `advance_to` processes a
+/// dense stream of completions — and before §11 every one of them
+/// triggered a full-fleet `recompute_rates`.  Dolly cloning multiplies
+/// completion events further (every clone is an extra start + finish),
+/// and a moderate fault rate sprinkles host invalidations in.  Scale
+/// grows the *total* task population while the per-interval active set
+/// stays flat, so the host-local recompute wins asymptotically.
+fn rates_benches(fast: bool, check: bool, failures: &mut Vec<String>) {
+    let manifest = Manifest::test_default();
+    let all = [(1usize, 400usize, 8usize, 5usize), (10, 4_000, 80, 3), (50, 20_000, 400, 2)];
+    let cells = if fast { &all[..2] } else { &all[..] };
+    let mut results = Vec::new();
+    for &(scale, n_workloads, n_intervals, reps) in cells {
+        let mut cfg = SimConfig::test_defaults();
+        cfg.scheduler = SchedulerKind::RoundRobin;
+        cfg.technique = Technique::Dolly;
+        cfg.n_workloads = n_workloads;
+        cfg.n_intervals = n_intervals;
+        // ~4× the default interval: short tasks relative to the interval,
+        // i.e. a dense completion stream inside every advance_to.
+        cfg.interval_s *= 4.0;
+        cfg.job_lambda = 3.0;
+        cfg.fault_rate = 0.25;
+        let (indexed_s, tasks_done) = run_rates_cell(&cfg, &manifest, false, reps);
+        let (reference_s, tasks_ref) = run_rates_cell(&cfg, &manifest, true, reps);
+        assert_eq!(tasks_done, tasks_ref, "rates cell {scale}x: mode parity broken");
+        let speedup = reference_s / indexed_s.max(1e-12);
+        println!(
+            "bench rates_{scale}x ({n_workloads} tasks / {n_intervals} iv, dolly)   indexed {:>9.3?}  reference {:>9.3?}  speedup {speedup:>6.1}x",
+            secs(indexed_s),
+            secs(reference_s),
+        );
+        results.push(CellResult { scale, n_workloads, n_intervals, tasks_done, indexed_s, reference_s });
+    }
+    let profile = if fast { "fast" } else { "full" };
+    finish_sweep("rates", "BENCH_rates.json", profile, &results, rates_floor, check, failures);
+}
+
+/// Like [`run_scale_cell`] but with the Dolly cloning manager (a fresh
+/// one per rep — managers carry per-run state).
+fn run_rates_cell(cfg: &SimConfig, manifest: &Manifest, reference: bool, reps: usize) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut tasks = 0;
+    for _ in 0..reps.max(1) {
+        let mut c = cfg.clone();
+        c.reference_scans = reference;
+        let sched = start_sim::scheduler::build(c.scheduler, Pcg::seeded(7));
+        let manager = start_sim::coordinator::model_free_manager(c.technique)
+            .expect("rates bench uses a model-free technique");
+        let sim = Simulation::new(c, manifest, sched, manager);
+        let t0 = Instant::now();
+        let m = sim.run();
+        best = best.min(t0.elapsed().as_secs_f64());
+        tasks = m.tasks_done;
+    }
+    (best, tasks)
 }
 
 fn micro_benches() {

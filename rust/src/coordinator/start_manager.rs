@@ -10,9 +10,11 @@
 use crate::mitigation::Action;
 use crate::predictor::{FeatureExtractor, StartPredictor};
 use crate::sim::engine::Manager;
+use crate::sim::trace::PredictSpans;
 use crate::sim::types::*;
 use crate::sim::world::World;
 use std::collections::HashMap;
+use std::time::Instant;
 
 pub struct StartManager {
     predictor: StartPredictor,
@@ -29,6 +31,9 @@ pub struct StartManager {
     predictions: HashMap<JobId, (f64, f64, f64)>,
     /// Kept after completion for MAPE scoring.
     final_predictions: HashMap<JobId, f64>,
+    /// Sub-span breakdown of the last `on_interval` (drained by the engine
+    /// into `PhaseProfile` after each interval).
+    spans: Option<PredictSpans>,
 }
 
 impl StartManager {
@@ -41,6 +46,7 @@ impl StartManager {
             ages: HashMap::new(),
             predictions: HashMap::new(),
             final_predictions: HashMap::new(),
+            spans: None,
         }
     }
 
@@ -97,6 +103,7 @@ impl Manager for StartManager {
         //    Condition (b) alone would mis-fire on tasks slowed purely by
         //    queueing; (a) alone fires too late and too bluntly — together
         //    they give early + precise mitigation.
+        let decide_start = Instant::now();
         let mut actions = Vec::new();
         for &job in &active {
             let Some(&(alpha, beta, es)) = self.predictions.get(&job) else { continue };
@@ -140,7 +147,13 @@ impl Manager for StartManager {
                 });
             }
         }
+        let (features, dispatch) = self.predictor.take_spans();
+        self.spans = Some(PredictSpans { features, dispatch, decide: decide_start.elapsed() });
         actions
+    }
+
+    fn take_predict_spans(&mut self) -> Option<PredictSpans> {
+        self.spans.take()
     }
 
     fn on_task_complete(&mut self, w: &World, task: TaskId) {

@@ -78,6 +78,17 @@ pub fn phase_table(id: &str, results: &[(String, RunMetrics)]) -> Table {
         let calls: u64 = results.iter().map(|(_, m)| m.profile.calls(p)).sum();
         total += secs;
         t.row(vec![p.name().to_string(), format!("{secs:.4}"), calls.to_string()]);
+        if p == Phase::Predict {
+            // Manager-reported sub-spans: a breakdown of the predict row
+            // (not added to the total), present only when instrumented.
+            for (i, name) in crate::sim::trace::PredictSpans::NAMES.iter().enumerate() {
+                let s: f64 = results.iter().map(|(_, m)| m.profile.predict_span(i).0).sum();
+                let c: u64 = results.iter().map(|(_, m)| m.profile.predict_span(i).1).sum();
+                if c > 0 {
+                    t.row(vec![format!("  predict/{name}"), format!("{s:.4}"), c.to_string()]);
+                }
+            }
+        }
     }
     t.row(vec!["total".to_string(), format!("{total:.4}"), "".to_string()]);
     t

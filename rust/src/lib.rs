@@ -69,6 +69,12 @@ pub fn launcher_main() -> anyhow::Result<()> {
                 manifest.n_hosts, manifest.m_feats, manifest.q_tasks, manifest.p_feats,
                 manifest.hidden, manifest.rollout_steps, manifest.rollout_batch
             );
+            println!("subcommands: info | simulate | experiment");
+            println!(
+                "simulate --trace <path>: stream a JSONL event trace (the only \
+                 replayable format — replay parity is checked after the run); \
+                 a .csv path writes a flat export only, no replay (DESIGN.md section 10)"
+            );
             Ok(())
         }
         Some("simulate") => {
@@ -108,6 +114,16 @@ pub fn launcher_main() -> anyhow::Result<()> {
                         m.profile.seconds(p),
                         m.profile.calls(p)
                     );
+                    if p == sim::Phase::Predict {
+                        // Manager-reported sub-spans (breakdown of the
+                        // predict row; omitted when uninstrumented).
+                        for (i, name) in sim::trace::PredictSpans::NAMES.iter().enumerate() {
+                            let (s, c) = m.profile.predict_span(i);
+                            if c > 0 {
+                                println!("    predict/{:<8} {:>6.4} s  ({} intervals)", name, s, c);
+                            }
+                        }
+                    }
                 }
                 println!("  {:<10} {:>10.4} s", "total", m.profile.total_seconds());
             }
@@ -115,6 +131,8 @@ pub fn launcher_main() -> anyhow::Result<()> {
                 println!("trace              : {} events -> {}", n_events, path.display());
                 // Keystone invariant, checked on every traced CLI run:
                 // the JSONL stream alone re-derives the metrics exactly.
+                // CSV is a flat export only — JSONL is the sole replayable
+                // trace format (DESIGN.md §10).
                 if path.extension().and_then(|e| e.to_str()) != Some("csv") {
                     let events = sim::trace::load_jsonl(path)?;
                     let replayed = sim::trace::replay(&events);
@@ -122,6 +140,8 @@ pub fn launcher_main() -> anyhow::Result<()> {
                         None => println!("replay parity      : OK"),
                         Some(d) => anyhow::bail!("replay parity FAILED: {d}"),
                     }
+                } else {
+                    println!("replay parity      : skipped (.csv is export-only; use .jsonl for replay)");
                 }
             }
             if let Some(out) = args.opt_path("out") {

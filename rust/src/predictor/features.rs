@@ -24,6 +24,8 @@ pub struct FeatureExtractor {
     history: VecDeque<Vec<f32>>,
     /// Scratch for raw snapshot (avoids per-tick allocation).
     scratch: Vec<f32>,
+    /// Scratch for per-slot aggregation counts in `build_m_h`.
+    slot_scratch: Vec<f32>,
     initialized: bool,
 }
 
@@ -39,6 +41,7 @@ impl FeatureExtractor {
             ema_m_h: vec![0.0; manifest.mh_len()],
             history: VecDeque::with_capacity(manifest.rollout_steps + 1),
             scratch: vec![0.0; manifest.mh_len()],
+            slot_scratch: vec![0.0; manifest.n_hosts],
             initialized: false,
         }
     }
@@ -47,11 +50,12 @@ impl FeatureExtractor {
     /// aggregated onto `n_hosts` slots (`host.id % n_hosts`): utilizations
     /// and capacities are averaged, task counts summed — the paper's n-host
     /// abstraction over a larger VM fleet.
-    pub fn build_m_h(&self, w: &World, out: &mut [f32]) {
+    pub fn build_m_h(&mut self, w: &World, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n_hosts * self.m_feats);
         out.fill(0.0);
         let (max_mips, max_ram, max_disk, max_bw) = w.fleet_max();
-        let mut slot_count = vec![0.0f32; self.n_hosts];
+        let mut slot_count = std::mem::take(&mut self.slot_scratch);
+        slot_count.fill(0.0);
         for h in &w.hosts {
             let slot = h.id % self.n_hosts;
             let row = &mut out[slot * self.m_feats..(slot + 1) * self.m_feats];
@@ -83,6 +87,7 @@ impl FeatureExtractor {
             // round to the majority for the binary feature the net saw.
             row[H_IS_UP] = if row[H_IS_UP] >= 0.5 { 1.0 } else { 0.0 };
         }
+        self.slot_scratch = slot_count;
     }
 
     /// Build M_T for a job: one row per task slot, zero-padded past q
@@ -132,11 +137,19 @@ impl FeatureExtractor {
             }
         }
         self.scratch = scratch;
-        if self.history.len() == self.rollout_steps {
-            self.history.pop_front();
-        }
-        self.history.push_back(self.ema_m_h.clone());
-        w.latest_m_h = self.ema_m_h.clone();
+        // Recycle the evicted window buffer instead of allocating a fresh
+        // clone, and refresh `world.latest_m_h` in place — the snapshot
+        // path allocates nothing once the window is warm.
+        let mut slot = if self.history.len() == self.rollout_steps {
+            self.history.pop_front().unwrap_or_default()
+        } else {
+            Vec::with_capacity(self.ema_m_h.len())
+        };
+        slot.resize(self.ema_m_h.len(), 0.0);
+        slot.copy_from_slice(&self.ema_m_h);
+        self.history.push_back(slot);
+        w.latest_m_h.resize(self.ema_m_h.len(), 0.0);
+        w.latest_m_h.copy_from_slice(&self.ema_m_h);
     }
 
     /// Current smoothed M_H.
@@ -223,7 +236,7 @@ pub mod tests {
     #[test]
     fn m_h_shape_and_ranges() {
         let w = World::new(&SimConfig::test_defaults());
-        let fx = FeatureExtractor::new(&test_manifest());
+        let mut fx = FeatureExtractor::new(&test_manifest());
         let mut out = vec![0.0f32; fx.n_hosts * fx.m_feats];
         fx.build_m_h(&w, &mut out);
         assert!(out.iter().all(|&x| (0.0..=1.5).contains(&x)), "out of range");
@@ -260,8 +273,7 @@ pub mod tests {
         assert_eq!(fx.history_len(), 1);
         // Load one host then snapshot again: EMA moves by 0.8 of the delta.
         let before = fx.m_h()[H_CPU_UTIL];
-        w.hosts[0].background_load = 0.5;
-        w.mark_rates_dirty();
+        w.set_background_load(0, 0.5);
         fx.snapshot(&mut w);
         let after = fx.m_h()[H_CPU_UTIL];
         assert!(after > before);

@@ -12,6 +12,7 @@ use crate::sim::types::JobId;
 use crate::sim::world::World;
 use anyhow::Result;
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 /// A (job → E_S) prediction.
 #[derive(Clone, Copy, Debug)]
@@ -36,6 +37,11 @@ pub struct StartPredictor {
     mt_scratch: Vec<f32>,
     mh_batch: Vec<f32>,
     mt_batch: Vec<f32>,
+    /// Wall-time accumulators for the Predict-phase sub-span breakdown
+    /// (feature assembly vs PJRT dispatch) across predictions; drained
+    /// once per interval by the manager via [`StartPredictor::take_spans`].
+    span_features: Duration,
+    span_dispatch: Duration,
 }
 
 impl StartPredictor {
@@ -50,8 +56,18 @@ impl StartPredictor {
             mt_scratch: vec![0.0; mt],
             mh_batch: vec![0.0; t * b * mh],
             mt_batch: vec![0.0; t * b * mt],
+            span_features: Duration::ZERO,
+            span_dispatch: Duration::ZERO,
             model,
         }
+    }
+
+    /// Drain the accumulated (feature-assembly, PJRT-dispatch) spans.
+    pub fn take_spans(&mut self) -> (Duration, Duration) {
+        (
+            std::mem::take(&mut self.span_features),
+            std::mem::take(&mut self.span_dispatch),
+        )
     }
 
     /// Predict (α, β, E_S) for one job: fused rollout, single dispatch.
@@ -63,6 +79,7 @@ impl StartPredictor {
     ) -> Result<StragglerPrediction> {
         let (t, mh_len, mt_len) =
             (self.model.manifest.rollout_steps, self.model.manifest.mh_len(), self.model.manifest.mt_len());
+        let t0 = Instant::now();
         fx.m_h_window(&mut self.mh_window);
         self.truncate_window(t, mh_len);
         fx.build_m_t(w, job, &mut self.mt_scratch);
@@ -72,7 +89,11 @@ impl StartPredictor {
         for step in 0..t {
             mt_seq[step * mt_len..(step + 1) * mt_len].copy_from_slice(&self.mt_scratch);
         }
-        let (alpha, beta) = self.model.rollout(&self.mh_window, &mt_seq)?;
+        let t1 = Instant::now();
+        self.span_features += t1 - t0;
+        let rolled = self.model.rollout(&self.mh_window, &mt_seq);
+        self.span_dispatch += t1.elapsed();
+        let (alpha, beta) = rolled?;
         Ok(self.to_prediction(w, job, alpha, beta))
     }
 
@@ -88,6 +109,7 @@ impl StartPredictor {
         let (t, b) = (m.rollout_steps, m.rollout_batch);
         let (mh_len, mt_len) = (m.mh_len(), m.mt_len());
         assert!(jobs.len() <= b, "at most {b} jobs per batched dispatch");
+        let t0 = Instant::now();
         fx.m_h_window(&mut self.mh_window);
         self.truncate_window(t, mh_len);
         self.mh_batch.fill(0.0);
@@ -107,7 +129,11 @@ impl StartPredictor {
                 self.mt_batch[dst..dst + mt_len].copy_from_slice(&self.mt_scratch);
             }
         }
-        let pairs = self.model.rollout_batch(&self.mh_batch, &self.mt_batch)?;
+        let t1 = Instant::now();
+        self.span_features += t1 - t0;
+        let rolled = self.model.rollout_batch(&self.mh_batch, &self.mt_batch);
+        self.span_dispatch += t1.elapsed();
+        let pairs = rolled?;
         Ok(jobs
             .iter()
             .zip(pairs)

@@ -58,6 +58,14 @@ pub trait Manager {
     fn filter_placement(&mut self, _w: &World, _task: TaskId, _vm: VmId) -> bool {
         true
     }
+
+    /// Wall-time sub-spans of the last `on_interval` call (feature
+    /// extraction / model dispatch / decision logic), drained by the
+    /// engine into the Predict phase profile right after the call.
+    /// None when the technique does not self-instrument.
+    fn take_predict_spans(&mut self) -> Option<crate::sim::trace::PredictSpans> {
+        None
+    }
 }
 
 /// A no-op manager (ablation floor: no straggler management).
@@ -221,11 +229,11 @@ impl Simulation {
         let t0 = self.interval as f64 * self.cfg.interval_s;
         let mark0 = Instant::now();
         self.advance_to(t0);
-        // 1. Background (PlanetLab) load for this interval.
+        // 1. Background (PlanetLab) load for this interval.  The setter
+        //    dirties only hosts whose load actually changed.
         for h in 0..self.world.hosts.len() {
-            self.world.hosts[h].background_load = self.traces[h].at(self.interval);
+            self.world.set_background_load(h, self.traces[h].at(self.interval));
         }
-        self.world.mark_rates_dirty();
         // 2. Release expired holds, snapshot features.
         mitigation::release_held(&mut self.world);
         self.fx.snapshot(&mut self.world);
@@ -247,6 +255,12 @@ impl Simulation {
         self.metrics.profile.add(Phase::Placement, mark3 - mark2);
         // 5. Straggler management (Fig. 10 overhead = predict + mitigate).
         let actions = self.manager.on_interval(&self.world, &self.fx);
+        // Per-manager sub-span attribution within the Predict phase
+        // (feature extract / model dispatch / decision) — additive detail,
+        // excluded from the deterministic-parity contract like all timing.
+        if let Some(spans) = self.manager.take_predict_spans() {
+            self.metrics.profile.add_predict_spans(&spans);
+        }
         let mark4 = Instant::now();
         self.metrics.profile.add(Phase::Predict, mark4 - mark3);
         self.apply_actions(actions);
@@ -580,7 +594,8 @@ impl Simulation {
                 for t in victims {
                     self.world.reset_task(t, 30.0);
                 }
-                self.world.mark_rates_dirty();
+                // `set_host_down` and `reset_task` self-mark the affected
+                // hosts dirty — no global invalidation needed.
             }
             Fault::Cloudlet { pick } => {
                 // The network fault strikes a VM; any cloudlet resident

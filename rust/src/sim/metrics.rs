@@ -301,7 +301,6 @@ mod tests {
         let mut rm = RunMetrics::default();
         rm.snapshot(&w, 300.0);
         w.start_task(t, 0, 1.0);
-        w.mark_rates_dirty();
         rm.snapshot(&w, 300.0);
         assert!(rm.intervals[1].energy_kwh > rm.intervals[0].energy_kwh);
     }
@@ -310,7 +309,7 @@ mod tests {
     fn contention_counts_overloaded_host() {
         let (mut w, t) = world_with_task();
         w.start_task(t, 0, 1.0);
-        w.hosts[0].background_load = 0.995; // force cpu util to 1.0
+        w.set_background_load(0, 0.995); // force cpu util to 1.0
         let mut rm = RunMetrics::default();
         rm.snapshot(&w, 300.0);
         assert!(rm.intervals[0].contention > 0.0);

@@ -805,15 +805,47 @@ impl Phase {
     }
 }
 
+/// Sub-spans of one manager `on_interval` call, attributed inside the
+/// Predict phase: feature extraction (window/M_T assembly), model
+/// dispatch (the PJRT rollout call), and decision logic (threshold /
+/// endgame scan over predictions).  Self-timed by instrumented managers
+/// and drained by the engine via `Manager::take_predict_spans`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PredictSpans {
+    pub features: Duration,
+    pub dispatch: Duration,
+    pub decide: Duration,
+}
+
+impl PredictSpans {
+    /// Span names in storage order (mirrors `Phase::name`).
+    pub const NAMES: [&'static str; 3] = ["features", "dispatch", "decide"];
+
+    fn nanos(&self) -> [u64; 3] {
+        [
+            self.features.as_nanos() as u64,
+            self.dispatch.as_nanos() as u64,
+            self.decide.as_nanos() as u64,
+        ]
+    }
+}
+
 /// Per-run wall-time attribution, accumulated in integer nanoseconds so
 /// phase sums are exact (Duration arithmetic, no float drift): the
 /// engine times predict and mitigate with contiguous `Instant`s, so
 /// `predict + mitigate` spans exactly the old lump-sum Fig. 10
 /// measurement around the manager block.
+///
+/// `predict_nanos` holds the manager-reported sub-span breakdown of the
+/// Predict phase (`PredictSpans` order).  The sub-spans are measured
+/// *inside* `on_interval`, so they sum to slightly less than the phase
+/// itself (manager bookkeeping between spans is uninstrumented).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PhaseProfile {
     nanos: [u64; 6],
     calls: [u64; 6],
+    predict_nanos: [u64; 3],
+    predict_calls: u64,
 }
 
 impl PhaseProfile {
@@ -821,6 +853,20 @@ impl PhaseProfile {
     pub fn add(&mut self, p: Phase, d: Duration) {
         self.nanos[p as usize] += d.as_nanos() as u64;
         self.calls[p as usize] += 1;
+    }
+
+    /// Accumulate one manager-reported Predict sub-span breakdown.
+    pub fn add_predict_spans(&mut self, s: &PredictSpans) {
+        for (acc, n) in self.predict_nanos.iter_mut().zip(s.nanos()) {
+            *acc += n;
+        }
+        self.predict_calls += 1;
+    }
+
+    /// Accumulated seconds of one Predict sub-span (`PredictSpans::NAMES`
+    /// index), with the number of drained `on_interval` breakdowns.
+    pub fn predict_span(&self, i: usize) -> (f64, u64) {
+        (self.predict_nanos[i] as f64 * 1e-9, self.predict_calls)
     }
 
     /// Exact accumulated nanoseconds for a phase.
@@ -859,14 +905,33 @@ impl PhaseProfile {
             let calls = self.calls(p);
             let secs = self.seconds(p);
             let mean = if calls > 0 { secs / calls as f64 } else { 0.0 };
-            phases.push((
-                p.name(),
-                Json::obj(vec![
-                    ("seconds", Json::Num(secs)),
-                    ("calls", num(calls as usize)),
-                    ("mean_s", Json::Num(mean)),
-                ]),
-            ));
+            let mut fields = vec![
+                ("seconds", Json::Num(secs)),
+                ("calls", num(calls as usize)),
+                ("mean_s", Json::Num(mean)),
+            ];
+            if p == Phase::Predict {
+                // Manager-reported sub-spans (zeroed when the technique
+                // does not self-instrument; never NaN).
+                let spans = PredictSpans::NAMES
+                    .iter()
+                    .enumerate()
+                    .map(|(i, name)| {
+                        let (s, c) = self.predict_span(i);
+                        let mean = if c > 0 { s / c as f64 } else { 0.0 };
+                        (
+                            *name,
+                            Json::obj(vec![
+                                ("seconds", Json::Num(s)),
+                                ("calls", num(c as usize)),
+                                ("mean_s", Json::Num(mean)),
+                            ]),
+                        )
+                    })
+                    .collect();
+                fields.push(("spans", Json::obj(spans)));
+            }
+            phases.push((p.name(), Json::obj(fields)));
         }
         let mut all = vec![
             ("total_s", Json::Num(self.total_seconds())),

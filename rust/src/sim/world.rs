@@ -85,6 +85,13 @@ impl IdSet {
         self.dense.is_empty()
     }
 
+    fn clear(&mut self) {
+        for &id in &self.dense {
+            self.pos[id] = NO_POS;
+        }
+        self.dense.clear();
+    }
+
     /// Members in ascending id order (the order the pre-index full scans
     /// produced — required for bit-identical replay).
     fn sorted(&self) -> Vec<usize> {
@@ -139,13 +146,28 @@ pub struct World {
     /// Reserved-utilization knob (Fig. 6/8 sweep).
     pub reserved_util: f64,
     /// Per-task execution rate in MI/s (slowdown already applied);
-    /// recomputed lazily when `rates_dirty`.  Entries are valid only when
-    /// their epoch stamp matches the current epoch — this avoids the
-    /// O(total) zero-fill the seed engine paid on every recompute.
+    /// recomputed lazily from the dirty-host set.  Entries are valid only
+    /// when their epoch stamp matches the current epoch — this avoids the
+    /// O(total) zero-fill the seed engine paid on every recompute.  In
+    /// indexed mode the epoch never moves (host-local recompute stamps the
+    /// current epoch and invalidates by writing stamp 0, which is below
+    /// the initial epoch); only the reference full pass bumps it.
     rates: Vec<f64>,
     rate_epoch: Vec<u64>,
     epoch: u64,
-    rates_dirty: bool,
+    /// Hosts whose resident rates are stale (DESIGN.md §11): every
+    /// rate-affecting mutation marks only the host(s) it touched, and
+    /// `recompute_dirty_hosts` re-runs the exact reference arithmetic for
+    /// just those hosts.  `all_dirty` is the coarse fallback
+    /// (`mark_rates_dirty`, and the only flavor reference mode uses — it
+    /// keeps the seed's global recompute alive as the oracle).
+    dirty_hosts: IdSet,
+    all_dirty: bool,
+    /// Hosts that were down at their last recompute: their residents carry
+    /// no rate.  Matching the seed semantics — where recovery alone never
+    /// triggers a recompute — they are re-rated only when the *next*
+    /// recompute (caused by some other dirty event) observes them up.
+    down_stale: IdSet,
     /// Latest raw M_H snapshot (set by the coordinator's feature extractor
     /// each interval; consumed by job-submission generative sampling).
     pub latest_m_h: Vec<f32>,
@@ -165,11 +187,18 @@ pub struct World {
     live_clones: usize,
     /// original task → its (single) live speculative clone.
     active_clone: HashMap<TaskId, TaskId>,
-    /// Min-heap of (projected absolute finish time, task) over running
-    /// tasks with positive rate; rebuilt whenever rates are recomputed and
-    /// valid exactly while `!rates_dirty` (etas are time-invariant under
-    /// constant rates).
-    finish_heap: BinaryHeap<Reverse<(EtaKey, TaskId)>>,
+    /// Min-heap of (projected absolute finish time, task, generation) over
+    /// running tasks with positive rate.  Never cleared wholesale: each
+    /// host-local recompute pushes fresh entries (with a bumped per-task
+    /// generation stamp) for the tasks it re-rated, and consumers
+    /// pop-and-discard entries whose stamp no longer matches `heap_gen` —
+    /// the same lazy-invalidation discipline as the §9 availability wake
+    /// heap.  Etas are time-invariant under constant rates, and are always
+    /// re-derived from live task state at the peek site.
+    finish_heap: BinaryHeap<Reverse<(EtaKey, TaskId, u64)>>,
+    /// Current finish-heap generation per task; bumped on every re-rate
+    /// and on unplacement, so older heap entries become stale.
+    heap_gen: Vec<u64>,
     // --------------------------------------------- load accounting (§9)
     /// Per-VM cached demand subtotals, refreshed whenever the VM's task
     /// set changes (place/complete/kill/reset/hold-release).
@@ -253,8 +282,10 @@ impl World {
             reserved_util: cfg.reserved_util,
             rates: Vec::new(),
             rate_epoch: Vec::new(),
-            epoch: 0,
-            rates_dirty: true,
+            epoch: 1,
+            dirty_hosts: IdSet::default(),
+            all_dirty: true,
+            down_stale: IdSet::default(),
             latest_m_h: Vec::new(),
             completed_log: Vec::new(),
             reference_scans: cfg.reference_scans,
@@ -266,6 +297,7 @@ impl World {
             live_clones: 0,
             active_clone: HashMap::new(),
             finish_heap: BinaryHeap::new(),
+            heap_gen: Vec::new(),
             vm_load: vec![ResLoad::default(); n_vms],
             host_load: vec![ResLoad::default(); n_hosts],
             host_tasks: vec![0; n_hosts],
@@ -332,6 +364,11 @@ impl World {
             state: life,
         });
         self.tasks.push(t);
+        // Per-task rate/heap bookkeeping stays dense with the arena, so
+        // targeted invalidation never has to bounds-check or resize.
+        self.rates.push(0.0);
+        self.rate_epoch.push(0);
+        self.heap_gen.push(0);
         if active {
             self.job_active_tasks[job] += 1;
             if let Some(orig) = spec_of {
@@ -809,16 +846,28 @@ impl World {
     /// All host up/down transitions must go through here (not by writing
     /// `down_until` directly) so the index cannot drift.
     // Index loop splits the borrow of `hosts[host].vms` from the `&mut
-    // self` availability refresh, as in `recompute_rates`.
+    // self` availability refresh, as in `recompute_host`.
     #[allow(clippy::needless_range_loop)]
     pub fn set_host_down(&mut self, host: HostId, until: f64) {
         self.hosts[host].down_until = Some(until);
+        self.mark_host_rates_dirty(host);
         if !self.reference_scans {
             for vi in 0..self.hosts[host].vms.len() {
                 let vm = self.hosts[host].vms[vi];
                 self.refresh_vm_availability(vm);
             }
             self.rebuild_avail_cache();
+        }
+    }
+
+    /// Set a host's background load (the per-interval trace refresh),
+    /// dirtying its rates only when the value actually changed (bitwise).
+    /// All background-load writes must go through here so the dirty-host
+    /// set cannot miss a rate change.
+    pub fn set_background_load(&mut self, host: HostId, load: f64) {
+        if self.hosts[host].background_load.to_bits() != load.to_bits() {
+            self.hosts[host].background_load = load;
+            self.mark_host_rates_dirty(host);
         }
     }
 
@@ -859,7 +908,7 @@ impl World {
             t.first_start_t = Some(self.now);
         }
         self.vms[vm].tasks.push(task);
-        self.rates_dirty = true;
+        self.mark_host_rates_dirty(self.vms[vm].host);
         if !self.reference_scans {
             self.host_tasks[self.vms[vm].host] += 1;
             self.refresh_vm_load(vm);
@@ -873,7 +922,12 @@ impl World {
     pub fn unplace_task(&mut self, task: TaskId) {
         if let Some(vm) = self.tasks[task].vm.take() {
             self.vms[vm].tasks.retain(|&t| t != task);
-            self.rates_dirty = true;
+            self.mark_host_rates_dirty(self.vms[vm].host);
+            // The detached task is no longer rated: the host-local
+            // recompute will not revisit it, so invalidate its stamp here
+            // and retire any finish-heap entry it still has.
+            self.rate_epoch[task] = 0;
+            self.heap_gen[task] += 1;
             if !self.reference_scans {
                 self.host_tasks[self.vms[vm].host] -= 1;
                 self.refresh_vm_load(vm);
@@ -961,8 +1015,41 @@ impl World {
 
     // ----------------------------------------------------- rate computation
 
-    /// Recompute per-task MI/s rates from the current topology, and rebuild
-    /// the projected-finish-time heap in the same pass.
+    /// Whether any rate is stale (the old single `rates_dirty` bit).
+    /// `down_stale` alone does **not** count: host recovery never triggers
+    /// a recompute (seed semantics) — recovered hosts are swept up by the
+    /// next recompute some other dirty event causes.
+    fn rates_dirty(&self) -> bool {
+        self.all_dirty || !self.dirty_hosts.is_empty()
+    }
+
+    /// Mark one host's resident rates stale.  Reference mode collapses to
+    /// the seed's single dirty bit (global recompute).
+    fn mark_host_rates_dirty(&mut self, host: HostId) {
+        if self.reference_scans {
+            self.all_dirty = true;
+        } else {
+            self.dirty_hosts.insert(host);
+        }
+    }
+
+    /// Recompute stale rates before a rate-dependent query.  Reference
+    /// mode runs the seed-faithful global pass; indexed mode re-rates only
+    /// the dirty hosts.
+    fn recompute_if_dirty(&mut self) {
+        if !self.rates_dirty() {
+            return;
+        }
+        if self.reference_scans {
+            self.recompute_rates_reference();
+        } else {
+            self.recompute_dirty_hosts();
+        }
+    }
+
+    /// Seed-faithful global recompute (reference mode only): O(total)
+    /// zero-fill plus a full-fleet pass in host/VM/task order, bumping the
+    /// validity epoch so every stamp from earlier passes goes stale.
     ///
     /// Model: each task's fair demand on its VM is
     /// `min(demand.mips, vm.mips / n_tasks)`; a host whose aggregate VM
@@ -970,34 +1057,25 @@ impl World {
     /// load) scales every resident task proportionally — this is the
     /// resource-contention mechanism (Eq. 9's "overloaded" condition).
     // Index loops are deliberate: they split borrows across `hosts`/`vms`/
-    // `tasks`/`rates`/`finish_heap` fields, which iterator chains cannot.
+    // `tasks`/`rates` fields, which iterator chains cannot.
     #[allow(clippy::needless_range_loop)]
-    fn recompute_rates(&mut self) {
-        if self.rates.len() < self.tasks.len() {
-            self.rates.resize(self.tasks.len(), 0.0);
-            self.rate_epoch.resize(self.tasks.len(), 0);
-        }
+    fn recompute_rates_reference(&mut self) {
         self.epoch += 1;
         let epoch = self.epoch;
-        if self.reference_scans {
-            // Seed-faithful O(total) zero-fill; the indexed path instead
-            // invalidates by epoch stamp so dead tasks cost nothing.
-            for r in self.rates.iter_mut() {
-                *r = 0.0;
-            }
+        // Seed-faithful O(total) zero-fill; the indexed path instead
+        // invalidates by stamp so dead tasks cost nothing.
+        for r in self.rates.iter_mut() {
+            *r = 0.0;
         }
+        // Reference mode answers `next_finish_time` by full scan, so it
+        // must not pay (or rely on) heap upkeep.
         self.finish_heap.clear();
-        let now = self.now;
         for h in 0..self.hosts.len() {
             let host = &self.hosts[h];
             if !host.is_up(self.now) {
                 continue;
             }
-            let demand: f64 = if self.reference_scans {
-                host.vms.iter().map(|&v| self.vm_demand(v)).sum()
-            } else {
-                self.host_load[h].mips
-            };
+            let demand: f64 = host.vms.iter().map(|&v| self.vm_demand(v)).sum();
             if demand <= 0.0 {
                 continue;
             }
@@ -1014,18 +1092,114 @@ impl World {
                     let rate = nominal * scale / self.tasks[t].slowdown;
                     self.rates[t] = rate;
                     self.rate_epoch[t] = epoch;
-                    // Reference mode answers `next_finish_time` by full
-                    // scan, so it must not pay (or rely on) heap upkeep.
-                    if !self.reference_scans && rate > 0.0 && self.tasks[t].is_running() {
-                        self.finish_heap.push(Reverse((
-                            EtaKey(now + self.tasks[t].remaining_mi / rate),
-                            t,
-                        )));
-                    }
                 }
             }
         }
-        self.rates_dirty = false;
+        self.all_dirty = false;
+        self.dirty_hosts.clear();
+    }
+
+    /// Host-local recompute (DESIGN.md §11): re-run the reference
+    /// arithmetic for exactly the dirty hosts — plus recovered
+    /// `down_stale` hosts — and push fresh generation-stamped finish-heap
+    /// entries for their running residents.  Rates on untouched hosts (and
+    /// their live heap entries) are left as the previous pass wrote them,
+    /// which is bit-identical to what a full pass would write: the rate
+    /// arithmetic reads only host-local state, and the `host_load[h]`
+    /// demand aggregate is maintained bitwise equal to the reference
+    /// per-VM fold (§9).
+    fn recompute_dirty_hosts(&mut self) {
+        if self.all_dirty {
+            for h in 0..self.hosts.len() {
+                self.recompute_host(h);
+            }
+        } else {
+            // Dirty hosts plus recovered hosts whose residents still carry
+            // stale zero rates; ascending id — the full-pass host order.
+            let mut targets = self.dirty_hosts.dense.clone();
+            for i in 0..self.down_stale.dense.len() {
+                let h = self.down_stale.dense[i];
+                if self.hosts[h].is_up(self.now) && !self.dirty_hosts.contains(h) {
+                    targets.push(h);
+                }
+            }
+            targets.sort_unstable();
+            for h in targets {
+                self.recompute_host(h);
+            }
+        }
+        self.all_dirty = false;
+        self.dirty_hosts.clear();
+        self.compact_finish_heap();
+    }
+
+    /// Re-rate one host with the exact reference arithmetic (same
+    /// expressions, same `host.vms`/`vm.tasks` fold order).  Down hosts
+    /// contribute no rate: their residents' stamps are invalidated and the
+    /// host parks in `down_stale` until a later recompute sees it up.
+    #[allow(clippy::needless_range_loop)]
+    fn recompute_host(&mut self, h: HostId) {
+        if !self.hosts[h].is_up(self.now) {
+            for vi in 0..self.hosts[h].vms.len() {
+                let v = self.hosts[h].vms[vi];
+                for ti in 0..self.vms[v].tasks.len() {
+                    let t = self.vms[v].tasks[ti];
+                    self.rate_epoch[t] = 0;
+                    self.heap_gen[t] += 1;
+                }
+            }
+            self.down_stale.insert(h);
+            return;
+        }
+        self.down_stale.remove(h);
+        // §9 aggregate: bitwise equal to the reference per-VM demand fold.
+        let demand = self.host_load[h].mips;
+        if demand <= 0.0 {
+            // No residents (every resident demands >= 1 MIPS), so there is
+            // nothing to re-rate or invalidate.
+            return;
+        }
+        let capacity = self.hosts[h].effective_mips(self.reserved_util);
+        let scale = (capacity / demand).min(1.0);
+        let now = self.now;
+        let epoch = self.epoch;
+        for vi in 0..self.hosts[h].vms.len() {
+            let v = self.hosts[h].vms[vi];
+            let n = self.vms[v].tasks.len().max(1) as f64;
+            let fair = self.vms[v].mips / n;
+            for ti in 0..self.vms[v].tasks.len() {
+                let t = self.vms[v].tasks[ti];
+                let nominal = self.tasks[t].demand.mips.min(fair).max(1.0);
+                let rate = nominal * scale / self.tasks[t].slowdown;
+                self.rates[t] = rate;
+                self.rate_epoch[t] = epoch;
+                if rate > 0.0 && self.tasks[t].is_running() {
+                    self.heap_gen[t] += 1;
+                    let gen = self.heap_gen[t];
+                    self.finish_heap
+                        .push(Reverse((EtaKey(now + self.tasks[t].remaining_mi / rate), t, gen)));
+                }
+            }
+        }
+    }
+
+    /// Deterministic size bound on the lazily-invalidated finish heap:
+    /// when stale entries outnumber live ones ~4:1, rebuild from the live
+    /// set (stored etas kept verbatim).  Triggered by sim state only —
+    /// never wall clock — so replays and the parity contract are
+    /// unaffected.
+    fn compact_finish_heap(&mut self) {
+        if self.finish_heap.len() <= 64 + 4 * self.running_set.len() {
+            return;
+        }
+        let live: Vec<_> = std::mem::take(&mut self.finish_heap)
+            .into_vec()
+            .into_iter()
+            .filter(|&Reverse((_, t, gen))| {
+                self.heap_gen[t] == gen && self.tasks[t].is_running() && self.rate_of(t) > 0.0
+            })
+            .collect();
+        self.finish_heap = BinaryHeap::from(live);
     }
 
     /// Rate of a task under the current epoch (0 if not computed = idle,
@@ -1038,16 +1212,16 @@ impl World {
         }
     }
 
-    /// Force rate recomputation on next use (topology/load changed).
+    /// Force a full rate recomputation on next use.  The typed mutators
+    /// self-mark the hosts they touch, so this coarse fallback is only for
+    /// callers that mutated rate inputs outside the typed surface.
     pub fn mark_rates_dirty(&mut self) {
-        self.rates_dirty = true;
+        self.all_dirty = true;
     }
 
     /// Current rate of a task (MI/s).
     pub fn task_rate(&mut self, task: TaskId) -> f64 {
-        if self.rates_dirty {
-            self.recompute_rates();
-        }
+        self.recompute_if_dirty();
         self.rate_of(task)
     }
 
@@ -1069,9 +1243,7 @@ impl World {
     /// modes across seeds/fault-rates to back this empirically.
     #[allow(clippy::needless_range_loop)]
     pub fn next_finish_time(&mut self) -> Option<f64> {
-        if self.rates_dirty {
-            self.recompute_rates();
-        }
+        self.recompute_if_dirty();
         if self.reference_scans {
             let now = self.now;
             let mut best: Option<f64> = None;
@@ -1089,10 +1261,19 @@ impl World {
             }
             return best;
         }
-        self.finish_heap.peek().map(|Reverse((_, t))| {
-            let t = *t;
-            self.now + self.tasks[t].remaining_mi / self.rate_of(t)
-        })
+        // Lazy invalidation: discard entries whose generation stamp is
+        // stale (task re-rated, unplaced, or its host went down since the
+        // push); the first live entry is the minimum.
+        while let Some(&Reverse((_, t, gen))) = self.finish_heap.peek() {
+            if self.heap_gen[t] == gen && self.tasks[t].is_running() {
+                let rate = self.rate_of(t);
+                if rate > 0.0 {
+                    return Some(self.now + self.tasks[t].remaining_mi / rate);
+                }
+            }
+            self.finish_heap.pop();
+        }
+        None
     }
 
     /// Advance simulated time to `to`, consuming work on all running
@@ -1101,9 +1282,7 @@ impl World {
     #[allow(clippy::needless_range_loop)]
     pub fn advance(&mut self, to: f64) -> Vec<TaskId> {
         debug_assert!(to >= self.now - 1e-9, "time must be monotone");
-        if self.rates_dirty {
-            self.recompute_rates();
-        }
+        self.recompute_if_dirty();
         let dt = (to - self.now).max(0.0);
         self.now = to;
         // Re-admit VMs whose ready/recovery time has now passed.  `now`
@@ -1253,16 +1432,73 @@ impl World {
                         t.id
                     );
                 }
-                _ => assert!(t.vm.is_none(), "non-running task {} still placed", t.id),
+                _ => {
+                    assert!(t.vm.is_none(), "non-running task {} still placed", t.id);
+                    assert_eq!(self.rate_of(t.id), 0.0, "unplaced task {} still rated", t.id);
+                }
             }
         }
-        if !self.rates_dirty && !self.reference_scans {
-            let mut heap_ids: Vec<TaskId> =
-                self.finish_heap.iter().map(|Reverse((_, t))| *t).collect();
+        if !self.rates_dirty() && !self.reference_scans {
+            // Live heap entries (generation stamp current) must cover
+            // exactly the running-with-rate set, with no duplicates.
+            let mut heap_ids: Vec<TaskId> = self
+                .finish_heap
+                .iter()
+                .filter(|Reverse((_, t, gen))| self.heap_gen[*t] == *gen)
+                .map(|Reverse((_, t, _))| *t)
+                .collect();
             heap_ids.sort_unstable();
+            assert!(
+                heap_ids.windows(2).all(|p| p[0] != p[1]),
+                "duplicate live finish-heap entries"
+            );
             let expect: Vec<TaskId> =
                 run.iter().copied().filter(|&t| self.rate_of(t) > 0.0).collect();
             assert_eq!(heap_ids, expect, "finish-heap membership drift");
+            // Tentpole invariant (§11): every maintained rate must equal a
+            // from-scratch reference recompute, bitwise.  Hosts parked in
+            // `down_stale` (down, or recovered but not yet re-rated)
+            // instead carry no rate at all.
+            for h in 0..self.hosts.len() {
+                if !self.hosts[h].is_up(self.now) {
+                    assert!(
+                        self.down_stale.contains(h),
+                        "down host {h} missing from down_stale"
+                    );
+                }
+                if self.down_stale.contains(h) {
+                    for &v in &self.hosts[h].vms {
+                        for &t in &self.vms[v].tasks {
+                            assert_eq!(
+                                self.rate_of(t),
+                                0.0,
+                                "stale-down host {h}: task {t} still rated"
+                            );
+                        }
+                    }
+                    continue;
+                }
+                let demand: f64 =
+                    self.hosts[h].vms.iter().map(|&v| self.compute_vm_load(v).mips).sum();
+                if demand <= 0.0 {
+                    continue;
+                }
+                let capacity = self.hosts[h].effective_mips(self.reserved_util);
+                let scale = (capacity / demand).min(1.0);
+                for &v in &self.hosts[h].vms {
+                    let n = self.vms[v].tasks.len().max(1) as f64;
+                    let fair = self.vms[v].mips / n;
+                    for &t in &self.vms[v].tasks {
+                        let nominal = self.tasks[t].demand.mips.min(fair).max(1.0);
+                        let expect_rate = nominal * scale / self.tasks[t].slowdown;
+                        assert!(
+                            self.rate_of(t).to_bits() == expect_rate.to_bits(),
+                            "host {h} task {t} rate drift: cached {} recount {expect_rate}",
+                            self.rate_of(t)
+                        );
+                    }
+                }
+            }
         }
         // Membership sets must contain only live states (spot-check via
         // contains on a few dead ids).
@@ -1409,8 +1645,7 @@ mod tests {
             tasks.push(t);
         }
         // Also background load to force capacity below demand.
-        w.hosts[host].background_load = 0.5;
-        w.mark_rates_dirty();
+        w.set_background_load(host, 0.5);
         let total_rate: f64 = tasks.iter().map(|&t| w.task_rate(t)).sum();
         let cap = w.hosts[host].effective_mips(0.0);
         assert!(total_rate <= cap * 1.001, "total {total_rate} cap {cap}");
@@ -1435,8 +1670,9 @@ mod tests {
         let t = add_task(&mut w, 0, 1000.0, 100.0);
         w.start_task(t, 0, 1.0);
         let h = w.vms[0].host;
+        // `set_host_down` self-marks the host dirty — no manual
+        // `mark_rates_dirty` needed.
         w.set_host_down(h, 1e9);
-        w.mark_rates_dirty();
         assert_eq!(w.task_rate(t), 0.0);
         assert!(w.next_finish_time().is_none());
         w.assert_consistent();
@@ -1692,6 +1928,130 @@ mod tests {
         w.assert_consistent();
     }
 
+    /// Satellite (§11): rate-consistency arm — an indexed world and a
+    /// reference world driven through identical random op sequences must
+    /// agree **bitwise** on every task rate and on `next_finish_time`
+    /// after every op, while `assert_consistent` recounts the maintained
+    /// rates (and the heap's live-entry coverage) against a from-scratch
+    /// reference pass.
+    #[test]
+    fn prop_rates_bitwise_match_reference_under_random_ops() {
+        ptest::check("world-rate-consistency", 20, |rng| {
+            let mut w = world();
+            let mut r = world();
+            r.reference_scans = true;
+            let n_jobs = 2 + rng.below(3);
+            for j in 0..n_jobs {
+                let q = 1 + rng.below(5);
+                let mut tasks = Vec::new();
+                for _ in 0..q {
+                    let len = rng.range(500.0, 5000.0);
+                    let mips = rng.range(80.0, 400.0);
+                    let a = add_task(&mut w, j, len, mips);
+                    let b = add_task(&mut r, j, len, mips);
+                    assert_eq!(a, b);
+                    tasks.push(a);
+                }
+                for world in [&mut w, &mut r] {
+                    world.add_job(Job {
+                        id: j,
+                        tasks: tasks.clone(),
+                        submit_t: 0.0,
+                        deadline_driven: false,
+                        sla_deadline: 1e9,
+                        sla_weight: 1.0,
+                        state: JobState::Active,
+                        true_alpha: 2.0,
+                        true_beta: 1.0,
+                    });
+                }
+            }
+            for _ in 0..120 {
+                match rng.below(8) {
+                    0 => {
+                        let p = w.pending();
+                        if let Some(&t) = p.first() {
+                            let vm = rng.below(w.vms.len());
+                            if w.vm_available(vm) {
+                                let slow = rng.range(1.0, 6.0);
+                                w.start_task(t, vm, slow);
+                                r.start_task(t, vm, slow);
+                            }
+                        }
+                    }
+                    1 => {
+                        let run = w.running();
+                        if !run.is_empty() {
+                            let t = run[rng.below(run.len())];
+                            w.complete_task(t);
+                            r.complete_task(t);
+                        }
+                    }
+                    2 => {
+                        let run = w.running();
+                        if !run.is_empty() {
+                            let t = run[rng.below(run.len())];
+                            w.kill_task(t);
+                            r.kill_task(t);
+                        }
+                    }
+                    3 => {
+                        let run = w.running();
+                        if !run.is_empty() {
+                            let t = run[rng.below(run.len())];
+                            w.reset_task(t, 30.0);
+                            r.reset_task(t, 30.0);
+                        }
+                    }
+                    4 => {
+                        let to = w.now + rng.range(0.1, 60.0);
+                        let dw = w.advance(to);
+                        let dr = r.advance(to);
+                        if dw != dr {
+                            return Err(format!("advance divergence: {dw:?} vs {dr:?}"));
+                        }
+                        for t in dw {
+                            w.complete_task(t);
+                            r.complete_task(t);
+                        }
+                    }
+                    5 => {
+                        let h = rng.below(w.hosts.len());
+                        let until = w.now + rng.range(1.0, 80.0);
+                        w.set_host_down(h, until);
+                        r.set_host_down(h, until);
+                    }
+                    6 => {
+                        let h = rng.below(w.hosts.len());
+                        let load = rng.range(0.0, 0.6);
+                        w.set_background_load(h, load);
+                        r.set_background_load(h, load);
+                    }
+                    _ => {
+                        let v = rng.below(w.vms.len());
+                        let at = w.now + rng.range(1.0, 50.0);
+                        w.set_vm_ready_at(v, at);
+                        r.set_vm_ready_at(v, at);
+                    }
+                }
+                // Bitwise rate agreement for every task ever created.
+                for t in 0..w.n_tasks() {
+                    let a = w.task_rate(t);
+                    let b = r.task_rate(t);
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("task {t} rate drift: indexed {a} reference {b}"));
+                    }
+                }
+                let (fa, fb) = (w.next_finish_time(), r.next_finish_time());
+                if fa.map(f64::to_bits) != fb.map(f64::to_bits) {
+                    return Err(format!("next_finish_time drift: {fa:?} vs {fb:?}"));
+                }
+                w.assert_consistent();
+            }
+            Ok(())
+        });
+    }
+
     /// Satellite: property-style invariant check — pending/running/held and
     /// per-job counters stay consistent with task states under random
     /// place/hold/kill/complete/reset/speculate sequences.
@@ -1792,7 +2152,6 @@ mod tests {
                         let h = rng.below(w.hosts.len());
                         let until = w.now + rng.range(1.0, 80.0);
                         w.set_host_down(h, until);
-                        w.mark_rates_dirty();
                     }
                     9 => {
                         // VM readiness delay (VmCreation-style fault)
@@ -1803,8 +2162,7 @@ mod tests {
                     _ => {
                         // background-load shift (rate-change event)
                         let h = rng.below(w.hosts.len());
-                        w.hosts[h].background_load = rng.range(0.0, 0.6);
-                        w.mark_rates_dirty();
+                        w.set_background_load(h, rng.range(0.0, 0.6));
                     }
                 }
                 w.assert_consistent();
