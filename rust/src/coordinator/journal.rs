@@ -1,0 +1,243 @@
+//! Crash-safe results journal for the coordinator (DESIGN.md §12).
+//!
+//! One JSONL record per *completed* experiment cell, appended and fsync'd
+//! as soon as the leader collects the cell's metrics:
+//!
+//! ```json
+//! {"cell":"fig6|Grass|42","cfg":"9f3a…16 hex…","attempts":1,"metrics":{…}}
+//! ```
+//!
+//! Records are keyed by `(label, config digest)`, so a journal survives
+//! label reuse across figures and silently invalidates itself when the
+//! cell's configuration changes.  The metrics payload is the lossless
+//! round-trip form from `sim::trace::{metrics_to_json, metrics_from_json}`
+//! (bit-exact f64s, exact profiler counters): a batch resumed from the
+//! journal is indistinguishable from an uninterrupted run.
+//!
+//! Crash model: the process may die at any point.  Appends are
+//! write-then-fsync, so after a crash the file holds only complete
+//! records plus at most one torn final line; [`load_map`] skips
+//! unparseable lines (warning to stderr), which is safe because the
+//! journal is a pure cache — a skipped record just means the cell re-runs
+//! deterministically.
+
+use crate::config::SimConfig;
+use crate::sim::metrics::RunMetrics;
+use crate::sim::trace::{metrics_from_json, metrics_to_json};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Stable 64-bit digest of a cell configuration (FNV-1a over the
+/// canonical `Debug` rendering — every config field participates, so any
+/// knob change yields a new digest and invalidates journaled results for
+/// that cell).
+pub fn cfg_digest(cfg: &SimConfig) -> String {
+    let text = format!("{cfg:?}");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Journal key: cell label + config digest.
+pub type CellKey = (String, String);
+
+/// Parse the journal at `path` into a `(label, digest) → metrics` map.
+/// Later records win (a resumed batch may re-append a cell that failed
+/// mid-write earlier).  Unparseable lines — e.g. the torn final line of a
+/// crashed run — are skipped with a warning.  A missing file is an empty
+/// journal.
+pub fn load_map(path: &Path) -> Result<HashMap<CellKey, RunMetrics>> {
+    let mut map = HashMap::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(map),
+        Err(e) => return Err(e).with_context(|| format!("reading journal {}", path.display())),
+    };
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_record(line) {
+            Ok((key, m)) => {
+                map.insert(key, m);
+            }
+            Err(e) => {
+                eprintln!(
+                    "note: journal {} line {}: skipping unreadable record ({e:#}); \
+                     the cell will re-run",
+                    path.display(),
+                    i + 1
+                );
+            }
+        }
+    }
+    Ok(map)
+}
+
+fn parse_record(line: &str) -> Result<(CellKey, RunMetrics)> {
+    let v = json::parse(line)?;
+    let label = v.req_str("cell")?.to_string();
+    let digest = v.req_str("cfg")?.to_string();
+    let metrics = metrics_from_json(
+        v.get("metrics").ok_or_else(|| anyhow::anyhow!("missing metrics"))?,
+    )?;
+    Ok(((label, digest), metrics))
+}
+
+/// Append-only journal writer.  Every [`Journal::append`] is flushed and
+/// fsync'd before returning — a completed cell is durable the moment the
+/// leader records it.
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Open the journal for writing, creating parent directories.  With
+    /// `append` the existing records are kept (resume); otherwise the
+    /// file is truncated (a fresh batch).
+    pub fn open(path: impl Into<PathBuf>, append: bool) -> Result<Journal> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let file = if append {
+            std::fs::OpenOptions::new().create(true).append(true).open(&path)
+        } else {
+            std::fs::File::create(&path)
+        }
+        .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal { file, path })
+    }
+
+    /// Durably record one completed cell (write + flush + fsync).
+    pub fn append(
+        &mut self,
+        label: &str,
+        digest: &str,
+        attempts: u32,
+        metrics: &RunMetrics,
+    ) -> Result<()> {
+        let record = Json::obj(vec![
+            ("cell", Json::str(label)),
+            ("cfg", Json::str(digest)),
+            ("attempts", Json::Num(attempts as f64)),
+            ("metrics", metrics_to_json(metrics)),
+        ]);
+        writeln!(self.file, "{}", record.dump())
+            .and_then(|()| self.file.sync_data())
+            .with_context(|| format!("appending to journal {}", self.path.display()))
+    }
+
+    /// The journal's on-disk location.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("start_sim_journal_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_metrics(x: f64) -> RunMetrics {
+        RunMetrics {
+            exec_times: vec![x, x * 2.0],
+            completion_times: vec![x + 0.1],
+            jobs_done: 1,
+            tasks_done: 2,
+            ..RunMetrics::default()
+        }
+    }
+
+    #[test]
+    fn digest_is_stable_and_config_sensitive() {
+        let cfg = SimConfig::test_defaults();
+        assert_eq!(cfg_digest(&cfg), cfg_digest(&cfg.clone()));
+        let mut other = cfg.clone();
+        other.seed += 1;
+        assert_ne!(cfg_digest(&cfg), cfg_digest(&other));
+        let mut other = cfg.clone();
+        other.fault_rate += 0.125;
+        assert_ne!(cfg_digest(&cfg), cfg_digest(&other));
+    }
+
+    #[test]
+    fn append_then_load_round_trips() {
+        let dir = tmp_dir("round_trip");
+        let path = dir.join("results.jsonl");
+        let m1 = sample_metrics(1.5);
+        let m2 = sample_metrics(0.1 + 0.2);
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("a|X|1", "00ff", 1, &m1).unwrap();
+            j.append("b|Y|2", "abcd", 3, &m2).unwrap();
+        }
+        let map = load_map(&path).unwrap();
+        assert_eq!(map.len(), 2);
+        let got = &map[&("a|X|1".to_string(), "00ff".to_string())];
+        assert!(m1.diff_deterministic(got).is_none());
+        let got = &map[&("b|Y|2".to_string(), "abcd".to_string())];
+        assert!(m2.diff_deterministic(got).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_line_is_skipped_and_later_records_win() {
+        let dir = tmp_dir("torn");
+        let path = dir.join("results.jsonl");
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("cell", "1111", 1, &sample_metrics(1.0)).unwrap();
+            j.append("cell", "1111", 2, &sample_metrics(9.0)).unwrap();
+        }
+        // Simulate a crash mid-append: a torn partial record at the tail.
+        {
+            use std::io::Write as _;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"cell\":\"torn\",\"cfg\":\"22").unwrap();
+        }
+        let map = load_map(&path).unwrap();
+        assert_eq!(map.len(), 1, "torn record must be ignored");
+        // Later record for the same key wins.
+        let got = &map[&("cell".to_string(), "1111".to_string())];
+        assert!(sample_metrics(9.0).diff_deterministic(got).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_journal_is_empty_and_resume_appends() {
+        let dir = tmp_dir("resume");
+        let path = dir.join("results.jsonl");
+        assert!(load_map(&path).unwrap().is_empty());
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("a", "01", 1, &sample_metrics(1.0)).unwrap();
+        }
+        {
+            // append=true keeps the prior record.
+            let mut j = Journal::open(&path, true).unwrap();
+            j.append("b", "02", 1, &sample_metrics(2.0)).unwrap();
+        }
+        assert_eq!(load_map(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

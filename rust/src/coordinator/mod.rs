@@ -2,7 +2,16 @@
 //! technique manager and simulator together; runs experiment cells on a
 //! worker-thread pool (one PJRT client per worker — executables are not
 //! shared across threads).
+//!
+//! The batch runner is fault-tolerant and resumable (DESIGN.md §12):
+//! worker panics are isolated to the failing cell, transient failures are
+//! retried with deterministic capped backoff, a per-cell wall-clock
+//! deadline (plus a leader-side watchdog) bounds hung cells, and a
+//! crash-safe fsync'd results journal lets an interrupted paper-scale
+//! batch resume by skipping completed cells — bit-identical to an
+//! uninterrupted run.
 
+pub mod journal;
 pub mod start_manager;
 
 pub use start_manager::StartManager;
@@ -16,11 +25,14 @@ use crate::sim::engine::{Manager, NullManager, Simulation};
 use crate::sim::metrics::RunMetrics;
 use crate::sim::trace::TraceSink;
 use crate::util::rng::Pcg;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Per-worker model bundle (PJRT client + compiled executables).
 pub struct Models {
@@ -86,7 +98,12 @@ pub fn build_manager(technique: Technique, models: &Models, cfg: &SimConfig) -> 
         Technique::IgruSd => {
             Box::new(IgruSdManager::new(IgruPredictor::new(Rc::clone(&models.igru), 1.15)))
         }
-        other => model_free_manager(other).expect("model-free technique"),
+        // Reachable only if this match and `model_free_manager` ever
+        // drift apart — surfaced as an error, not a panic, so one bad
+        // cell cannot take down a batch.
+        other => model_free_manager(other).ok_or_else(|| {
+            anyhow!("technique {other:?} has no model-free manager and no model constructor")
+        })?,
     })
 }
 
@@ -137,21 +154,235 @@ pub struct Cell {
     pub cfg: SimConfig,
 }
 
-/// Options for [`run_many_opts`].
-#[derive(Clone, Default)]
+/// Worker-side manager constructor override (chaos/fault-injection hook
+/// for the resilience test suite, and a general way to run custom
+/// managers through the batch machinery).  Called on the worker thread
+/// once per cell attempt; when set, workers skip `Models::load` entirely
+/// and run hermetic (canned-manifest fallback, like
+/// [`run_one_hermetic`]).
+pub type ManagerFactory = Arc<dyn Fn(&SimConfig) -> Result<Box<dyn Manager>> + Send + Sync>;
+
+/// Default bounded-retry budget: one initial attempt plus this many
+/// retries per cell.
+pub const DEFAULT_RETRIES: u32 = 2;
+
+/// Options for [`run_many_opts`] / [`run_many_cells`].
+#[derive(Clone)]
 pub struct RunOpts {
     /// When set, each cell streams a JSONL event trace to
-    /// `<dir>/<sanitized label>.jsonl`.
+    /// `<dir>/<unique sanitized label>.jsonl` (collision-deduplicated,
+    /// see [`unique_stems`]).  Cells restored from the journal do not
+    /// re-write their trace files.
     pub trace_dir: Option<PathBuf>,
+    /// Crash-safe results journal (`results.jsonl`): every completed
+    /// cell is appended and fsync'd as soon as the leader collects it.
+    pub journal: Option<PathBuf>,
+    /// Reuse existing journal records: cells whose `(label, config
+    /// digest)` key is already journaled are skipped and their journaled
+    /// metrics returned verbatim (bit-identical resume).  Without this,
+    /// an existing journal file is truncated.
+    pub resume: bool,
+    /// Partial-results mode: run every cell to completion and report
+    /// per-cell `Result`s.  When off (the default), the leader stops
+    /// dispatching after the first failed cell (queued cells are
+    /// cancelled) and [`run_many_opts`] surfaces the first error.
+    pub keep_going: bool,
+    /// Extra attempts after the first, per cell (bounded retry for
+    /// transient failures — PJRT/artifact load, trace-sink I/O, panics).
+    pub retries: u32,
+    /// Deterministic capped exponential backoff between attempts:
+    /// `min(backoff_base · 2^(attempt−1), backoff_cap)`.  No jitter — a
+    /// replayed batch sleeps the same schedule.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Per-cell wall-clock deadline, enforced cooperatively by the
+    /// engine at interval boundaries (`Simulation::set_deadline`); a
+    /// leader-side watchdog additionally reports cells that overshoot
+    /// (e.g. hung inside a PJRT dispatch, which cannot be preempted).
+    pub cell_timeout: Option<Duration>,
+    /// Chaos/testing hook: build managers through this factory instead
+    /// of `build_manager` + `Models`.
+    pub manager_override: Option<ManagerFactory>,
+}
+
+impl Default for RunOpts {
+    fn default() -> RunOpts {
+        RunOpts {
+            trace_dir: None,
+            journal: None,
+            resume: false,
+            keep_going: false,
+            retries: DEFAULT_RETRIES,
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(2),
+            cell_timeout: None,
+            manager_override: None,
+        }
+    }
+}
+
+/// The outcome of one cell in a batch.
+pub struct CellOutcome {
+    pub label: String,
+    pub result: Result<RunMetrics>,
+    /// Attempts actually executed (0 when restored from the journal).
+    pub attempts: u32,
+    /// The metrics were restored from the results journal, not re-run.
+    pub from_journal: bool,
 }
 
 /// Turn a cell label into a safe file stem (`fig10|Grass|42` →
-/// `fig10_Grass_42`).
+/// `fig10_Grass_42`).  Not collision-free — two labels can sanitize to
+/// the same stem; batch file naming goes through [`unique_stems`].
 pub fn sanitize_label(label: &str) -> String {
     label
         .chars()
         .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
         .collect()
+}
+
+/// Collision-free file stems for a batch, in submission order: the first
+/// label to claim a sanitized stem keeps it, later colliding labels get
+/// an `__2`, `__3`, … suffix (checked against the whole used set, so a
+/// generated suffix can never collide with another label's natural
+/// stem).
+pub fn unique_stems(cells: &[Cell]) -> Vec<String> {
+    let mut used: HashSet<String> = HashSet::new();
+    let mut stems = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let base = sanitize_label(&cell.label);
+        let mut stem = base.clone();
+        let mut k = 2usize;
+        while !used.insert(stem.clone()) {
+            stem = format!("{base}__{k}");
+            k += 1;
+        }
+        stems.push(stem);
+    }
+    stems
+}
+
+/// Deterministic capped exponential backoff before retry `retry` (1-based:
+/// the sleep before the first retry is `base`, then `2·base`, `4·base`, …
+/// capped at `cap`).
+pub fn backoff_delay(retry: u32, base: Duration, cap: Duration) -> Duration {
+    let shift = retry.saturating_sub(1).min(16);
+    base.checked_mul(1u32 << shift).unwrap_or(cap).min(cap)
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "<non-string panic payload>".into())
+}
+
+/// What a worker has to run cells with.
+enum WorkerCtx {
+    /// Full AOT model bundle (every technique runs).
+    Loaded(Models),
+    /// No models on this worker: either the batch runs with a manager
+    /// override (hermetic), or `Models::load` exhausted its retries and
+    /// the worker degraded to model-free cells (`why` carries the load
+    /// error; model-requiring cells become per-cell errors instead of
+    /// killing the batch).
+    ModelFree { manifest: Manifest, why: Option<String> },
+}
+
+/// One attempt at one cell.  Panics are caught by the caller.
+fn run_cell_attempt(cell: &Cell, stem: &str, ctx: &WorkerCtx, opts: &RunOpts) -> Result<RunMetrics> {
+    let sink = match &opts.trace_dir {
+        Some(d) => TraceSink::file(d.join(format!("{stem}.jsonl")))?,
+        None => TraceSink::off(),
+    };
+    let scheduler = crate::scheduler::build(cell.cfg.scheduler, Pcg::new(cell.cfg.seed, 0x5C8E));
+    let (manager, manifest): (Box<dyn Manager>, &Manifest) = match (&opts.manager_override, ctx) {
+        (Some(factory), WorkerCtx::Loaded(models)) => (factory(&cell.cfg)?, &models.manifest),
+        (Some(factory), WorkerCtx::ModelFree { manifest, .. }) => (factory(&cell.cfg)?, manifest),
+        (None, WorkerCtx::Loaded(models)) => {
+            (build_manager(cell.cfg.technique, models, &cell.cfg)?, &models.manifest)
+        }
+        (None, WorkerCtx::ModelFree { manifest, why }) => {
+            let mgr = model_free_manager(cell.cfg.technique).ok_or_else(|| {
+                anyhow!(
+                    "technique {:?} needs the AOT models, unavailable on this worker{}",
+                    cell.cfg.technique,
+                    why.as_ref().map(|e| format!(" ({e})")).unwrap_or_default()
+                )
+            })?;
+            (mgr, manifest)
+        }
+    };
+    let mut sim = Simulation::new(cell.cfg.clone(), manifest, scheduler, manager);
+    sim.set_trace(sink);
+    if let Some(timeout) = opts.cell_timeout {
+        sim.set_deadline(Instant::now() + timeout);
+    }
+    let (metrics, mut sink, timed_out) = sim.run_traced_outcome();
+    sink.finish()?;
+    if timed_out {
+        bail!(
+            "cell {:?} exceeded its {:.1}s wall-clock deadline",
+            cell.label,
+            opts.cell_timeout.unwrap_or_default().as_secs_f64()
+        );
+    }
+    Ok(metrics)
+}
+
+/// Retry loop around [`run_cell_attempt`] with panic isolation: a panic
+/// anywhere inside the cell (manager, engine, trace sink) becomes a
+/// per-cell error; sibling cells are never lost.  Returns the result and
+/// the number of attempts executed.
+fn run_cell(cell: &Cell, stem: &str, ctx: &WorkerCtx, opts: &RunOpts) -> (Result<RunMetrics>, u32) {
+    let max_attempts = opts.retries.saturating_add(1);
+    let mut last_err = None;
+    for attempt in 1..=max_attempts {
+        if attempt > 1 {
+            std::thread::sleep(backoff_delay(attempt - 1, opts.backoff_base, opts.backoff_cap));
+        }
+        match catch_unwind(AssertUnwindSafe(|| run_cell_attempt(cell, stem, ctx, opts))) {
+            Ok(Ok(metrics)) => return (Ok(metrics), attempt),
+            Ok(Err(e)) => last_err = Some(e),
+            Err(payload) => {
+                last_err = Some(anyhow!("cell panicked: {}", panic_message(payload)))
+            }
+        }
+    }
+    let err = last_err
+        .unwrap_or_else(|| anyhow!("no attempts executed"))
+        .context(format!("cell {:?} failed after {max_attempts} attempt(s)", cell.label));
+    (Err(err), max_attempts)
+}
+
+/// Load the per-worker model bundle with bounded retry + backoff; on
+/// exhaustion the worker degrades to model-free cells instead of killing
+/// the batch (master–worker restart/redundancy, DESIGN.md §12).
+fn load_worker_ctx(art_dir: &std::path::Path, opts: &RunOpts) -> WorkerCtx {
+    let hermetic_manifest =
+        || Manifest::load(crate::find_artifact_dir()).unwrap_or_else(|_| Manifest::test_default());
+    if opts.manager_override.is_some() {
+        return WorkerCtx::ModelFree { manifest: hermetic_manifest(), why: None };
+    }
+    let max_attempts = opts.retries.saturating_add(1);
+    let mut last_err = None;
+    for attempt in 1..=max_attempts {
+        if attempt > 1 {
+            std::thread::sleep(backoff_delay(attempt - 1, opts.backoff_base, opts.backoff_cap));
+        }
+        match catch_unwind(AssertUnwindSafe(|| Models::load(art_dir))) {
+            Ok(Ok(models)) => return WorkerCtx::Loaded(models),
+            Ok(Err(e)) => last_err = Some(format!("{e:#}")),
+            Err(payload) => last_err = Some(format!("panic: {}", panic_message(payload))),
+        }
+    }
+    let why = last_err.unwrap_or_else(|| "unknown".into());
+    eprintln!(
+        "note: worker degraded to model-free cells — Models::load failed after \
+         {max_attempts} attempt(s): {why}"
+    );
+    WorkerCtx::ModelFree { manifest: hermetic_manifest(), why: Some(why) }
 }
 
 /// Run cells on a worker pool.  Each worker owns its own PJRT client (the
@@ -161,80 +392,268 @@ pub fn run_many(cells: Vec<Cell>, threads: usize, art_dir: PathBuf) -> Result<Ve
     run_many_opts(cells, threads, art_dir, RunOpts::default())
 }
 
-/// [`run_many`] with observability options.  Results come back in
-/// *submission order* (ordered reduction: workers tag each result with
-/// its cell index and the leader slots it), so downstream tables are
-/// deterministic regardless of worker interleaving.
+/// [`run_many`] with observability/resilience options, strict mode: the
+/// first failed cell fails the batch (after retries; queued cells are
+/// cancelled).  Results come back in *submission order* (ordered
+/// reduction: workers tag each result with its cell index and the leader
+/// slots it), so downstream tables are deterministic regardless of
+/// worker interleaving.
 pub fn run_many_opts(
     cells: Vec<Cell>,
     threads: usize,
     art_dir: PathBuf,
     opts: RunOpts,
 ) -> Result<Vec<(String, RunMetrics)>> {
-    let threads = threads.max(1).min(cells.len().max(1));
-    let (work_tx, work_rx) = mpsc::channel::<(usize, Cell)>();
-    let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
-    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<(String, RunMetrics)>)>();
-    let n_cells = cells.len();
-    for item in cells.into_iter().enumerate() {
-        work_tx.send(item).unwrap();
-    }
-    drop(work_tx);
-    let mut handles = Vec::new();
-    for _ in 0..threads {
-        let rx = Arc::clone(&work_rx);
-        let tx = res_tx.clone();
-        let dir = art_dir.clone();
-        let opts = opts.clone();
-        handles.push(std::thread::spawn(move || {
-            let models = match Models::load(dir) {
-                Ok(m) => m,
-                Err(e) => {
-                    let _ = tx.send((usize::MAX, Err(e)));
-                    return;
-                }
-            };
-            loop {
-                let cell = { rx.lock().unwrap().recv() };
-                let Ok((idx, cell)) = cell else { break };
-                let result = (|| -> Result<(String, RunMetrics)> {
-                    let sink = match &opts.trace_dir {
-                        Some(d) => {
-                            TraceSink::file(d.join(format!("{}.jsonl", sanitize_label(&cell.label))))?
-                        }
-                        None => TraceSink::off(),
-                    };
-                    let (m, mut sink) = run_one_traced(&cell.cfg, &models, sink)?;
-                    sink.finish()?;
-                    Ok((cell.label, m))
-                })();
-                if tx.send((idx, result)).is_err() {
-                    break;
-                }
-            }
-        }));
-    }
-    drop(res_tx);
-    let mut slots: Vec<Option<(String, RunMetrics)>> = (0..n_cells).map(|_| None).collect();
+    let keep_going = opts.keep_going;
+    let outcomes = run_many_cells(cells, threads, art_dir, opts)?;
+    let mut out = Vec::with_capacity(outcomes.len());
     let mut first_err = None;
-    for (idx, r) in res_rx {
-        match r {
-            Ok(pair) if idx < n_cells => slots[idx] = Some(pair),
-            Ok(_) => {}
+    for o in outcomes {
+        match o.result {
+            Ok(m) => out.push((o.label, m)),
             Err(e) => {
                 first_err.get_or_insert(e);
             }
         }
     }
-    for h in handles {
-        let _ = h.join();
+    match first_err {
+        Some(e) if !keep_going => Err(e),
+        _ => Ok(out),
     }
-    if let Some(e) = first_err {
-        return Err(e);
+}
+
+/// The fault-tolerant batch engine (DESIGN.md §12): per-cell panic
+/// isolation, bounded retry with deterministic capped backoff, per-cell
+/// deadlines with a leader-side watchdog, journal-backed resume, and
+/// per-cell `Result`s in submission order.  Returns `Err` only for
+/// batch-level infrastructure failures (journal I/O, queue seeding) —
+/// cell failures live in the per-cell outcomes.
+pub fn run_many_cells(
+    cells: Vec<Cell>,
+    threads: usize,
+    art_dir: PathBuf,
+    opts: RunOpts,
+) -> Result<Vec<CellOutcome>> {
+    let n_cells = cells.len();
+    let stems = unique_stems(&cells);
+    let labels: Vec<String> = cells.iter().map(|c| c.label.clone()).collect();
+    let digests: Vec<String> = cells.iter().map(|c| journal::cfg_digest(&c.cfg)).collect();
+
+    // Resume: restore journaled cells without re-running them.
+    let journal_map = match (&opts.journal, opts.resume) {
+        (Some(path), true) => journal::load_map(path)?,
+        _ => HashMap::new(),
+    };
+    let mut writer = match &opts.journal {
+        Some(path) => Some(journal::Journal::open(path, opts.resume)?),
+        None => None,
+    };
+
+    let mut outcomes: Vec<Option<CellOutcome>> = (0..n_cells).map(|_| None).collect();
+    let mut work_items = Vec::new();
+    for (idx, cell) in cells.into_iter().enumerate() {
+        let key = (labels[idx].clone(), digests[idx].clone());
+        if let Some(m) = journal_map.get(&key) {
+            outcomes[idx] = Some(CellOutcome {
+                label: labels[idx].clone(),
+                result: Ok(m.clone()),
+                attempts: 0,
+                from_journal: true,
+            });
+        } else {
+            work_items.push((idx, cell, stems[idx].clone()));
+        }
     }
-    slots
+
+    if !work_items.is_empty() {
+        let threads = threads.max(1).min(work_items.len());
+        let (work_tx, work_rx) = mpsc::channel::<(usize, Cell, String)>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<RunMetrics>, u32)>();
+        for item in work_items {
+            work_tx
+                .send(item)
+                .map_err(|e| anyhow!("seeding the work queue failed: {e}"))?;
+        }
+        drop(work_tx);
+
+        // In-flight table feeding the watchdog (cell index → label, start).
+        let inflight: Arc<Mutex<HashMap<usize, (String, Instant)>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let watchdog = opts.cell_timeout.map(|timeout| {
+            let inflight = Arc::clone(&inflight);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let poll = (timeout / 4).clamp(Duration::from_millis(10), Duration::from_secs(5));
+                let mut warned: HashSet<usize> = HashSet::new();
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(poll);
+                    let now = Instant::now();
+                    for (&idx, (label, started)) in inflight.lock().unwrap().iter() {
+                        let elapsed = now.duration_since(*started);
+                        if elapsed > timeout.saturating_mul(2) && warned.insert(idx) {
+                            eprintln!(
+                                "[watchdog] cell {label:?} running {:.1}s past its {:.1}s \
+                                 deadline (the engine aborts it at the next interval \
+                                 boundary; a hang inside a native call cannot be preempted)",
+                                elapsed.as_secs_f64(),
+                                timeout.as_secs_f64()
+                            );
+                        }
+                    }
+                }
+            })
+        });
+
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let rx = Arc::clone(&work_rx);
+            let tx = res_tx.clone();
+            let dir = art_dir.clone();
+            let opts = opts.clone();
+            let inflight = Arc::clone(&inflight);
+            handles.push(std::thread::spawn(move || {
+                let ctx = load_worker_ctx(&dir, &opts);
+                loop {
+                    let item = { rx.lock().unwrap().recv() };
+                    let Ok((idx, cell, stem)) = item else { break };
+                    inflight.lock().unwrap().insert(idx, (cell.label.clone(), Instant::now()));
+                    let (result, attempts) = run_cell(&cell, &stem, &ctx, &opts);
+                    inflight.lock().unwrap().remove(&idx);
+                    if tx.send((idx, result, attempts)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(res_tx);
+
+        let mut journal_err: Option<anyhow::Error> = None;
+        for (idx, result, attempts) in res_rx {
+            if let (Ok(m), Some(w), None) = (&result, writer.as_mut(), journal_err.as_ref()) {
+                // A journal append failure breaks the crash-safety
+                // contract: record it as a batch-level error (after
+                // letting the in-flight cells finish).
+                if let Err(e) = w.append(&labels[idx], &digests[idx], attempts, m) {
+                    journal_err = Some(e);
+                }
+            }
+            let failed = result.is_err();
+            outcomes[idx] = Some(CellOutcome {
+                label: labels[idx].clone(),
+                result,
+                attempts,
+                from_journal: false,
+            });
+            if failed && !opts.keep_going {
+                // Fail fast: cancel everything still queued (in-flight
+                // cells finish and are collected normally).
+                let rx = work_rx.lock().unwrap();
+                while let Ok((idx, _, _)) = rx.try_recv() {
+                    outcomes[idx] = Some(CellOutcome {
+                        label: labels[idx].clone(),
+                        result: Err(anyhow!(
+                            "cancelled: an earlier cell failed (strict mode; \
+                             use keep_going for partial results)"
+                        )),
+                        attempts: 0,
+                        from_journal: false,
+                    });
+                }
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(h) = watchdog {
+            let _ = h.join();
+        }
+        if let Some(e) = journal_err {
+            return Err(e);
+        }
+    }
+
+    Ok(outcomes
         .into_iter()
         .enumerate()
-        .map(|(i, s)| s.ok_or_else(|| anyhow::anyhow!("cell {i} produced no result")))
-        .collect()
+        .map(|(idx, slot)| {
+            slot.unwrap_or_else(|| CellOutcome {
+                label: labels[idx].clone(),
+                result: Err(anyhow!("cell produced no result (worker terminated abnormally)")),
+                attempts: 0,
+                from_journal: false,
+            })
+        })
+        .collect())
+}
+
+/// Human-readable failure summary for a batch, `None` when every cell
+/// succeeded.
+pub fn failure_summary(outcomes: &[CellOutcome]) -> Option<String> {
+    let failures: Vec<&CellOutcome> = outcomes.iter().filter(|o| o.result.is_err()).collect();
+    if failures.is_empty() {
+        return None;
+    }
+    let mut s = format!("{} of {} cells failed:", failures.len(), outcomes.len());
+    for o in failures {
+        let err = o.result.as_ref().err().map(|e| format!("{e:#}")).unwrap_or_default();
+        s.push_str(&format!("\n  {} [{} attempt(s)]: {err}", o.label, o.attempts));
+    }
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(label: &str) -> Cell {
+        Cell { label: label.into(), cfg: SimConfig::test_defaults() }
+    }
+
+    #[test]
+    fn sanitize_collisions_get_unique_stems() {
+        // Both sanitize to `fig_A_1`; the journal/trace files must not
+        // silently overwrite each other.
+        let cells =
+            [cell("fig|A|1"), cell("fig_A_1"), cell("fig|A|1"), cell("fig_A_1__2"), cell("x")];
+        let stems = unique_stems(&cells);
+        assert_eq!(stems[0], "fig_A_1");
+        assert_eq!(stems[1], "fig_A_1__2");
+        assert_eq!(stems[2], "fig_A_1__3");
+        // A label whose *natural* stem matches a generated suffix still
+        // gets a fresh name.
+        assert_eq!(stems[3], "fig_A_1__2__2");
+        assert_eq!(stems[4], "x");
+        let unique: HashSet<&String> = stems.iter().collect();
+        assert_eq!(unique.len(), stems.len());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_capped() {
+        let base = Duration::from_millis(100);
+        let cap = Duration::from_secs(2);
+        assert_eq!(backoff_delay(1, base, cap), Duration::from_millis(100));
+        assert_eq!(backoff_delay(2, base, cap), Duration::from_millis(200));
+        assert_eq!(backoff_delay(3, base, cap), Duration::from_millis(400));
+        assert_eq!(backoff_delay(6, base, cap), cap);
+        assert_eq!(backoff_delay(60, base, cap), cap); // shift saturates
+        assert_eq!(backoff_delay(1, Duration::ZERO, cap), Duration::ZERO);
+    }
+
+    #[test]
+    fn build_manager_covers_every_technique_without_panicking() {
+        // The `other` arm must stay total: every technique either builds
+        // model-free or is one of the model-backed arms (which we cannot
+        // construct without artifacts — they are explicitly matched, so
+        // reaching `other` with them is impossible).
+        for t in Technique::paper_set() {
+            if matches!(t, Technique::Start | Technique::IgruSd) {
+                assert!(model_free_manager(t).is_none());
+            } else {
+                assert!(model_free_manager(t).is_some(), "{t:?}");
+            }
+        }
+    }
 }

@@ -9,7 +9,7 @@
 //! * fused-rollout window: T = 5 vs T = 1 (does the LSTM memory help?)
 
 use crate::config::{SchedulerKind, SimConfig, Technique};
-use crate::coordinator::{run_many_opts, Cell, RunOpts};
+use crate::coordinator::Cell;
 use crate::experiments::common::*;
 use crate::experiments::report::Table;
 use anyhow::Result;
@@ -53,11 +53,7 @@ pub fn ablation(
             cells.push(Cell { label: format!("{label}|START|{seed}"), cfg });
         }
     }
-    let run_opts = RunOpts { trace_dir: opts.trace_dir.as_ref().map(|d| d.join("ablation")) };
-    let results = run_many_opts(cells, threads, art_dir.clone(), run_opts)?;
-    if opts.profile {
-        println!("{}", phase_table("ablation", &results).render());
-    }
+    let results = execute("ablation", cells, threads, art_dir, opts)?;
 
     let exec = group_results(&results, |m| m.avg_execution_time());
     let sla = group_results(&results, |m| m.sla_violation_rate());

@@ -2,13 +2,14 @@
 //! (fast vs paper-scale), technique sweeps, result persistence.
 
 use crate::config::{SimConfig, Technique};
-use crate::coordinator::Cell;
+use crate::coordinator::{failure_summary, run_many_cells, Cell, RunOpts, DEFAULT_RETRIES};
 use crate::experiments::report::Table;
 use crate::sim::metrics::RunMetrics;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Experiment size profile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,15 +54,103 @@ impl Profile {
     }
 }
 
-/// Observability options threaded from the experiment CLI into every
-/// figure's runner (DESIGN.md §10).
-#[derive(Clone, Default)]
+/// Observability + resilience options threaded from the experiment CLI
+/// into every figure's runner (DESIGN.md §10, §12).
+#[derive(Clone)]
 pub struct ExpOpts {
     /// When set, each cell streams a JSONL event trace to
     /// `<dir>/<figure id>/<sanitized cell label>.jsonl`.
     pub trace_dir: Option<PathBuf>,
     /// Print a per-figure phase-timing table (profiler counters).
     pub profile: bool,
+    /// Crash-safe per-figure results journal directory
+    /// (`<dir>/<figure id>.results.jsonl`); `None` disables journaling.
+    pub journal_dir: Option<PathBuf>,
+    /// `--resume`: skip cells already present in the figure's journal.
+    pub resume: bool,
+    /// `--keep-going`: run every cell, report failures, build tables
+    /// from the cells that succeeded.
+    pub keep_going: bool,
+    /// `--retries N`: extra attempts per cell.
+    pub retries: u32,
+    /// `--cell-timeout SECS`: per-cell wall-clock deadline.
+    pub cell_timeout: Option<Duration>,
+}
+
+impl Default for ExpOpts {
+    fn default() -> ExpOpts {
+        ExpOpts {
+            trace_dir: None,
+            profile: false,
+            journal_dir: None,
+            resume: false,
+            keep_going: false,
+            retries: DEFAULT_RETRIES,
+            cell_timeout: None,
+        }
+    }
+}
+
+impl ExpOpts {
+    /// Lower the experiment-level options into coordinator [`RunOpts`]
+    /// for one figure.
+    pub fn run_opts(&self, id: &str) -> RunOpts {
+        RunOpts {
+            trace_dir: self.trace_dir.as_ref().map(|d| d.join(id)),
+            journal: self.journal_dir.as_ref().map(|d| d.join(format!("{id}.results.jsonl"))),
+            resume: self.resume,
+            keep_going: self.keep_going,
+            retries: self.retries,
+            cell_timeout: self.cell_timeout,
+            ..RunOpts::default()
+        }
+    }
+}
+
+/// Shared figure runner: cells → results (+ raw dump entries), through
+/// the fault-tolerant coordinator.  `--trace <dir>` streams one JSONL
+/// file per cell into `<dir>/<figure id>/`, the journal makes the figure
+/// resumable (`--resume`), and `--keep-going` degrades to
+/// partial tables (failed cells reported on stderr, their grid points
+/// rendered as NaN) instead of aborting the figure.
+pub fn execute(
+    id: &str,
+    cells: Vec<Cell>,
+    threads: usize,
+    art_dir: &Path,
+    opts: &ExpOpts,
+) -> Result<Vec<(String, RunMetrics)>> {
+    let run_opts = opts.run_opts(id);
+    let outcomes = run_many_cells(cells, threads, art_dir.to_path_buf(), run_opts)?;
+    let restored = outcomes.iter().filter(|o| o.from_journal).count();
+    if restored > 0 {
+        println!("[{id}] resume: {restored} of {} cells restored from journal", outcomes.len());
+    }
+    let summary = failure_summary(&outcomes);
+    let mut results = Vec::with_capacity(outcomes.len());
+    let mut first_err = None;
+    for o in outcomes {
+        match o.result {
+            Ok(m) => results.push((o.label, m)),
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(s) = &summary {
+        if opts.keep_going {
+            eprintln!("[{id}] continuing with partial results — {s}");
+        }
+    }
+    if let Some(e) = first_err {
+        if !opts.keep_going {
+            return Err(e);
+        }
+    }
+    if opts.profile {
+        println!("{}", phase_table(id, &results).render());
+    }
+    Ok(results)
 }
 
 /// Aggregate the phase profiler across a figure's result set: the
@@ -183,8 +272,13 @@ pub fn group_results(
 ) -> BTreeMap<String, BTreeMap<String, f64>> {
     let mut acc: BTreeMap<String, BTreeMap<String, (f64, usize)>> = BTreeMap::new();
     for (label, m) in results {
-        let parts: Vec<&str> = label.split('|').collect();
-        let (sweep, tech) = (parts[0].to_string(), parts[1].to_string());
+        let mut parts = label.split('|');
+        let (Some(sweep), Some(tech)) = (parts.next(), parts.next()) else {
+            // A label outside the `<sweep>|<technique>|<seed>` scheme has
+            // no grid point; skip it rather than panic mid-reduction.
+            continue;
+        };
+        let (sweep, tech) = (sweep.to_string(), tech.to_string());
         let e = acc.entry(sweep).or_default().entry(tech).or_insert((0.0, 0));
         e.0 += metric(m);
         e.1 += 1;

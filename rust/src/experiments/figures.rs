@@ -6,7 +6,7 @@
 //! target.
 
 use crate::config::{SimConfig, Technique};
-use crate::coordinator::{run_many_opts, Cell, RunOpts};
+use crate::coordinator::Cell;
 use crate::experiments::common::*;
 use crate::experiments::report::Table;
 use crate::sim::metrics::RunMetrics;
@@ -30,25 +30,6 @@ fn secs(v: f64) -> String {
 
 fn kwh(v: f64) -> String {
     format!("{v:.2}")
-}
-
-/// Shared runner: cells → results (+ raw dump entries).  Observability
-/// fans out here: `--trace <dir>` streams one JSONL file per cell into
-/// `<dir>/<figure id>/`, `--profile` prints the figure's phase-timing
-/// table from the profiler counters (DESIGN.md §10).
-fn execute(
-    id: &str,
-    cells: Vec<Cell>,
-    threads: usize,
-    art_dir: &PathBuf,
-    opts: &ExpOpts,
-) -> Result<Vec<(String, RunMetrics)>> {
-    let run_opts = RunOpts { trace_dir: opts.trace_dir.as_ref().map(|d| d.join(id)) };
-    let results = run_many_opts(cells, threads, art_dir.clone(), run_opts)?;
-    if opts.profile {
-        println!("{}", phase_table(id, &results).render());
-    }
-    Ok(results)
 }
 
 fn raw_map(results: &[(String, RunMetrics)]) -> BTreeMap<String, Json> {
@@ -157,8 +138,8 @@ pub fn fig5(
         &["technique", "time-to-mitigation", "avg response"],
     );
     for t in &techniques {
-        let d = delay["x"].get(t.name()).copied().unwrap_or(f64::NAN);
-        let r = resp["x"].get(t.name()).copied().unwrap_or(f64::NAN);
+        let d = delay.get("x").and_then(|g| g.get(t.name())).copied().unwrap_or(f64::NAN);
+        let r = resp.get("x").and_then(|g| g.get(t.name())).copied().unwrap_or(f64::NAN);
         table.row(vec![t.name().to_string(), secs(d), secs(r)]);
     }
     Ok(ExperimentResult { id: "fig5", tables: vec![table], raw: raw_map(&results) })
@@ -326,8 +307,9 @@ pub fn fig9(
         "Fig.9 — straggler-count MAPE (%) vs #Xeon-hosted VMs (of 200)",
         &["xeon VMs", "START", "IGRU-SD", "RPPS"],
     );
+    let empty = BTreeMap::new();
     for s in &order {
-        let row = &grouped[s];
+        let row = grouped.get(s).unwrap_or(&empty);
         table.row(vec![
             s.clone(),
             format!("{:.1}", row.get("START").copied().unwrap_or(f64::NAN)),
@@ -424,22 +406,29 @@ pub fn headline(
         "Headline — START vs best baseline (paper: −13% exec, −11% cont, −16% energy, −19% SLA)",
         &["metric", "START", "best baseline", "who", "delta"],
     );
+    let empty = BTreeMap::new();
     for (name, f, lower_better) in &metrics {
         let grouped = group_results(&results, f);
-        let row = &grouped["x"];
-        let start = row["START"];
-        let (who, best) = row
+        // Under `--keep-going` the grid may be partial: missing entries
+        // render as n/a instead of panicking the whole report.
+        let row = grouped.get("x").unwrap_or(&empty);
+        let start = row.get("START").copied().unwrap_or(f64::NAN);
+        let best_baseline = row
             .iter()
-            .filter(|(k, _)| k.as_str() != "START")
+            .filter(|(k, v)| k.as_str() != "START" && v.is_finite())
             .min_by(|a, b| {
+                let ord = a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal);
                 if *lower_better {
-                    a.1.partial_cmp(b.1).unwrap()
+                    ord
                 } else {
-                    b.1.partial_cmp(a.1).unwrap()
+                    ord.reverse()
                 }
             })
-            .map(|(k, v)| (k.clone(), *v))
-            .unwrap();
+            .map(|(k, v)| (k.clone(), *v));
+        let Some((who, best)) = best_baseline else {
+            table.row(vec![name.to_string(), format!("{start:.3}"), "n/a".into(), "n/a".into(), "n/a".into()]);
+            continue;
+        };
         let delta = 100.0 * (start - best) / best.max(1e-12);
         table.row(vec![
             name.to_string(),

@@ -3,6 +3,13 @@
 //! fig8|fig9|fig10|headline|all> [--paper] [--threads N] [--out results]
 //! [--trace DIR] [--profile]` — the last two stream per-cell JSONL event
 //! traces and print per-figure phase-timing tables (DESIGN.md §10).
+//!
+//! Resilience knobs (DESIGN.md §12): every figure journals completed
+//! cells to `<out>/journal/<id>.results.jsonl`; `--resume` skips the
+//! journaled cells of an interrupted run (bit-identical tables),
+//! `--keep-going` builds partial tables instead of aborting on the first
+//! failed cell, `--retries N` and `--cell-timeout SECS` bound transient
+//! failures and hung cells.
 pub mod ablation;
 pub mod common;
 pub mod figures;
@@ -24,7 +31,23 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     )?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let art_dir = crate::find_artifact_dir();
-    let opts = ExpOpts { trace_dir: args.opt_path("trace"), profile: args.flag("profile") };
+    let retries = args.usize_or("retries", crate::coordinator::DEFAULT_RETRIES as usize)?;
+    let opts = ExpOpts {
+        trace_dir: args.opt_path("trace"),
+        profile: args.flag("profile"),
+        journal_dir: Some(out_dir.join("journal")),
+        resume: args.flag("resume"),
+        keep_going: args.flag("keep-going"),
+        retries: u32::try_from(retries).unwrap_or(u32::MAX),
+        cell_timeout: match args.opt_f64("cell-timeout")? {
+            // `from_secs_f64` panics on non-finite/negative input.
+            Some(s) if s.is_finite() && s > 0.0 => {
+                Some(std::time::Duration::from_secs_f64(s))
+            }
+            Some(s) => anyhow::bail!("--cell-timeout wants positive seconds, got {s}"),
+            None => None,
+        },
+    };
     let ids: Vec<&str> = if which == "all" {
         vec!["fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "headline", "ablation"]
     } else {

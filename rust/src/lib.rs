@@ -75,6 +75,12 @@ pub fn launcher_main() -> anyhow::Result<()> {
                  replayable format — replay parity is checked after the run); \
                  a .csv path writes a flat export only, no replay (DESIGN.md section 10)"
             );
+            println!(
+                "experiment <id> [--resume] [--keep-going] [--retries N] \
+                 [--cell-timeout SECS]: fault-tolerant batch runner — completed \
+                 cells are journaled to <out>/journal/<id>.results.jsonl and an \
+                 interrupted run resumes bit-identically (DESIGN.md section 12)"
+            );
             Ok(())
         }
         Some("simulate") => {

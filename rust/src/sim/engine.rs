@@ -95,6 +95,10 @@ pub struct Simulation {
     manager: Box<dyn Manager>,
     rng: Pcg,
     interval: usize,
+    /// Cooperative wall-clock deadline (coordinator cell timeout): checked
+    /// between intervals, so a slow cell aborts at the next interval
+    /// boundary instead of stalling its worker forever.
+    deadline: Option<Instant>,
     /// Adaptive straggler parameter k (starts at cfg.k_straggler).
     pub k: f64,
     /// Rolling FP/FN window for dynamic-k adaptation.
@@ -156,6 +160,7 @@ impl Simulation {
             manager,
             rng,
             interval: 0,
+            deadline: None,
             k,
             k_window: (0, 0),
             mt_scratch: vec![0.0; mt_len],
@@ -200,9 +205,37 @@ impl Simulation {
     /// Like [`Simulation::run`], but also returns the event sink
     /// installed via [`Simulation::set_trace`] (callers flush file sinks
     /// with `TraceSink::finish`).
-    pub fn run_traced(mut self) -> (RunMetrics, TraceSink) {
+    pub fn run_traced(self) -> (RunMetrics, TraceSink) {
+        let (metrics, sink, _) = self.run_traced_outcome();
+        (metrics, sink)
+    }
+
+    /// Arm the cooperative wall-clock deadline: the run loop checks it
+    /// before every interval (main horizon and drain) and aborts the run
+    /// when exceeded.  The coordinator's per-cell timeout uses this; the
+    /// granularity is one interval, which bounds how long a slow manager
+    /// can overshoot.
+    pub fn set_deadline(&mut self, deadline: Instant) {
+        self.deadline = Some(deadline);
+    }
+
+    fn past_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// [`Simulation::run_traced`] plus a timed-out flag: `true` means the
+    /// deadline armed via [`Simulation::set_deadline`] fired and the
+    /// returned metrics cover only a truncated run (callers must treat
+    /// them as a failure, not a result — the coordinator converts this
+    /// into a per-cell error).
+    pub fn run_traced_outcome(mut self) -> (RunMetrics, TraceSink, bool) {
         let n = self.cfg.n_intervals;
+        let mut timed_out = false;
         for _ in 0..n {
+            if self.past_deadline() {
+                timed_out = true;
+                break;
+            }
             self.step_interval(true);
         }
         // Drain: no new arrivals, finish outstanding jobs (a 20× bounded
@@ -210,12 +243,16 @@ impl Simulation {
         // intervals, so `SimConfig::drain_limit` is generous).
         let limit = self.cfg.drain_limit();
         let mut extra = 0;
-        while self.world.has_active_jobs() && extra < limit {
+        while !timed_out && self.world.has_active_jobs() && extra < limit {
+            if self.past_deadline() {
+                timed_out = true;
+                break;
+            }
             self.step_interval(false);
             extra += 1;
         }
         let sink = self.world.take_trace();
-        (self.metrics, sink)
+        (self.metrics, sink, timed_out)
     }
 
     /// Advance one scheduling interval.

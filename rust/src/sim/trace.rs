@@ -587,6 +587,141 @@ impl Event {
     }
 }
 
+// ------------------------------------------------- metrics round-trip
+
+fn f64_field_vec(v: &Json, key: &str) -> Result<Vec<f64>> {
+    v.req_arr(key)?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric element in {key:?}")))
+        .collect()
+}
+
+impl PhaseProfile {
+    /// Exact (nanosecond-integer) serialization of the profiler counters.
+    /// Unlike [`PhaseProfile::to_json`] — a derived human summary — this
+    /// form round-trips bit-identically through
+    /// [`PhaseProfile::from_json_exact`], which the coordinator's results
+    /// journal relies on so a resumed batch reproduces journaled cells
+    /// exactly, profiler included.
+    pub fn to_json_exact(&self) -> Json {
+        let nums = |xs: &[u64]| Json::Arr(xs.iter().map(|&n| Json::Num(n as f64)).collect());
+        Json::obj(vec![
+            ("nanos", nums(&self.nanos)),
+            ("calls", nums(&self.calls)),
+            ("predict_nanos", nums(&self.predict_nanos)),
+            ("predict_calls", Json::Num(self.predict_calls as f64)),
+        ])
+    }
+
+    /// Inverse of [`PhaseProfile::to_json_exact`].
+    pub fn from_json_exact(v: &Json) -> Result<PhaseProfile> {
+        fn arr<const N: usize>(v: &Json, key: &str) -> Result<[u64; N]> {
+            let xs = f64_field_vec(v, key)?;
+            if xs.len() != N {
+                bail!("{key:?}: expected {N} entries, got {}", xs.len());
+            }
+            let mut out = [0u64; N];
+            for (o, x) in out.iter_mut().zip(xs) {
+                *o = x as u64;
+            }
+            Ok(out)
+        }
+        Ok(PhaseProfile {
+            nanos: arr::<6>(v, "nanos")?,
+            calls: arr::<6>(v, "calls")?,
+            predict_nanos: arr::<3>(v, "predict_nanos")?,
+            predict_calls: v.req_f64("predict_calls")? as u64,
+        })
+    }
+}
+
+/// Serialize a whole [`RunMetrics`] losslessly (every deterministic field
+/// bit-exact via shortest-representation floats, plus the exact profiler
+/// counters).  This is the payload of one coordinator journal record:
+/// `metrics_from_json(&metrics_to_json(&m))` satisfies
+/// `m.diff_deterministic(..) == None` *and* reproduces `m.profile`, so a
+/// resumed experiment batch is indistinguishable from an uninterrupted
+/// one.
+pub fn metrics_to_json(m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("intervals", Json::Arr(m.intervals.iter().map(snapshot_json).collect())),
+        ("exec_times", Json::arr_f64(&m.exec_times)),
+        ("restart_times", Json::arr_f64(&m.restart_times)),
+        ("completion_times", Json::arr_f64(&m.completion_times)),
+        ("sla_violated_weight", Json::Num(m.sla_violated_weight)),
+        ("sla_total_weight", Json::Num(m.sla_total_weight)),
+        (
+            "straggler_pred",
+            Json::Arr(
+                m.straggler_pred
+                    .iter()
+                    .map(|&(p, a)| Json::Arr(vec![Json::Num(p), Json::Num(a)]))
+                    .collect(),
+            ),
+        ),
+        (
+            "confusion",
+            Json::obj(vec![
+                ("tp", Json::Num(m.confusion.tp as f64)),
+                ("fp", Json::Num(m.confusion.fp as f64)),
+                ("fn", Json::Num(m.confusion.fn_ as f64)),
+                ("tn", Json::Num(m.confusion.tn as f64)),
+            ]),
+        ),
+        ("profile", m.profile.to_json_exact()),
+        ("mitigation_delays", Json::arr_f64(&m.mitigation_delays)),
+        ("speculations", Json::Num(m.speculations as f64)),
+        ("reruns", Json::Num(m.reruns as f64)),
+        ("jobs_done", Json::Num(m.jobs_done as f64)),
+        ("tasks_done", Json::Num(m.tasks_done as f64)),
+    ])
+}
+
+/// Inverse of [`metrics_to_json`].
+pub fn metrics_from_json(v: &Json) -> Result<RunMetrics> {
+    let confusion = v.get("confusion").ok_or_else(|| anyhow!("missing confusion"))?;
+    Ok(RunMetrics {
+        intervals: v
+            .req_arr("intervals")?
+            .iter()
+            .map(snapshot_parse)
+            .collect::<Result<_>>()?,
+        exec_times: f64_field_vec(v, "exec_times")?,
+        restart_times: f64_field_vec(v, "restart_times")?,
+        completion_times: f64_field_vec(v, "completion_times")?,
+        sla_violated_weight: v.req_f64("sla_violated_weight")?,
+        sla_total_weight: v.req_f64("sla_total_weight")?,
+        straggler_pred: v
+            .req_arr("straggler_pred")?
+            .iter()
+            .map(|pair| {
+                let xs = pair.as_arr().ok_or_else(|| anyhow!("straggler_pred: non-array pair"))?;
+                match xs {
+                    [p, a] => Ok((
+                        p.as_f64().ok_or_else(|| anyhow!("straggler_pred: non-numeric"))?,
+                        a.as_f64().ok_or_else(|| anyhow!("straggler_pred: non-numeric"))?,
+                    )),
+                    _ => bail!("straggler_pred: expected [pred, actual]"),
+                }
+            })
+            .collect::<Result<_>>()?,
+        confusion: crate::util::stats::Confusion {
+            tp: confusion.req_f64("tp")? as u64,
+            fp: confusion.req_f64("fp")? as u64,
+            fn_: confusion.req_f64("fn")? as u64,
+            tn: confusion.req_f64("tn")? as u64,
+        },
+        profile: PhaseProfile::from_json_exact(
+            v.get("profile").ok_or_else(|| anyhow!("missing profile"))?,
+        )?,
+        mitigation_delays: f64_field_vec(v, "mitigation_delays")?,
+        speculations: v.req_f64("speculations")? as u64,
+        reruns: v.req_f64("reruns")? as u64,
+        jobs_done: v.req_usize("jobs_done")?,
+        tasks_done: v.req_usize("tasks_done")?,
+    })
+}
+
 /// Serialize events as JSONL into a writer.
 pub fn write_jsonl(events: &[Event], w: &mut impl Write) -> std::io::Result<()> {
     for e in events {
@@ -1384,6 +1519,80 @@ mod tests {
             p.csv_row("x").split(',').count(),
             PhaseProfile::csv_header().split(',').count()
         );
+    }
+
+    #[test]
+    fn metrics_json_round_trip_is_exact() {
+        // The coordinator journal's contract: metrics survive the JSONL
+        // round trip bit-identically (deterministic fields) and the
+        // profiler counters exactly.
+        let mut m = RunMetrics {
+            exec_times: vec![0.1 + 0.2, std::f64::consts::PI, 1.0 / 3.0],
+            restart_times: vec![0.0, 30.0, 1e-12],
+            completion_times: vec![300.0, 600.0, 12345.678_901_234_5],
+            sla_violated_weight: 2.5,
+            sla_total_weight: 7.0 / 3.0,
+            straggler_pred: vec![(1.75, 2.0), (0.0, 0.0)],
+            mitigation_delays: vec![12.5],
+            speculations: 3,
+            reruns: 1,
+            jobs_done: 2,
+            tasks_done: 3,
+            ..RunMetrics::default()
+        };
+        m.confusion.record(true, true);
+        m.confusion.record(false, true);
+        m.intervals.push(IntervalMetrics {
+            t: 300.0,
+            energy_kwh: 0.123_456_789_012_345,
+            cpu_util: 1.0 / 7.0,
+            ram_util: 0.25,
+            disk_util: 0.125,
+            net_util: 0.5,
+            contention: 0.0,
+            active_tasks: 17,
+            hosts_down: 1,
+        });
+        m.profile.add(Phase::Predict, Duration::from_nanos(123_456_789));
+        m.profile.add(Phase::Mitigate, Duration::from_nanos(42));
+        m.profile.add_predict_spans(&PredictSpans {
+            features: Duration::from_nanos(11),
+            dispatch: Duration::from_nanos(22),
+            decide: Duration::from_nanos(33),
+        });
+
+        let text = metrics_to_json(&m).dump();
+        let back = metrics_from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert!(m.diff_deterministic(&back).is_none(), "{:?}", m.diff_deterministic(&back));
+        assert_eq!(m.profile, back.profile, "profiler counters must round-trip exactly");
+
+        // A default (empty) RunMetrics round-trips too.
+        let empty = RunMetrics::default();
+        let back = metrics_from_json(&crate::util::json::parse(&metrics_to_json(&empty).dump()).unwrap())
+            .unwrap();
+        assert!(empty.diff_deterministic(&back).is_none());
+        assert_eq!(empty.profile, back.profile);
+    }
+
+    #[test]
+    fn metrics_from_json_rejects_malformed() {
+        let good = metrics_to_json(&RunMetrics::default());
+        assert!(metrics_from_json(&good).is_ok());
+        assert!(metrics_from_json(&Json::obj(vec![])).is_err());
+        // Wrong arity in the profile counters is caught, not truncated.
+        let mut bad = good.clone();
+        if let Json::Obj(map) = &mut bad {
+            map.insert(
+                "profile".into(),
+                Json::obj(vec![
+                    ("nanos", Json::Arr(vec![Json::Num(1.0)])),
+                    ("calls", Json::Arr(vec![])),
+                    ("predict_nanos", Json::Arr(vec![])),
+                    ("predict_calls", Json::Num(0.0)),
+                ]),
+            );
+        }
+        assert!(metrics_from_json(&bad).is_err());
     }
 
     #[cfg(feature = "sim-trace")]

@@ -1,0 +1,443 @@
+//! Chaos tests for the fault-tolerant coordinator (DESIGN.md §12).
+//!
+//! Everything here is hermetic: cells run through the `manager_override`
+//! fault-injection hook (or model-free techniques), so no AOT artifacts
+//! or PJRT backend are needed.  The batch machinery under test is the
+//! real one — worker pool, retry/backoff, panic isolation, deadlines,
+//! journal, resume.
+
+use start_sim::config::{SimConfig, Technique};
+use start_sim::coordinator::{
+    journal, run_many_cells, run_many_opts, Cell, CellOutcome, ManagerFactory, RunOpts,
+};
+use start_sim::mitigation::Action;
+use start_sim::predictor::FeatureExtractor;
+use start_sim::sim::engine::{Manager, NullManager};
+use start_sim::sim::World;
+use start_sim::util::ptest;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A cell small enough that a whole chaos batch runs in well under a
+/// second.
+fn tiny_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::test_defaults();
+    cfg.pm_counts = vec![2, 1, 1];
+    cfg.n_intervals = 6;
+    cfg.n_workloads = 60;
+    cfg.technique = Technique::None;
+    cfg.seed = seed;
+    cfg
+}
+
+fn cells_for(seeds: &[u64]) -> Vec<Cell> {
+    seeds.iter().map(|&s| Cell { label: format!("chaos|None|{s}"), cfg: tiny_cfg(s) }).collect()
+}
+
+/// Base options for chaos runs: instant backoff (the schedule itself is
+/// covered by a coordinator unit test), partial-results mode.
+fn chaos_opts(retries: u32, factory: ManagerFactory) -> RunOpts {
+    RunOpts {
+        keep_going: true,
+        retries,
+        backoff_base: Duration::ZERO,
+        backoff_cap: Duration::ZERO,
+        manager_override: Some(factory),
+        ..RunOpts::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("start_sim_resilience_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A manager that panics on its Nth `on_interval` call.
+struct PanickingManager {
+    calls: usize,
+    panic_at: usize,
+}
+
+impl Manager for PanickingManager {
+    fn name(&self) -> &'static str {
+        "Panic"
+    }
+    fn on_interval(&mut self, _w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        self.calls += 1;
+        if self.calls >= self.panic_at {
+            panic!("injected chaos panic at interval {}", self.calls);
+        }
+        Vec::new()
+    }
+}
+
+/// A manager that sleeps every interval — a "hung" cell for the
+/// deadline/watchdog path.
+struct SlowManager {
+    per_interval: Duration,
+}
+
+impl Manager for SlowManager {
+    fn name(&self) -> &'static str {
+        "Slow"
+    }
+    fn on_interval(&mut self, _w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
+        std::thread::sleep(self.per_interval);
+        Vec::new()
+    }
+}
+
+fn assert_ok(o: &CellOutcome) {
+    assert!(o.result.is_ok(), "{}: {:#}", o.label, o.result.as_ref().err().unwrap());
+}
+
+fn err_text(o: &CellOutcome) -> String {
+    format!("{:#}", o.result.as_ref().err().expect("expected a failed cell"))
+}
+
+// ---------------------------------------------------------- panic isolation
+
+#[test]
+fn injected_panic_is_a_per_cell_error_with_no_sibling_loss() {
+    let seeds = [1u64, 2, 3, 4, 5, 6];
+    let factory: ManagerFactory = Arc::new(|cfg: &SimConfig| {
+        if cfg.seed == 3 {
+            Ok(Box::new(PanickingManager { calls: 0, panic_at: 2 }) as Box<dyn Manager>)
+        } else {
+            Ok(Box::new(NullManager) as Box<dyn Manager>)
+        }
+    });
+    let outcomes =
+        run_many_cells(cells_for(&seeds), 3, PathBuf::from("unused"), chaos_opts(0, factory))
+            .unwrap();
+    assert_eq!(outcomes.len(), seeds.len(), "sibling cells were lost");
+    for (o, &seed) in outcomes.iter().zip(&seeds) {
+        assert_eq!(o.label, format!("chaos|None|{seed}"), "submission order broken");
+        if seed == 3 {
+            let msg = err_text(o);
+            assert!(msg.contains("injected chaos panic"), "unexpected error: {msg}");
+            assert_eq!(o.attempts, 1);
+        } else {
+            assert_ok(o);
+            assert!(o.result.as_ref().unwrap().tasks_done > 0, "{}: empty run", o.label);
+        }
+    }
+}
+
+// ------------------------------------------------------------ retry/backoff
+
+/// Factory that fails (Err or panic) the first `fail_n` builds for each
+/// seed, then succeeds — a transient fault.
+fn flaky_factory(
+    fail_n: HashMap<u64, u32>,
+    panic_instead: bool,
+    built: Arc<AtomicUsize>,
+) -> ManagerFactory {
+    let counts: Arc<Mutex<HashMap<u64, u32>>> = Arc::new(Mutex::new(HashMap::new()));
+    Arc::new(move |cfg: &SimConfig| {
+        built.fetch_add(1, Ordering::SeqCst);
+        let mut counts = counts.lock().unwrap();
+        let seen = counts.entry(cfg.seed).or_insert(0);
+        *seen += 1;
+        if *seen <= fail_n.get(&cfg.seed).copied().unwrap_or(0) {
+            if panic_instead {
+                panic!("injected transient panic (build {seen})");
+            }
+            anyhow::bail!("injected transient failure (build {seen})");
+        }
+        Ok(Box::new(NullManager) as Box<dyn Manager>)
+    })
+}
+
+#[test]
+fn bounded_retry_recovers_transient_failures() {
+    let built = Arc::new(AtomicUsize::new(0));
+    let factory = flaky_factory(HashMap::from([(2u64, 2u32)]), false, Arc::clone(&built));
+    let outcomes =
+        run_many_cells(cells_for(&[1, 2, 3]), 2, PathBuf::from("unused"), chaos_opts(2, factory))
+            .unwrap();
+    for o in &outcomes {
+        assert_ok(o);
+    }
+    assert_eq!(outcomes[1].attempts, 3, "two transient failures then success");
+    assert_eq!(outcomes[0].attempts, 1);
+    assert_eq!(outcomes[2].attempts, 1);
+    assert_eq!(built.load(Ordering::SeqCst), 5, "1 + 3 + 1 manager builds");
+}
+
+#[test]
+fn retry_exhaustion_surfaces_as_per_cell_error() {
+    let built = Arc::new(AtomicUsize::new(0));
+    // Seed 2 fails more times than the retry budget allows.
+    let factory = flaky_factory(HashMap::from([(2u64, 99u32)]), false, built);
+    let outcomes =
+        run_many_cells(cells_for(&[1, 2, 3]), 2, PathBuf::from("unused"), chaos_opts(1, factory))
+            .unwrap();
+    assert_ok(&outcomes[0]);
+    assert_ok(&outcomes[2]);
+    let msg = err_text(&outcomes[1]);
+    assert!(msg.contains("failed after 2 attempt"), "unexpected error: {msg}");
+    assert!(msg.contains("injected transient failure"), "root cause lost: {msg}");
+    assert_eq!(outcomes[1].attempts, 2);
+}
+
+#[test]
+fn strict_mode_fails_fast_and_cancels_queued_cells() {
+    // One worker; cell 1 always fails, the healthy factories sleep long
+    // enough that the leader's cancellation drain reliably wins the race
+    // for the tail of the queue.
+    let make_factory = || -> ManagerFactory {
+        Arc::new(|cfg: &SimConfig| {
+            if cfg.seed == 1 {
+                anyhow::bail!("injected transient failure");
+            }
+            std::thread::sleep(Duration::from_millis(100));
+            Ok(Box::new(NullManager) as Box<dyn Manager>)
+        })
+    };
+    let mut opts = chaos_opts(0, make_factory());
+    opts.keep_going = false;
+    let outcomes =
+        run_many_cells(cells_for(&[1, 2, 3]), 1, PathBuf::from("unused"), opts).unwrap();
+    assert!(err_text(&outcomes[0]).contains("injected transient failure"));
+    // Cell 2 may have been dequeued by the worker before the leader saw
+    // the failure; either way it must be accounted for.  Cell 3 sits
+    // behind the 100 ms factory sleep, so the drain always reaches it.
+    match &outcomes[1].result {
+        Ok(_) => {}
+        Err(_) => assert!(err_text(&outcomes[1]).contains("cancelled")),
+    }
+    assert!(err_text(&outcomes[2]).contains("cancelled"), "tail cell not cancelled");
+    assert_eq!(outcomes[2].attempts, 0);
+
+    let mut opts = chaos_opts(0, make_factory());
+    opts.keep_going = false;
+    let err = run_many_opts(cells_for(&[1, 2, 3]), 1, PathBuf::from("unused"), opts)
+        .expect_err("strict mode must fail the batch");
+    assert!(format!("{err:#}").contains("injected transient failure"));
+}
+
+// ----------------------------------------------------------------- deadline
+
+#[test]
+fn deadline_times_out_hung_cell_without_stalling_siblings() {
+    let factory: ManagerFactory = Arc::new(|cfg: &SimConfig| {
+        if cfg.seed == 1 {
+            Ok(Box::new(SlowManager { per_interval: Duration::from_millis(60) })
+                as Box<dyn Manager>)
+        } else {
+            Ok(Box::new(NullManager) as Box<dyn Manager>)
+        }
+    });
+    let mut opts = chaos_opts(0, factory);
+    opts.cell_timeout = Some(Duration::from_millis(90));
+    let outcomes =
+        run_many_cells(cells_for(&[1, 2]), 2, PathBuf::from("unused"), opts).unwrap();
+    let msg = err_text(&outcomes[0]);
+    assert!(msg.contains("deadline"), "unexpected error: {msg}");
+    assert_ok(&outcomes[1]);
+}
+
+// ----------------------------------------------------------- journal/resume
+
+/// The kill-mid-batch acceptance test, simulated deterministically: an
+/// "interrupted" run completes only half its cells (the rest fail via
+/// injected faults, so they are never journaled) and tears the journal's
+/// final line mid-write; the resumed run must execute exactly the missing
+/// cells and be bit-identical — per `RunMetrics::diff_deterministic` — to
+/// an uninterrupted reference batch.
+#[test]
+fn kill_mid_batch_then_resume_is_bit_identical() {
+    let dir = tmp_dir("resume");
+    let journal_path = dir.join("results.jsonl");
+    let seeds = [1u64, 2, 3, 4, 5, 6];
+    let healthy: ManagerFactory = Arc::new(|_: &SimConfig| Ok(Box::new(NullManager) as Box<dyn Manager>));
+
+    // Reference: uninterrupted batch, no journal.
+    let reference =
+        run_many_cells(cells_for(&seeds), 2, PathBuf::from("unused"), chaos_opts(0, healthy))
+            .unwrap();
+
+    // "Interrupted" run: cells with seed > 3 fail, so the journal ends up
+    // holding exactly the first three cells.
+    let crashy: ManagerFactory = Arc::new(|cfg: &SimConfig| {
+        if cfg.seed > 3 {
+            anyhow::bail!("simulated crash before completion");
+        }
+        Ok(Box::new(NullManager) as Box<dyn Manager>)
+    });
+    let mut opts = chaos_opts(0, crashy);
+    opts.journal = Some(journal_path.clone());
+    let outcomes =
+        run_many_cells(cells_for(&seeds), 2, PathBuf::from("unused"), opts).unwrap();
+    assert_eq!(outcomes.iter().filter(|o| o.result.is_ok()).count(), 3);
+    // The crash also tears the last journal line mid-write.
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&journal_path).unwrap();
+        write!(f, "{{\"cell\":\"torn\",\"cfg\":\"00").unwrap();
+    }
+
+    // Resume with a healthy factory that counts how many cells re-run.
+    let built = Arc::new(AtomicUsize::new(0));
+    let counting: ManagerFactory = {
+        let built = Arc::clone(&built);
+        Arc::new(move |_: &SimConfig| {
+            built.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(NullManager) as Box<dyn Manager>)
+        })
+    };
+    let mut opts = chaos_opts(0, counting);
+    opts.journal = Some(journal_path.clone());
+    opts.resume = true;
+    let resumed = run_many_cells(cells_for(&seeds), 2, PathBuf::from("unused"), opts).unwrap();
+
+    assert_eq!(built.load(Ordering::SeqCst), 3, "resume must only run the missing cells");
+    for (o, r) in resumed.iter().zip(&reference) {
+        assert_eq!(o.label, r.label);
+        let (got, want) = (o.result.as_ref().unwrap(), r.result.as_ref().unwrap());
+        got.assert_deterministic_eq(want, &o.label);
+        let seed: u64 = o.label.rsplit('|').next().unwrap().parse().unwrap();
+        assert_eq!(o.from_journal, seed <= 3, "{}", o.label);
+        assert_eq!(o.attempts, if seed <= 3 { 0 } else { 1 }, "{}", o.label);
+    }
+    // After the resumed run the journal covers the whole batch: a second
+    // resume re-runs nothing.
+    let map = journal::load_map(&journal_path).unwrap();
+    assert_eq!(map.len(), seeds.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn changed_config_invalidates_journaled_cell() {
+    let dir = tmp_dir("digest");
+    let journal_path = dir.join("results.jsonl");
+    let healthy: ManagerFactory = Arc::new(|_: &SimConfig| Ok(Box::new(NullManager) as Box<dyn Manager>));
+    let mut opts = chaos_opts(0, Arc::clone(&healthy));
+    opts.journal = Some(journal_path.clone());
+    run_many_cells(cells_for(&[1]), 1, PathBuf::from("unused"), opts).unwrap();
+
+    // Same label, different config: the digest must force a re-run.
+    let mut cells = cells_for(&[1]);
+    cells[0].cfg.n_workloads += 1;
+    let built = Arc::new(AtomicUsize::new(0));
+    let counting: ManagerFactory = {
+        let built = Arc::clone(&built);
+        Arc::new(move |_: &SimConfig| {
+            built.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(NullManager) as Box<dyn Manager>)
+        })
+    };
+    let mut opts = chaos_opts(0, counting);
+    opts.journal = Some(journal_path.clone());
+    opts.resume = true;
+    let outcomes = run_many_cells(cells, 1, PathBuf::from("unused"), opts).unwrap();
+    assert!(!outcomes[0].from_journal, "stale journal record must not be reused");
+    assert_eq!(built.load(Ordering::SeqCst), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------- trace-file collisions
+
+#[test]
+fn colliding_labels_keep_distinct_trace_files() {
+    let dir = tmp_dir("traces");
+    let healthy: ManagerFactory = Arc::new(|_: &SimConfig| Ok(Box::new(NullManager) as Box<dyn Manager>));
+    // Both labels sanitize to `col_X_1`.
+    let cells = vec![
+        Cell { label: "col|X|1".into(), cfg: tiny_cfg(1) },
+        Cell { label: "col_X_1".into(), cfg: tiny_cfg(2) },
+    ];
+    let mut opts = chaos_opts(0, healthy);
+    opts.trace_dir = Some(dir.clone());
+    let outcomes = run_many_cells(cells, 1, PathBuf::from("unused"), opts).unwrap();
+    for o in &outcomes {
+        assert_ok(o);
+    }
+    let first = std::fs::read_to_string(dir.join("col_X_1.jsonl")).unwrap();
+    let second = std::fs::read_to_string(dir.join("col_X_1__2.jsonl")).unwrap();
+    assert!(!first.is_empty() && !second.is_empty());
+    assert_ne!(first, second, "the colliding cell overwrote its sibling's trace");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------- ptest chaos
+
+/// Randomized chaos: arbitrary mixes of healthy, always-panicking and
+/// transiently-failing cells over random worker counts.  Invariants: no
+/// sibling loss (every submitted cell reports an outcome, in order),
+/// healthy and transient cells succeed, hopeless cells fail cleanly.
+#[test]
+fn ptest_chaos_mix_never_loses_cells() {
+    ptest::check("coordinator-chaos", 6, |rng| {
+        let n_cells = 3 + rng.below(4); // 3..=6
+        let threads = 1 + rng.below(3); // 1..=3
+        let retries = 1u32;
+        // Per-seed chaos plan: 0 = healthy, 1 = fail once (recoverable),
+        // 2 = always panic (hopeless).
+        let plan: Vec<u8> =
+            (0..n_cells).map(|_| [0u8, 0, 1, 2][rng.below(4)]).collect();
+        let seeds: Vec<u64> = (0..n_cells as u64).map(|i| i + 1).collect();
+        let plan_by_seed: HashMap<u64, u8> =
+            seeds.iter().copied().zip(plan.iter().copied()).collect();
+        let fails: HashMap<u64, u32> = plan_by_seed
+            .iter()
+            .filter(|(_, &p)| p == 1)
+            .map(|(&s, _)| (s, 1u32))
+            .collect();
+        let counts: Arc<Mutex<HashMap<u64, u32>>> = Arc::new(Mutex::new(HashMap::new()));
+        let factory: ManagerFactory = {
+            let plan = plan_by_seed.clone();
+            Arc::new(move |cfg: &SimConfig| {
+                match plan.get(&cfg.seed).copied().unwrap_or(0) {
+                    2 => Ok(Box::new(PanickingManager { calls: 0, panic_at: 1 }) as Box<dyn Manager>),
+                    1 => {
+                        let mut counts = counts.lock().unwrap();
+                        let seen = counts.entry(cfg.seed).or_insert(0);
+                        *seen += 1;
+                        if *seen <= *fails.get(&cfg.seed).unwrap_or(&0) {
+                            anyhow::bail!("transient");
+                        }
+                        Ok(Box::new(NullManager) as Box<dyn Manager>)
+                    }
+                    _ => Ok(Box::new(NullManager) as Box<dyn Manager>),
+                }
+            })
+        };
+        let outcomes = run_many_cells(
+            cells_for(&seeds),
+            threads,
+            PathBuf::from("unused"),
+            chaos_opts(retries, factory),
+        )
+        .map_err(|e| format!("batch-level failure: {e:#}"))?;
+        if outcomes.len() != n_cells {
+            return Err(format!("lost cells: {} of {n_cells}", outcomes.len()));
+        }
+        for (i, o) in outcomes.iter().enumerate() {
+            let seed = seeds[i];
+            if o.label != format!("chaos|None|{seed}") {
+                return Err(format!("order broken at {i}: {}", o.label));
+            }
+            let p = plan_by_seed[&seed];
+            match (p, o.result.is_ok()) {
+                (2, true) => return Err(format!("hopeless cell {seed} succeeded")),
+                (2, false) => {
+                    if !err_text(o).contains("injected chaos panic") {
+                        return Err(format!("wrong error for {seed}: {}", err_text(o)));
+                    }
+                }
+                (_, false) => {
+                    return Err(format!("cell {seed} (plan {p}) failed: {}", err_text(o)))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
