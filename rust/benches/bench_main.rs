@@ -464,7 +464,7 @@ fn micro_benches() {
     let mut predictor = StartPredictor::new(model3, 1.5);
     fx.snapshot(&mut world);
     world.add_job(start_sim::sim::Job {
-        id: 0,
+        id: start_sim::sim::JobId::new(0),
         tasks: vec![],
         submit_t: 0.0,
         deadline_driven: true,
@@ -475,7 +475,7 @@ fn micro_benches() {
         true_beta: 1.0,
     });
     bench("predict_one_job_end_to_end", 3, 100, || {
-        let p = predictor.predict(&world, &fx, 0).unwrap();
+        let p = predictor.predict(&world, &fx, start_sim::sim::JobId::new(0)).unwrap();
         std::hint::black_box(p);
     });
 

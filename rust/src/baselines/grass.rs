@@ -49,7 +49,7 @@ impl Manager for GrassManager {
         }
         // Candidate slow tasks: (deadline priority, slowness) ordered.
         let mut candidates: Vec<(bool, f64, TaskId)> = Vec::new();
-        for jid in w.active_jobs() {
+        for &jid in w.active_jobs().iter() {
             let job = w.job(jid);
             let stats = sibling_stats(w, job.id);
             if stats.completed.is_empty() {

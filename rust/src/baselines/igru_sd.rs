@@ -6,9 +6,11 @@
 use crate::mitigation::Action;
 use crate::predictor::{FeatureExtractor, IgruPredictor};
 use crate::sim::engine::Manager;
+use crate::sim::trace::PredictSpans;
 use crate::sim::types::*;
 use crate::sim::world::World;
 use std::collections::HashMap;
+use std::time::Instant;
 
 pub struct IgruSdManager {
     predictor: IgruPredictor,
@@ -16,11 +18,21 @@ pub struct IgruSdManager {
     predictions: HashMap<JobId, f64>,
     /// Final prediction per job (kept for MAPE after completion).
     final_predictions: HashMap<JobId, f64>,
+    /// Sub-span breakdown of the last `on_interval` (feature-extract /
+    /// GRU dispatch / mitigation decision), drained by the engine into
+    /// `PhaseProfile` — same instrumentation as `StartManager`, so the
+    /// per-phase latency comparison covers both predictive techniques.
+    spans: Option<PredictSpans>,
 }
 
 impl IgruSdManager {
     pub fn new(predictor: IgruPredictor) -> Self {
-        Self { predictor, predictions: HashMap::new(), final_predictions: HashMap::new() }
+        Self {
+            predictor,
+            predictions: HashMap::new(),
+            final_predictions: HashMap::new(),
+            spans: None,
+        }
     }
 }
 
@@ -30,9 +42,12 @@ impl Manager for IgruSdManager {
     }
 
     fn on_interval(&mut self, w: &World, fx: &FeatureExtractor) -> Vec<Action> {
+        // Prediction and decision interleave per job here, so the decide
+        // span is the interval total minus the predictor's own
+        // feature/dispatch accumulators (drained at the end).
+        let interval_start = Instant::now();
         let mut actions = Vec::new();
-        let active: Vec<JobId> = w.active_jobs();
-        for job in active {
+        for &job in w.active_jobs().iter() {
             let (es, _flagged) = match self.predictor.expected_stragglers(w, fx, job) {
                 Ok(r) => r,
                 Err(_) => continue,
@@ -65,7 +80,14 @@ impl Manager for IgruSdManager {
                 });
             }
         }
+        let (features, dispatch) = self.predictor.take_spans();
+        let decide = interval_start.elapsed().saturating_sub(features + dispatch);
+        self.spans = Some(PredictSpans { features, dispatch, decide });
         actions
+    }
+
+    fn take_predict_spans(&mut self) -> Option<PredictSpans> {
+        self.spans.take()
     }
 
     fn on_task_complete(&mut self, w: &World, task: TaskId) {

@@ -51,7 +51,7 @@ impl Manager for LateManager {
         let mut budget =
             ((w.vms.len() as f64 * self.budget_frac) as usize).saturating_sub(live_clones);
         let mut actions = Vec::new();
-        for jid in w.active_jobs() {
+        for &jid in w.active_jobs().iter() {
             let job = w.job(jid);
             if budget == 0 {
                 break;

@@ -66,7 +66,7 @@ impl Manager for NearestFitManager {
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
         let Some(fit) = &self.fit else { return Vec::new() };
         let mut actions = Vec::new();
-        for jid in w.active_jobs() {
+        for &jid in w.active_jobs().iter() {
             for &t in &w.job(jid).tasks {
                 let task = w.task(t);
                 if task.is_running() && task.speculative_of.is_none() && !task.mitigated {

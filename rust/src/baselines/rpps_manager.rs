@@ -35,8 +35,7 @@ impl Manager for RppsManager {
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
         self.predictor.observe(w);
         let mut actions = Vec::new();
-        let active: Vec<JobId> = w.active_jobs();
-        for job in active {
+        for &job in w.active_jobs().iter() {
             let es = self.predictor.expected_stragglers(w, job);
             self.final_predictions.insert(job, es);
             let q = w.job(job).tasks.len();

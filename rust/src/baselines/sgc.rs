@@ -37,7 +37,7 @@ impl Manager for SgcManager {
 
     fn on_interval(&mut self, w: &World, _fx: &FeatureExtractor) -> Vec<Action> {
         let mut actions = Vec::new();
-        for jid in w.active_jobs() {
+        for &jid in w.active_jobs().iter() {
             let job = w.job(jid);
             let clones_target = (job.tasks.len() as f64 * self.redundancy).round() as usize;
             let mut cloned = job

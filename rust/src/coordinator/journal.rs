@@ -91,6 +91,59 @@ fn parse_record(line: &str) -> Result<(CellKey, RunMetrics)> {
     Ok(((label, digest), metrics))
 }
 
+/// Compact the journal at `path` in place: rewrite it keeping only the
+/// **last** record per `(label, digest)` key — the one [`load_map`]
+/// would return — dropping superseded duplicates (from crash/retry
+/// re-appends) and torn/unparseable lines.  Surviving lines are kept
+/// byte-for-byte (no re-serialization), so a resume from the compacted
+/// journal is bit-identical to a resume from the original.  Keys keep
+/// their first-appearance order.  The rewrite goes through a temp file,
+/// fsync, then an atomic rename — a crash mid-compaction leaves either
+/// the old or the new journal, never a torn one.  A missing file is a
+/// no-op.  Returns `(records kept, lines dropped)`.
+pub fn compact(path: &Path) -> Result<(usize, usize)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((0, 0)),
+        Err(e) => return Err(e).with_context(|| format!("reading journal {}", path.display())),
+    };
+    // Last line per key wins; keys remember where they first appeared.
+    let mut order: Vec<CellKey> = Vec::new();
+    let mut last: HashMap<CellKey, &str> = HashMap::new();
+    let mut total_lines = 0usize;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        total_lines += 1;
+        if let Ok((key, _)) = parse_record(trimmed) {
+            if !last.contains_key(&key) {
+                order.push(key.clone());
+            }
+            last.insert(key, line);
+        }
+    }
+    let kept = order.len();
+    let dropped = total_lines - kept;
+    if dropped == 0 {
+        return Ok((kept, 0));
+    }
+    let tmp = path.with_extension("jsonl.compact-tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        for key in &order {
+            writeln!(f, "{}", last[key])
+                .with_context(|| format!("writing {}", tmp.display()))?;
+        }
+        f.sync_data().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("replacing journal {}", path.display()))?;
+    Ok((kept, dropped))
+}
+
 /// Append-only journal writer.  Every [`Journal::append`] is flushed and
 /// fsync'd before returning — a completed cell is durable the moment the
 /// leader records it.
@@ -220,6 +273,48 @@ mod tests {
         // Later record for the same key wins.
         let got = &map[&("cell".to_string(), "1111".to_string())];
         assert!(sample_metrics(9.0).diff_deterministic(got).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_keeps_last_record_per_key_and_drops_torn_lines() {
+        let dir = tmp_dir("compact");
+        let path = dir.join("results.jsonl");
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("cell", "1111", 1, &sample_metrics(1.0)).unwrap();
+            j.append("other", "2222", 1, &sample_metrics(3.0)).unwrap();
+            j.append("cell", "1111", 2, &sample_metrics(9.0)).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"cell\":\"torn\",\"cfg\":\"33").unwrap();
+        }
+        let before = load_map(&path).unwrap();
+        let (kept, dropped) = compact(&path).unwrap();
+        assert_eq!((kept, dropped), (2, 2), "1 superseded + 1 torn line dropped");
+        let after = load_map(&path).unwrap();
+        // The resume view is unchanged by compaction.
+        assert_eq!(after.len(), before.len());
+        for (key, m) in &before {
+            assert!(m.diff_deterministic(&after[key]).is_none(), "{key:?}");
+        }
+        // Surviving lines are byte-identical (first-appearance key order).
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"cell\":\"cell\""));
+        assert!(lines[1].contains("\"cell\":\"other\""));
+        // Idempotent: a second compaction drops nothing.
+        assert_eq!(compact(&path).unwrap(), (2, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_missing_journal_is_a_noop() {
+        let dir = tmp_dir("compact_missing");
+        assert_eq!(compact(&dir.join("absent.jsonl")).unwrap(), (0, 0));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -203,6 +203,12 @@ pub struct RunOpts {
     /// Chaos/testing hook: build managers through this factory instead
     /// of `build_manager` + `Models`.
     pub manager_override: Option<ManagerFactory>,
+    /// Compact the journal after the batch completes with every journal
+    /// append intact: rewrite `results.jsonl` keeping only the last
+    /// record per `(label, digest)` key ([`journal::compact`]).  Resume
+    /// from the compacted journal is bit-identical; crash/retry
+    /// re-appends and torn lines are dropped.
+    pub compact: bool,
 }
 
 impl Default for RunOpts {
@@ -217,6 +223,7 @@ impl Default for RunOpts {
             backoff_cap: Duration::from_secs(2),
             cell_timeout: None,
             manager_override: None,
+            compact: false,
         }
     }
 }
@@ -572,6 +579,22 @@ pub fn run_many_cells(
         }
         if let Some(e) = journal_err {
             return Err(e);
+        }
+    }
+
+    // Post-batch journal hygiene: close the writer, then rewrite the file
+    // keeping only the last record per key.  Only after a fully journaled
+    // batch — compaction must never race an open append handle.
+    if opts.compact {
+        if let Some(path) = &opts.journal {
+            drop(writer.take());
+            let (kept, dropped) = journal::compact(path)?;
+            if dropped > 0 {
+                eprintln!(
+                    "note: compacted journal {} ({kept} records kept, {dropped} lines dropped)",
+                    path.display()
+                );
+            }
         }
     }
 

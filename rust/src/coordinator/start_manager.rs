@@ -68,7 +68,9 @@ impl Manager for StartManager {
     fn on_interval(&mut self, w: &World, fx: &FeatureExtractor) -> Vec<Action> {
         // 1. Refresh predictions, batched over the rollout_batch lanes
         //    (every `predict_every` intervals — the paper's I parameter).
-        let active: Vec<JobId> = w.active_jobs();
+        // Borrowed view over the registry's sorted active-job set — no
+        // per-interval Vec (the old signature cloned it every tick).
+        let active = w.active_jobs();
         let do_predict = self.tick % self.predict_every.max(1) == 0;
         self.tick += 1;
         // Per-job B=1 rollouts: on the CPU PJRT backend the batched (B=8)
@@ -76,7 +78,7 @@ impl Manager for StartManager {
         // only when a wide MXU would otherwise idle) — DESIGN.md §7.
         // predict_batch remains available for accelerator builds.
         if do_predict {
-            for &job in &active {
+            for &job in active.iter() {
                 let age = self.ages.entry(job).or_insert(0);
                 *age += 1;
                 if *age > self.window_ticks {
@@ -105,7 +107,7 @@ impl Manager for StartManager {
         //    they give early + precise mitigation.
         let decide_start = Instant::now();
         let mut actions = Vec::new();
-        for &job in &active {
+        for &job in active.iter() {
             let Some(&(alpha, beta, es)) = self.predictions.get(&job) else { continue };
             let es_round = es.round() as usize;
             let q = w.job(job).tasks.len();

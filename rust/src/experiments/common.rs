@@ -75,6 +75,9 @@ pub struct ExpOpts {
     pub retries: u32,
     /// `--cell-timeout SECS`: per-cell wall-clock deadline.
     pub cell_timeout: Option<Duration>,
+    /// `--compact`: after a fully journaled figure, rewrite its journal
+    /// keeping only the last record per `(label, digest)` key.
+    pub compact: bool,
 }
 
 impl Default for ExpOpts {
@@ -87,6 +90,7 @@ impl Default for ExpOpts {
             keep_going: false,
             retries: DEFAULT_RETRIES,
             cell_timeout: None,
+            compact: false,
         }
     }
 }
@@ -102,6 +106,7 @@ impl ExpOpts {
             keep_going: self.keep_going,
             retries: self.retries,
             cell_timeout: self.cell_timeout,
+            compact: self.compact,
             ..RunOpts::default()
         }
     }

@@ -9,7 +9,8 @@
 //! journaled cells of an interrupted run (bit-identical tables),
 //! `--keep-going` builds partial tables instead of aborting on the first
 //! failed cell, `--retries N` and `--cell-timeout SECS` bound transient
-//! failures and hung cells.
+//! failures and hung cells, and `--compact` rewrites each figure's
+//! journal after the batch keeping only the last record per cell key.
 pub mod ablation;
 pub mod common;
 pub mod figures;
@@ -47,6 +48,7 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
             Some(s) => anyhow::bail!("--cell-timeout wants positive seconds, got {s}"),
             None => None,
         },
+        compact: args.flag("compact"),
     };
     let ids: Vec<&str> = if which == "all" {
         vec!["fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "headline", "ablation"]

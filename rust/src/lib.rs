@@ -8,12 +8,14 @@
 //!   authored in JAX over Pallas kernels, trained and AOT-lowered to HLO
 //!   text by `make artifacts` (`python/compile/`).
 //! * **L3 (runtime, this crate)** — a CloudSim-style event-driven cloud
-//!   simulator over an O(active)-indexed entity registry (DESIGN.md §3),
-//!   Weibull fault injection, PlanetLab-like trace generation, the START
-//!   coordinator (prediction via PJRT + speculation/re-run mitigation,
-//!   Algorithm 1), six baseline straggler managers, and the experiment
-//!   harness regenerating every figure in the paper's evaluation
-//!   (DESIGN.md §4).
+//!   simulator whose world state is a layered module family
+//!   (`sim::world::{ids, registry, topology, load, rates}`, DESIGN.md
+//!   §3/§13) with `#[repr(transparent)]` entity-id newtypes and
+//!   zero-alloc borrowed query views, Weibull fault injection,
+//!   PlanetLab-like trace generation, the START coordinator (prediction
+//!   via PJRT + speculation/re-run mitigation, Algorithm 1), eight
+//!   baseline straggler managers, and the experiment harness
+//!   regenerating every figure in the paper's evaluation (DESIGN.md §4).
 //!
 //! Python never runs on the request path: the binary is self-contained
 //! once `artifacts/` is built.  See `DESIGN.md` at the repo root for the
@@ -77,9 +79,10 @@ pub fn launcher_main() -> anyhow::Result<()> {
             );
             println!(
                 "experiment <id> [--resume] [--keep-going] [--retries N] \
-                 [--cell-timeout SECS]: fault-tolerant batch runner — completed \
-                 cells are journaled to <out>/journal/<id>.results.jsonl and an \
-                 interrupted run resumes bit-identically (DESIGN.md section 12)"
+                 [--cell-timeout SECS] [--compact]: fault-tolerant batch runner — \
+                 completed cells are journaled to <out>/journal/<id>.results.jsonl, \
+                 an interrupted run resumes bit-identically, and --compact rewrites \
+                 the journal keeping the last record per cell (DESIGN.md section 12)"
             );
             Ok(())
         }

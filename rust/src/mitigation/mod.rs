@@ -48,7 +48,7 @@ pub fn speculate(w: &mut World, task: TaskId, slowdown: f64) -> Option<TaskId> {
     let exclude = w.task(task).vm.map(|v| w.vms[v].host);
     let target = w.best_mitigation_vm(exclude)?;
     let orig = w.task(task);
-    let clone_id = w.n_tasks();
+    let clone_id = TaskId::new(w.n_tasks());
     let clone = Task {
         id: clone_id,
         job: orig.job,
@@ -113,10 +113,10 @@ mod tests {
 
     fn world_with_running_task() -> (World, TaskId) {
         let mut w = World::new(&SimConfig::test_defaults());
-        let id = 0;
+        let id = TaskId::new(0);
         w.add_task(Task {
             id,
-            job: 0,
+            job: JobId::new(0),
             length_mi: 1000.0,
             demand: TaskDemand { mips: 100.0, ram_gb: 0.2, disk_gb: 0.5, bw_kbps: 0.1 },
             state: TaskState::Pending,
@@ -131,7 +131,7 @@ mod tests {
             speculative_of: None,
             mitigated: false,
         });
-        w.start_task(id, 0, 4.0); // slow original
+        w.start_task(id, VmId::new(0), 4.0); // slow original
         (w, id)
     }
 
@@ -177,10 +177,10 @@ mod tests {
     #[test]
     fn hold_and_release() {
         let mut w = World::new(&SimConfig::test_defaults());
-        let id = 0;
+        let id = TaskId::new(0);
         w.add_task(Task {
             id,
-            job: 0,
+            job: JobId::new(0),
             length_mi: 100.0,
             demand: TaskDemand::default(),
             state: TaskState::Pending,
@@ -207,8 +207,8 @@ mod tests {
     fn mitigation_refused_for_non_running() {
         let mut w = World::new(&SimConfig::test_defaults());
         w.add_task(Task {
-            id: 0,
-            job: 0,
+            id: TaskId::new(0),
+            job: JobId::new(0),
             length_mi: 100.0,
             demand: TaskDemand::default(),
             state: TaskState::Completed { t: 1.0 },
@@ -223,8 +223,8 @@ mod tests {
             speculative_of: None,
             mitigated: false,
         });
-        assert!(speculate(&mut w, 0, 1.0).is_none());
-        assert!(rerun(&mut w, 0, 1.0, 0.0).is_none());
-        assert!(!hold(&mut w, 0, 10.0));
+        assert!(speculate(&mut w, TaskId::new(0), 1.0).is_none());
+        assert!(rerun(&mut w, TaskId::new(0), 1.0, 0.0).is_none());
+        assert!(!hold(&mut w, TaskId::new(0), 10.0));
     }
 }

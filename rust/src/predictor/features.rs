@@ -57,7 +57,7 @@ impl FeatureExtractor {
         let mut slot_count = std::mem::take(&mut self.slot_scratch);
         slot_count.fill(0.0);
         for h in &w.hosts {
-            let slot = h.id % self.n_hosts;
+            let slot = h.id.raw() % self.n_hosts;
             let row = &mut out[slot * self.m_feats..(slot + 1) * self.m_feats];
             let up = h.is_up(w.now);
             slot_count[slot] += 1.0;
@@ -111,7 +111,7 @@ impl FeatureExtractor {
             row[T_BW_REQ] = (t.demand.bw_kbps / 0.4_f64.max(max_bw / 5.0)).min(1.0) as f32;
             row[T_PREV_HOST] = t
                 .vm
-                .map(|v| (w.vms[v].host % self.n_hosts) as f32 / self.n_hosts as f32)
+                .map(|v| (w.vms[v].host.raw() % self.n_hosts) as f32 / self.n_hosts as f32)
                 .unwrap_or(0.0);
             row[T_DEADLINE] = if j.deadline_driven { 1.0 } else { 0.0 };
             row[T_PROGRESS] = t.progress() as f32;
@@ -196,10 +196,10 @@ pub mod tests {
     }
 
     fn add_job(w: &mut World, q: usize) -> JobId {
-        let jid = w.n_jobs();
+        let jid = JobId::new(w.n_jobs());
         let mut tasks = Vec::new();
         for _ in 0..q {
-            let tid = w.n_tasks();
+            let tid = TaskId::new(w.n_tasks());
             w.add_task(Task {
                 id: tid,
                 job: jid,
@@ -273,7 +273,7 @@ pub mod tests {
         assert_eq!(fx.history_len(), 1);
         // Load one host then snapshot again: EMA moves by 0.8 of the delta.
         let before = fx.m_h()[H_CPU_UTIL];
-        w.set_background_load(0, 0.5);
+        w.set_background_load(HostId::new(0), 0.5);
         fx.snapshot(&mut w);
         let after = fx.m_h()[H_CPU_UTIL];
         assert!(after > before);

@@ -12,6 +12,7 @@ use crate::trace::generative::T_CPU_REQ;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 /// GRU-based resource-request prediction + threshold detection.
 pub struct IgruPredictor {
@@ -21,24 +22,51 @@ pub struct IgruPredictor {
     /// Detection threshold on predicted normalized CPU demand.
     pub threshold: f64,
     mt_scratch: Vec<f32>,
+    /// Wall-time accumulators for the Predict-phase sub-span breakdown
+    /// (feature assembly vs GRU dispatch), drained once per interval by
+    /// the manager via [`IgruPredictor::take_spans`] — same shape as
+    /// `StartPredictor` so Fig.-style phase profiles compare like for
+    /// like across techniques.
+    span_features: Duration,
+    span_dispatch: Duration,
 }
 
 impl IgruPredictor {
     pub fn new(model: Rc<IgruModel>, threshold: f64) -> Self {
         let mt = model.manifest.mt_len();
-        Self { model, hidden: HashMap::new(), threshold, mt_scratch: vec![0.0; mt] }
+        Self {
+            model,
+            hidden: HashMap::new(),
+            threshold,
+            mt_scratch: vec![0.0; mt],
+            span_features: Duration::ZERO,
+            span_dispatch: Duration::ZERO,
+        }
+    }
+
+    /// Drain the accumulated (feature-assembly, dispatch) spans.
+    pub fn take_spans(&mut self) -> (Duration, Duration) {
+        (
+            std::mem::take(&mut self.span_features),
+            std::mem::take(&mut self.span_dispatch),
+        )
     }
 
     /// Advance the job's GRU one tick; returns per-task-slot predicted
     /// next-interval CPU demand.
     pub fn step(&mut self, w: &World, fx: &FeatureExtractor, job: JobId) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
         fx.build_m_t(w, job, &mut self.mt_scratch);
         let h = self
             .hidden
             .entry(job)
             .or_insert_with(|| self.model.zero_hidden())
             .clone();
-        let (pred, h2) = self.model.step(&self.mt_scratch, &h)?;
+        let t1 = Instant::now();
+        self.span_features += t1 - t0;
+        let stepped = self.model.step(&self.mt_scratch, &h);
+        self.span_dispatch += t1.elapsed();
+        let (pred, h2) = stepped?;
         self.hidden.insert(job, h2);
         Ok(pred)
     }

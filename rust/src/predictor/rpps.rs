@@ -106,7 +106,7 @@ mod tests {
         r.history = vec![0.1; 30];
         // a fake job
         w.add_job(crate::sim::types::Job {
-            id: 0,
+            id: JobId::new(0),
             tasks: vec![],
             submit_t: 0.0,
             deadline_driven: false,
@@ -116,7 +116,7 @@ mod tests {
             true_alpha: 2.0,
             true_beta: 1.0,
         });
-        assert_eq!(r.expected_stragglers(&w, 0), 0.0);
-        assert_eq!(r.last_prediction(0), Some(0.0));
+        assert_eq!(r.expected_stragglers(&w, JobId::new(0)), 0.0);
+        assert_eq!(r.last_prediction(JobId::new(0)), Some(0.0));
     }
 }

@@ -82,9 +82,9 @@ impl Scheduler for RoundRobin {
         if avail.is_empty() {
             return None;
         }
-        let i = avail.partition_point(|&v| v < self.next);
+        let i = avail.partition_point(|&v| v.raw() < self.next);
         let v = if i < avail.len() { avail[i] } else { avail[0] };
-        self.next = v + 1;
+        self.next = v.raw() + 1;
         Some(v)
     }
 }
@@ -284,10 +284,10 @@ mod tests {
 
     fn world_with_pending_task() -> (World, TaskId) {
         let mut w = World::new(&SimConfig::test_defaults());
-        let id = 0;
+        let id = TaskId::new(0);
         w.add_task(Task {
             id,
-            job: 0,
+            job: JobId::new(0),
             length_mi: 1000.0,
             demand: TaskDemand { mips: 150.0, ram_gb: 0.2, disk_gb: 0.5, bw_kbps: 0.1 },
             state: TaskState::Pending,
@@ -324,7 +324,7 @@ mod tests {
     fn no_scheduler_places_on_down_fleet() {
         let (mut w, t) = world_with_pending_task();
         for h in 0..w.hosts.len() {
-            w.set_host_down(h, 1e12);
+            w.set_host_down(HostId::new(h), 1e12);
         }
         for kind in [
             SchedulerKind::Random,
@@ -351,31 +351,31 @@ mod tests {
         let (mut w, t) = world_with_pending_task();
         // Fill VM 0 with work.
         let clone = w.task(t).clone();
-        let t2 = w.n_tasks();
+        let t2 = TaskId::new(w.n_tasks());
         w.add_task(Task { id: t2, ..clone });
-        w.start_task(t2, 0, 1.0);
+        w.start_task(t2, VmId::new(0), 1.0);
         let mut s = MinMin;
         let vm = s.pick(&w, t).unwrap();
-        assert_ne!(vm, 0);
+        assert_ne!(vm, VmId::new(0));
     }
 
     #[test]
     fn a3c_learns_to_avoid_straggler_hosts() {
         let (mut w, t) = world_with_pending_task();
         // Mark host 0 as a straggler factory.
-        w.hosts[0].straggler_ema = 1.0;
+        w.hosts[HostId::new(0)].straggler_ema = 1.0;
         let mut s = A3cScheduler::new(Pcg::seeded(3));
         // Train: placements on host 0 get terrible reward.
         for _ in 0..300 {
             let vm = s.pick(&w, t).unwrap();
-            let bad = w.vms[vm].host == 0;
+            let bad = w.vms[vm].host == HostId::new(0);
             s.feedback(&w, t, if bad { 8.0 } else { 1.0 });
         }
         let picks_on_bad = (0..100)
             .filter(|_| {
                 let vm = s.pick(&w, t).unwrap();
                 s.pending.clear();
-                w.vms[vm].host == 0
+                w.vms[vm].host == HostId::new(0)
             })
             .count();
         // Host 0 has 4/9 of the VMs in the test fleet; learning should

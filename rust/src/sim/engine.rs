@@ -268,8 +268,9 @@ impl Simulation {
         self.advance_to(t0);
         // 1. Background (PlanetLab) load for this interval.  The setter
         //    dirties only hosts whose load actually changed.
-        for h in 0..self.world.hosts.len() {
-            self.world.set_background_load(h, self.traces[h].at(self.interval));
+        for (h, trace) in self.traces.iter().enumerate() {
+            let load = trace.at(self.interval);
+            self.world.set_background_load(HostId::new(h), load);
         }
         // 2. Release expired holds, snapshot features.
         mitigation::release_held(&mut self.world);
@@ -318,10 +319,10 @@ impl Simulation {
     /// Create job + tasks; sample ground-truth Pareto parameters from the
     /// generative contract at the current cluster state.
     fn submit_job(&mut self, spec: JobSpec) -> JobId {
-        let jid = self.world.n_jobs();
+        let jid = JobId::new(self.world.n_jobs());
         let mut tasks = Vec::with_capacity(spec.tasks.len());
         for ts in &spec.tasks {
-            let tid = self.world.n_tasks();
+            let tid = TaskId::new(self.world.n_tasks());
             self.world.add_task(Task {
                 id: tid,
                 job: jid,
@@ -394,7 +395,10 @@ impl Simulation {
     /// Place all pending tasks via the scheduler (O(pending), not
     /// O(total): the world maintains the placement queue incrementally).
     fn place_pending(&mut self) {
-        for t in self.world.pending() {
+        // Owned snapshot (the explicit escape hatch): placement mutates the
+        // pending set while walking it.
+        let pending = self.world.pending().into_owned();
+        for t in pending {
             if let Some(vm) = self.scheduler.pick(&self.world, t) {
                 if !self.manager.filter_placement(&self.world, t, vm) {
                     let now = self.world.now;
@@ -613,7 +617,7 @@ impl Simulation {
     fn apply_fault(&mut self, fault: Fault) {
         match fault {
             Fault::Host { pick, intervals } => {
-                let h = pick % self.world.hosts.len();
+                let h = HostId::new(pick % self.world.hosts.len());
                 let until = self.world.now + intervals as f64 * self.cfg.interval_s;
                 let now = self.world.now;
                 self.world.trace_record(|| Event::Fault {
@@ -640,7 +644,7 @@ impl Simulation {
                 // uniform pick over running tasks) keeps the per-task
                 // fault probability independent of how many tasks are
                 // left in the system.
-                let v = pick % self.world.vms.len();
+                let v = VmId::new(pick % self.world.vms.len());
                 let victim = self.world.vms[v].tasks.first().copied();
                 let now = self.world.now;
                 self.world.trace_record(|| Event::Fault {
@@ -652,7 +656,7 @@ impl Simulation {
                 }
             }
             Fault::VmCreation { pick } => {
-                let v = pick % self.world.vms.len();
+                let v = VmId::new(pick % self.world.vms.len());
                 let ready = self.world.now + self.cfg.interval_s;
                 let now = self.world.now;
                 self.world.trace_record(|| Event::Fault {

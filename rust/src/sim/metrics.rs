@@ -260,10 +260,10 @@ mod tests {
 
     fn world_with_task() -> (World, TaskId) {
         let mut w = World::new(&SimConfig::test_defaults());
-        let id = 0;
+        let id = TaskId::new(0);
         w.add_task(Task {
             id,
-            job: 0,
+            job: JobId::new(0),
             length_mi: 100.0,
             demand: TaskDemand { mips: 100.0, ram_gb: 0.2, disk_gb: 1.0, bw_kbps: 0.2 },
             state: TaskState::Pending,
@@ -300,7 +300,7 @@ mod tests {
         let (mut w, t) = world_with_task();
         let mut rm = RunMetrics::default();
         rm.snapshot(&w, 300.0);
-        w.start_task(t, 0, 1.0);
+        w.start_task(t, VmId::new(0), 1.0);
         rm.snapshot(&w, 300.0);
         assert!(rm.intervals[1].energy_kwh > rm.intervals[0].energy_kwh);
     }
@@ -308,8 +308,8 @@ mod tests {
     #[test]
     fn contention_counts_overloaded_host() {
         let (mut w, t) = world_with_task();
-        w.start_task(t, 0, 1.0);
-        w.set_background_load(0, 0.995); // force cpu util to 1.0
+        w.start_task(t, VmId::new(0), 1.0);
+        w.set_background_load(HostId::new(0), 0.995); // force cpu util to 1.0
         let mut rm = RunMetrics::default();
         rm.snapshot(&w, 300.0);
         assert!(rm.intervals[0].contention > 0.0);
@@ -328,7 +328,7 @@ mod tests {
     fn sla_rate_weighted() {
         let mut rm = RunMetrics::default();
         let mk_job = |w: f64, deadline: f64| Job {
-            id: 0,
+            id: JobId::new(0),
             tasks: vec![],
             submit_t: 0.0,
             deadline_driven: true,
@@ -355,7 +355,7 @@ mod tests {
         let (mut w, _) = world_with_task();
         let n = w.hosts.len();
         for h in 0..n - 1 {
-            w.set_host_down(h, 1e9);
+            w.set_host_down(HostId::new(h), 1e9);
         }
         let mut rm = RunMetrics::default();
         rm.snapshot(&w, 300.0);

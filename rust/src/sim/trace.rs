@@ -29,7 +29,7 @@
 //! via `util::json` — no external dependencies.
 
 use crate::sim::metrics::{IntervalMetrics, RunMetrics};
-use crate::sim::types::{HostId, JobId, TaskId, VmId};
+use crate::sim::types::{EntityId, HostId, JobId, TaskId, VmId};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeSet, HashMap};
@@ -177,9 +177,15 @@ fn num(n: usize) -> Json {
     Json::Num(n as f64)
 }
 
-fn opt_id(v: Option<usize>) -> Json {
+/// Entity ids serialize as their bare arena index — the JSONL schema is
+/// unchanged from the `usize`-alias era.
+fn id<I: EntityId>(i: I) -> Json {
+    Json::Num(i.raw() as f64)
+}
+
+fn opt_id<I: EntityId>(v: Option<I>) -> Json {
     match v {
-        Some(i) => num(i),
+        Some(i) => id(i),
         None => Json::Null,
     }
 }
@@ -262,16 +268,16 @@ impl Event {
             }
             Event::TaskAdmit { t, task, job, submit_t, speculative_of, state } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
-                fields.push(("job", num(*job)));
+                fields.push(("task", id(*task)));
+                fields.push(("job", id(*job)));
                 fields.push(("submit_t", Json::Num(*submit_t)));
                 fields.push(("clone_of", opt_id(*speculative_of)));
                 fields.push(("state", Json::str(life_str(*state))));
             }
             Event::TaskStart { t, task, vm, slowdown } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
-                fields.push(("vm", num(*vm)));
+                fields.push(("task", id(*task)));
+                fields.push(("vm", id(*vm)));
                 fields.push(("slowdown", Json::Num(*slowdown)));
             }
             Event::TaskComplete { t, task }
@@ -279,50 +285,50 @@ impl Event {
             | Event::TaskKill { t, task }
             | Event::TaskRelease { t, task } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
+                fields.push(("task", id(*task)));
             }
             Event::TaskReset { t, task, penalty_s } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
+                fields.push(("task", id(*task)));
                 fields.push(("penalty_s", Json::Num(*penalty_s)));
             }
             Event::TaskHold { t, task, until } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
+                fields.push(("task", id(*task)));
                 fields.push(("until", Json::Num(*until)));
             }
             Event::JobAdmit { t, job, tasks, deadline_driven, sla_weight } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("job", num(*job)));
-                fields.push(("tasks", Json::Arr(tasks.iter().map(|&x| num(x)).collect())));
+                fields.push(("job", id(*job)));
+                fields.push(("tasks", Json::Arr(tasks.iter().map(|&x| id(x)).collect())));
                 fields.push(("deadline_driven", Json::Bool(*deadline_driven)));
                 fields.push(("sla_weight", Json::Num(*sla_weight)));
             }
             Event::JobSla { t, job, deadline } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("job", num(*job)));
+                fields.push(("job", id(*job)));
                 fields.push(("deadline", Json::Num(*deadline)));
             }
             Event::JobDone { t, job } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("job", num(*job)));
+                fields.push(("job", id(*job)));
             }
             Event::TaskResult { t, task, job, mitigated, straggler } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
-                fields.push(("job", num(*job)));
+                fields.push(("task", id(*task)));
+                fields.push(("job", id(*job)));
                 fields.push(("mitigated", Json::Bool(*mitigated)));
                 fields.push(("straggler", Json::Bool(*straggler)));
             }
             Event::JobScore { t, job, predicted_es, actual_stragglers } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("job", num(*job)));
+                fields.push(("job", id(*job)));
                 fields.push(("predicted_es", Json::Num(*predicted_es)));
                 fields.push(("actual", num(*actual_stragglers)));
             }
             Event::Mitigate { t, task, kind, applied, started } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
+                fields.push(("task", id(*task)));
                 fields.push(("kind", Json::str(kind_str(*kind))));
                 fields.push(("applied", Json::Bool(*applied)));
                 fields.push((
@@ -335,25 +341,25 @@ impl Event {
             }
             Event::Veto { t, task, vm } => {
                 fields.push(("t", Json::Num(*t)));
-                fields.push(("task", num(*task)));
-                fields.push(("vm", num(*vm)));
+                fields.push(("task", id(*task)));
+                fields.push(("vm", id(*vm)));
             }
             Event::Fault { t, fault } => {
                 fields.push(("t", Json::Num(*t)));
                 match fault {
                     FaultEvent::Host { host, until } => {
                         fields.push(("kind", Json::str("host")));
-                        fields.push(("host", num(*host)));
+                        fields.push(("host", id(*host)));
                         fields.push(("until", Json::Num(*until)));
                     }
                     FaultEvent::Cloudlet { vm, task } => {
                         fields.push(("kind", Json::str("cloudlet")));
-                        fields.push(("vm", num(*vm)));
+                        fields.push(("vm", id(*vm)));
                         fields.push(("task", opt_id(*task)));
                     }
                     FaultEvent::VmCreation { vm, ready_at } => {
                         fields.push(("kind", Json::str("vm_creation")));
-                        fields.push(("vm", num(*vm)));
+                        fields.push(("vm", id(*vm)));
                         fields.push(("ready_at", Json::Num(*ready_at)));
                     }
                 }
@@ -371,8 +377,8 @@ impl Event {
     pub fn from_json(v: &Json) -> Result<Event> {
         let tag = v.req_str("ev")?;
         let t = || v.req_f64("t");
-        let task = || v.req_usize("task");
-        let job = || v.req_usize("job");
+        let task = || v.req_usize("task").map(TaskId::new);
+        let job = || v.req_usize("job").map(JobId::new);
         Ok(match tag {
             "meta" => Event::Meta {
                 seed: v.req_f64("seed")? as u64,
@@ -389,13 +395,13 @@ impl Event {
                 speculative_of: v
                     .get("clone_of")
                     .and_then(Json::as_f64)
-                    .map(|f| f as usize),
+                    .map(|f| TaskId::new(f as usize)),
                 state: life_parse(v.req_str("state")?)?,
             },
             "task_start" => Event::TaskStart {
                 t: t()?,
                 task: task()?,
-                vm: v.req_usize("vm")?,
+                vm: VmId::new(v.req_usize("vm")?),
                 slowdown: v.req_f64("slowdown")?,
             },
             "task_complete" => Event::TaskComplete { t: t()?, task: task()? },
@@ -414,7 +420,9 @@ impl Event {
                 tasks: v
                     .req_arr("tasks")?
                     .iter()
-                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("non-numeric task id")))
+                    .map(|x| {
+                        x.as_usize().map(TaskId::new).ok_or_else(|| anyhow!("non-numeric task id"))
+                    })
                     .collect::<Result<_>>()?,
                 deadline_driven: v
                     .get("deadline_driven")
@@ -453,20 +461,20 @@ impl Event {
                     .ok_or_else(|| anyhow!("missing applied"))?,
                 started: v.get("started").and_then(Json::as_f64),
             },
-            "veto" => Event::Veto { t: t()?, task: task()?, vm: v.req_usize("vm")? },
+            "veto" => Event::Veto { t: t()?, task: task()?, vm: VmId::new(v.req_usize("vm")?) },
             "fault" => Event::Fault {
                 t: t()?,
                 fault: match v.req_str("kind")? {
                     "host" => FaultEvent::Host {
-                        host: v.req_usize("host")?,
+                        host: HostId::new(v.req_usize("host")?),
                         until: v.req_f64("until")?,
                     },
                     "cloudlet" => FaultEvent::Cloudlet {
-                        vm: v.req_usize("vm")?,
-                        task: v.get("task").and_then(Json::as_f64).map(|f| f as usize),
+                        vm: VmId::new(v.req_usize("vm")?),
+                        task: v.get("task").and_then(Json::as_f64).map(|f| TaskId::new(f as usize)),
                     },
                     "vm_creation" => FaultEvent::VmCreation {
-                        vm: v.req_usize("vm")?,
+                        vm: VmId::new(v.req_usize("vm")?),
                         ready_at: v.req_f64("ready_at")?,
                     },
                     other => bail!("unknown fault kind {other:?}"),
@@ -501,54 +509,54 @@ impl Event {
                 c[7] = format!("{technique}/{scheduler}");
             }
             Event::TaskAdmit { task, job, submit_t, speculative_of, state, .. } => {
-                c[2] = u(*task);
-                c[3] = u(*job);
+                c[2] = u(task.raw());
+                c[3] = u(job.raw());
                 c[5] = f(*submit_t);
                 if let Some(orig) = speculative_of {
-                    c[6] = u(*orig);
+                    c[6] = u(orig.raw());
                 }
                 c[7] = life_str(*state).to_string();
             }
             Event::TaskStart { task, vm, slowdown, .. } => {
-                c[2] = u(*task);
-                c[4] = u(*vm);
+                c[2] = u(task.raw());
+                c[4] = u(vm.raw());
                 c[5] = f(*slowdown);
             }
             Event::TaskComplete { task, .. }
             | Event::TaskSuperseded { task, .. }
             | Event::TaskKill { task, .. }
-            | Event::TaskRelease { task, .. } => c[2] = u(*task),
+            | Event::TaskRelease { task, .. } => c[2] = u(task.raw()),
             Event::TaskReset { task, penalty_s, .. } => {
-                c[2] = u(*task);
+                c[2] = u(task.raw());
                 c[5] = f(*penalty_s);
             }
             Event::TaskHold { task, until, .. } => {
-                c[2] = u(*task);
+                c[2] = u(task.raw());
                 c[5] = f(*until);
             }
             Event::JobAdmit { job, tasks, sla_weight, .. } => {
-                c[3] = u(*job);
+                c[3] = u(job.raw());
                 c[5] = f(*sla_weight);
                 c[6] = u(tasks.len());
             }
             Event::JobSla { job, deadline, .. } => {
-                c[3] = u(*job);
+                c[3] = u(job.raw());
                 c[5] = f(*deadline);
             }
-            Event::JobDone { job, .. } => c[3] = u(*job),
+            Event::JobDone { job, .. } => c[3] = u(job.raw()),
             Event::TaskResult { task, job, mitigated, straggler, .. } => {
-                c[2] = u(*task);
-                c[3] = u(*job);
+                c[2] = u(task.raw());
+                c[3] = u(job.raw());
                 c[5] = u(*mitigated as usize);
                 c[6] = u(*straggler as usize);
             }
             Event::JobScore { job, predicted_es, actual_stragglers, .. } => {
-                c[3] = u(*job);
+                c[3] = u(job.raw());
                 c[5] = f(*predicted_es);
                 c[6] = u(*actual_stragglers);
             }
             Event::Mitigate { task, kind, applied, started, .. } => {
-                c[2] = u(*task);
+                c[2] = u(task.raw());
                 c[5] = u(*applied as usize);
                 if let Some(s) = started {
                     c[6] = f(*s);
@@ -556,24 +564,24 @@ impl Event {
                 c[7] = kind_str(*kind).to_string();
             }
             Event::Veto { task, vm, .. } => {
-                c[2] = u(*task);
-                c[4] = u(*vm);
+                c[2] = u(task.raw());
+                c[4] = u(vm.raw());
             }
             Event::Fault { fault, .. } => match fault {
                 FaultEvent::Host { host, until } => {
-                    c[5] = u(*host);
+                    c[5] = u(host.raw());
                     c[6] = f(*until);
                     c[7] = "host".to_string();
                 }
                 FaultEvent::Cloudlet { vm, task } => {
-                    c[4] = u(*vm);
+                    c[4] = u(vm.raw());
                     if let Some(tk) = task {
-                        c[2] = u(*tk);
+                        c[2] = u(tk.raw());
                     }
                     c[7] = "cloudlet".to_string();
                 }
                 FaultEvent::VmCreation { vm, ready_at } => {
-                    c[4] = u(*vm);
+                    c[4] = u(vm.raw());
                     c[5] = f(*ready_at);
                     c[7] = "vm_creation".to_string();
                 }
@@ -1262,71 +1270,71 @@ mod tests {
             },
             Event::TaskAdmit {
                 t: 0.1 + 0.2,
-                task: 7,
-                job: 3,
+                task: TaskId::new(7),
+                job: JobId::new(3),
                 submit_t: std::f64::consts::PI,
                 speculative_of: None,
                 state: LifeState::Pending,
             },
             Event::TaskAdmit {
                 t: 1.0,
-                task: 8,
-                job: 3,
+                task: TaskId::new(8),
+                job: JobId::new(3),
                 submit_t: 1.0,
-                speculative_of: Some(7),
+                speculative_of: Some(TaskId::new(7)),
                 state: LifeState::Running,
             },
-            Event::TaskStart { t: 2.5, task: 7, vm: 11, slowdown: 1.0 / 3.0 },
-            Event::TaskComplete { t: 3.0, task: 7 },
-            Event::TaskSuperseded { t: 3.0, task: 9 },
-            Event::TaskKill { t: 3.5, task: 8 },
-            Event::TaskReset { t: 4.0, task: 10, penalty_s: 30.0 },
-            Event::TaskHold { t: 4.5, task: 11, until: 600.125 },
-            Event::TaskRelease { t: 600.25, task: 11 },
+            Event::TaskStart { t: 2.5, task: TaskId::new(7), vm: VmId::new(11), slowdown: 1.0 / 3.0 },
+            Event::TaskComplete { t: 3.0, task: TaskId::new(7) },
+            Event::TaskSuperseded { t: 3.0, task: TaskId::new(9) },
+            Event::TaskKill { t: 3.5, task: TaskId::new(8) },
+            Event::TaskReset { t: 4.0, task: TaskId::new(10), penalty_s: 30.0 },
+            Event::TaskHold { t: 4.5, task: TaskId::new(11), until: 600.125 },
+            Event::TaskRelease { t: 600.25, task: TaskId::new(11) },
             Event::JobAdmit {
                 t: 0.0,
-                job: 3,
-                tasks: vec![7, 9, 10],
+                job: JobId::new(3),
+                tasks: vec![TaskId::new(7), TaskId::new(9), TaskId::new(10)],
                 deadline_driven: true,
                 sla_weight: 2.5,
             },
             Event::JobAdmit {
                 t: 0.0,
-                job: 4,
+                job: JobId::new(4),
                 tasks: vec![],
                 deadline_driven: false,
                 sla_weight: 1.0,
             },
-            Event::JobSla { t: 0.0, job: 3, deadline: 1234.567_890_123 },
-            Event::JobDone { t: 900.0, job: 3 },
-            Event::TaskResult { t: 900.0, task: 7, job: 3, mitigated: true, straggler: false },
-            Event::JobScore { t: 900.0, job: 3, predicted_es: 1.75, actual_stragglers: 2 },
+            Event::JobSla { t: 0.0, job: JobId::new(3), deadline: 1234.567_890_123 },
+            Event::JobDone { t: 900.0, job: JobId::new(3) },
+            Event::TaskResult { t: 900.0, task: TaskId::new(7), job: JobId::new(3), mitigated: true, straggler: false },
+            Event::JobScore { t: 900.0, job: JobId::new(3), predicted_es: 1.75, actual_stragglers: 2 },
             Event::Mitigate {
                 t: 300.0,
-                task: 7,
+                task: TaskId::new(7),
                 kind: MitigationKind::Speculate,
                 applied: true,
                 started: Some(12.5),
             },
             Event::Mitigate {
                 t: 300.0,
-                task: 9,
+                task: TaskId::new(9),
                 kind: MitigationKind::Hold,
                 applied: false,
                 started: None,
             },
             Event::Mitigate {
                 t: 300.0,
-                task: 10,
+                task: TaskId::new(10),
                 kind: MitigationKind::Rerun,
                 applied: true,
                 started: None,
             },
-            Event::Veto { t: 300.0, task: 12, vm: 4 },
-            Event::Fault { t: 301.0, fault: FaultEvent::Host { host: 2, until: 901.0 } },
-            Event::Fault { t: 302.0, fault: FaultEvent::Cloudlet { vm: 5, task: Some(7) } },
-            Event::Fault { t: 302.0, fault: FaultEvent::Cloudlet { vm: 6, task: None } },
-            Event::Fault { t: 303.0, fault: FaultEvent::VmCreation { vm: 5, ready_at: 603.0 } },
+            Event::Veto { t: 300.0, task: TaskId::new(12), vm: VmId::new(4) },
+            Event::Fault { t: 301.0, fault: FaultEvent::Host { host: HostId::new(2), until: 901.0 } },
+            Event::Fault { t: 302.0, fault: FaultEvent::Cloudlet { vm: VmId::new(5), task: Some(TaskId::new(7)) } },
+            Event::Fault { t: 302.0, fault: FaultEvent::Cloudlet { vm: VmId::new(6), task: None } },
+            Event::Fault { t: 303.0, fault: FaultEvent::VmCreation { vm: VmId::new(5), ready_at: 603.0 } },
             Event::Interval {
                 index: 0,
                 snapshot: IntervalMetrics {
@@ -1362,12 +1370,61 @@ mod tests {
         // Shortest-representation float printing must reproduce exact
         // bits — the replay contract relies on it.
         for v in [0.1 + 0.2, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -123.456e-7] {
-            let e = Event::TaskStart { t: v, task: 0, vm: 0, slowdown: v };
+            let e = Event::TaskStart { t: v, task: TaskId::new(0), vm: VmId::new(0), slowdown: v };
             let back = read_jsonl(&format!("{}\n", e.to_json().dump())).unwrap();
             match &back[0] {
                 Event::TaskStart { t, slowdown, .. } => {
                     assert_eq!(t.to_bits(), v.to_bits());
                     assert_eq!(slowdown.to_bits(), v.to_bits());
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn typed_ids_round_trip_bitwise_through_jsonl() {
+        // Entity-id newtypes serialize as bare arena indices (the JSONL
+        // schema is unchanged from the `usize`-alias era) and must come
+        // back exact for every representable index.  Ids ride through
+        // JSON as f64, so the ceiling is 2^53 - 1 — far beyond any arena.
+        const MAX_EXACT: usize = (1usize << 53) - 1;
+        for raw in [0usize, 1, 4095, 1 << 32, MAX_EXACT] {
+            let events = vec![
+                Event::TaskAdmit {
+                    t: 1.0,
+                    task: TaskId::new(raw),
+                    job: JobId::new(raw),
+                    submit_t: 0.0,
+                    speculative_of: Some(TaskId::new(raw)),
+                    state: LifeState::Pending,
+                },
+                Event::TaskStart { t: 2.0, task: TaskId::new(raw), vm: VmId::new(raw), slowdown: 1.0 },
+                Event::JobAdmit {
+                    t: 0.0,
+                    job: JobId::new(raw),
+                    tasks: vec![TaskId::new(raw)],
+                    deadline_driven: false,
+                    sla_weight: 1.0,
+                },
+                Event::Veto { t: 3.0, task: TaskId::new(raw), vm: VmId::new(raw) },
+                Event::Fault { t: 4.0, fault: FaultEvent::Host { host: HostId::new(raw), until: 9.0 } },
+            ];
+            let mut buf = Vec::new();
+            write_jsonl(&events, &mut buf).unwrap();
+            let back = read_jsonl(std::str::from_utf8(&buf).unwrap()).unwrap();
+            assert_eq!(events, back, "id {raw} drifted through JSONL");
+            match &back[0] {
+                Event::TaskAdmit { task, job, speculative_of, .. } => {
+                    assert_eq!(task.raw(), raw);
+                    assert_eq!(job.raw(), raw);
+                    assert_eq!(speculative_of.map(|t| t.raw()), Some(raw));
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+            match &back[4] {
+                Event::Fault { fault: FaultEvent::Host { host, .. }, .. } => {
+                    assert_eq!(host.raw(), raw);
                 }
                 other => panic!("wrong variant {other:?}"),
             }
@@ -1410,31 +1467,31 @@ mod tests {
         let events = vec![
             Event::JobAdmit {
                 t: 0.0,
-                job: 0,
-                tasks: vec![0],
+                job: JobId::new(0),
+                tasks: vec![TaskId::new(0)],
                 deadline_driven: true,
                 sla_weight: 2.0,
             },
-            Event::JobSla { t: 0.0, job: 0, deadline: 50.0 },
+            Event::JobSla { t: 0.0, job: JobId::new(0), deadline: 50.0 },
             Event::TaskAdmit {
                 t: 0.0,
-                task: 0,
-                job: 0,
+                task: TaskId::new(0),
+                job: JobId::new(0),
                 submit_t: 10.0,
                 speculative_of: None,
                 state: LifeState::Pending,
             },
-            Event::TaskReset { t: 20.0, task: 0, penalty_s: 30.0 },
-            Event::TaskReset { t: 40.0, task: 0, penalty_s: 30.0 },
+            Event::TaskReset { t: 20.0, task: TaskId::new(0), penalty_s: 30.0 },
+            Event::TaskReset { t: 40.0, task: TaskId::new(0), penalty_s: 30.0 },
             Event::Mitigate {
                 t: 45.0,
-                task: 0,
+                task: TaskId::new(0),
                 kind: MitigationKind::Rerun,
                 applied: true,
                 started: Some(15.0),
             },
-            Event::TaskResult { t: 100.0, task: 0, job: 0, mitigated: true, straggler: true },
-            Event::JobScore { t: 100.0, job: 0, predicted_es: 1.0, actual_stragglers: 1 },
+            Event::TaskResult { t: 100.0, task: TaskId::new(0), job: JobId::new(0), mitigated: true, straggler: true },
+            Event::JobScore { t: 100.0, job: JobId::new(0), predicted_es: 1.0, actual_stragglers: 1 },
         ];
         let m = replay(&events);
         assert_eq!(m.exec_times, vec![90.0]);
@@ -1455,7 +1512,7 @@ mod tests {
         let mk_admit = |task, state| Event::TaskAdmit {
             t: 0.0,
             task,
-            job: 0,
+            job: JobId::new(0),
             submit_t: 0.0,
             speculative_of: None,
             state,
@@ -1463,24 +1520,24 @@ mod tests {
         let events = vec![
             Event::JobAdmit {
                 t: 0.0,
-                job: 0,
-                tasks: vec![0, 1, 2],
+                job: JobId::new(0),
+                tasks: vec![TaskId::new(0), TaskId::new(1), TaskId::new(2)],
                 deadline_driven: false,
                 sla_weight: 1.0,
             },
-            mk_admit(0, LifeState::Pending),
-            mk_admit(1, LifeState::Pending),
-            mk_admit(2, LifeState::Pending),
-            Event::TaskStart { t: 1.0, task: 0, vm: 0, slowdown: 1.0 },
-            Event::TaskHold { t: 1.0, task: 1, until: 10.0 },
-            Event::TaskComplete { t: 5.0, task: 0 },
-            Event::TaskRelease { t: 10.0, task: 1 },
+            mk_admit(TaskId::new(0), LifeState::Pending),
+            mk_admit(TaskId::new(1), LifeState::Pending),
+            mk_admit(TaskId::new(2), LifeState::Pending),
+            Event::TaskStart { t: 1.0, task: TaskId::new(0), vm: VmId::new(0), slowdown: 1.0 },
+            Event::TaskHold { t: 1.0, task: TaskId::new(1), until: 10.0 },
+            Event::TaskComplete { t: 5.0, task: TaskId::new(0) },
+            Event::TaskRelease { t: 10.0, task: TaskId::new(1) },
         ];
         let rc = recount(&events);
-        assert_eq!(rc.pending, vec![1, 2]);
+        assert_eq!(rc.pending, vec![TaskId::new(1), TaskId::new(2)]);
         assert!(rc.running.is_empty());
         assert!(rc.held.is_empty());
-        assert_eq!(rc.active_jobs, vec![0]);
+        assert_eq!(rc.active_jobs, vec![JobId::new(0)]);
     }
 
     #[test]
@@ -1605,7 +1662,7 @@ mod tests {
 
         let mut mem = TraceSink::mem();
         assert!(mem.enabled());
-        mem.record(|| Event::TaskComplete { t: 1.0, task: 0 });
+        mem.record(|| Event::TaskComplete { t: 1.0, task: TaskId::new(0) });
         assert_eq!(mem.len(), 1);
         assert_eq!(mem.events().len(), 1);
         assert_eq!(mem.into_events().len(), 1);
@@ -1613,14 +1670,14 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("start_sim_trace_{}", std::process::id()));
         let path = dir.join("t.jsonl");
         let mut file = TraceSink::file(&path).unwrap();
-        file.record(|| Event::TaskComplete { t: 1.0, task: 0 });
+        file.record(|| Event::TaskComplete { t: 1.0, task: TaskId::new(0) });
         assert_eq!(file.finish().unwrap(), 1);
         drop(file);
         let back = load_jsonl(&path).unwrap();
-        assert_eq!(back, vec![Event::TaskComplete { t: 1.0, task: 0 }]);
+        assert_eq!(back, vec![Event::TaskComplete { t: 1.0, task: TaskId::new(0) }]);
         let csv_path = dir.join("t.csv");
         let mut csv = TraceSink::file(&csv_path).unwrap();
-        csv.record(|| Event::TaskComplete { t: 1.0, task: 0 });
+        csv.record(|| Event::TaskComplete { t: 1.0, task: TaskId::new(0) });
         csv.finish().unwrap();
         drop(csv);
         let text = std::fs::read_to_string(&csv_path).unwrap();

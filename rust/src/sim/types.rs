@@ -1,13 +1,10 @@
 //! Core simulator entity types: hosts, VMs, tasks (cloudlets), jobs.
+//!
+//! Entity ids are `#[repr(transparent)]` newtypes defined in
+//! `sim::world::ids` (re-exported here so `use sim::types::*` keeps
+//! working); mixing a `TaskId` into a host arena is a compile error.
 
-/// Typed index into `World::hosts`.
-pub type HostId = usize;
-/// Typed index into `World::vms`.
-pub type VmId = usize;
-/// Typed index into `World::tasks`.
-pub type TaskId = usize;
-/// Typed index into `World::jobs`.
-pub type JobId = usize;
+pub use crate::sim::world::ids::{EntityId, HostId, JobId, TaskId, VmId};
 
 /// A physical machine (Table 3).
 #[derive(Clone, Debug)]
@@ -167,7 +164,7 @@ mod tests {
 
     fn mk_host() -> Host {
         Host {
-            id: 0,
+            id: HostId::new(0),
             type_idx: 0,
             mips_total: 4000.0,
             ram_gb: 6.0,
@@ -204,13 +201,13 @@ mod tests {
     #[test]
     fn task_progress() {
         let t = Task {
-            id: 0,
-            job: 0,
+            id: TaskId::new(0),
+            job: JobId::new(0),
             length_mi: 100.0,
             demand: TaskDemand::default(),
             state: TaskState::Running,
-            vm: Some(0),
-            last_vm: Some(0),
+            vm: Some(VmId::new(0)),
+            last_vm: Some(VmId::new(0)),
             remaining_mi: 25.0,
             submit_t: 0.0,
             first_start_t: Some(0.0),

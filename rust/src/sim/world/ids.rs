@@ -1,0 +1,335 @@
+//! Typed entity identifiers and the containers indexed by them.
+//!
+//! Every simulator entity — host, VM, task, job — is addressed by a
+//! `#[repr(transparent)]` newtype over its arena index.  The raw `usize`
+//! is only reachable through `new`/`raw`, so a `TaskId` can never be used
+//! to index the host arena (or vice versa) without a compile error.  This
+//! module is the **only** place where entity ids and raw integers
+//! interconvert; CI greps for `usize` casts on id types elsewhere.
+//!
+//! Two containers build on the newtypes:
+//!
+//! * [`Arena<I, T>`] — a grow-only `Vec<T>` indexable *only* by its id
+//!   type `I` (`world.tasks[tid]`, `world.hosts[hid]`).
+//! * [`IdSet<I>`] — an always-sorted set of ids.  Because the backing
+//!   vector is kept sorted at all times, membership queries are
+//!   `O(log n)` and — crucially for the zero-alloc query surface — the
+//!   set can hand out its contents as a borrowed `&[I]` with no per-call
+//!   allocation or sort.
+
+use std::marker::PhantomData;
+use std::ops::{Index, IndexMut};
+
+/// Common surface of the four entity-id newtypes: conversion to/from the
+/// raw arena index.  Kept as a trait so generic containers ([`Arena`],
+/// [`IdSet`]) and serialization helpers can be written once.
+pub trait EntityId: Copy + Ord + std::hash::Hash + std::fmt::Debug {
+    /// Wrap a raw arena index.
+    fn new(raw: usize) -> Self;
+    /// Unwrap to the raw arena index.
+    fn raw(self) -> usize;
+}
+
+macro_rules! entity_id {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+        #[repr(transparent)]
+        pub struct $name(usize);
+
+        impl $name {
+            /// Wrap a raw arena index.
+            #[inline(always)]
+            pub const fn new(raw: usize) -> Self {
+                Self(raw)
+            }
+            /// Unwrap to the raw arena index.
+            #[inline(always)]
+            pub const fn raw(self) -> usize {
+                self.0
+            }
+        }
+
+        impl EntityId for $name {
+            #[inline(always)]
+            fn new(raw: usize) -> Self {
+                Self(raw)
+            }
+            #[inline(always)]
+            fn raw(self) -> usize {
+                self.0
+            }
+        }
+
+        // Ids print as the bare number (no `TaskId(..)` wrapper): panic
+        // messages, trace labels, and `{:?}` dumps stay byte-identical
+        // with the former `usize` aliases.
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}", self.0)
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}", self.0)
+            }
+        }
+    };
+}
+
+entity_id!(
+    /// Index of a physical machine in `World::hosts`.
+    HostId
+);
+entity_id!(
+    /// Index of a virtual machine in `World::vms`.
+    VmId
+);
+entity_id!(
+    /// Index of a task (cloudlet) in the task arena.
+    TaskId
+);
+entity_id!(
+    /// Index of a bag-of-tasks job in the job arena.
+    JobId
+);
+
+/// Grow-only storage indexable only by its id type.
+///
+/// A thin wrapper over `Vec<T>` whose `Index`/`IndexMut` impls take `I`
+/// rather than `usize`, so cross-entity indexing bugs (task id into the
+/// host arena) are compile errors.  Iteration order is id order.
+#[derive(Clone, Debug, Default)]
+pub struct Arena<I: EntityId, T> {
+    items: Vec<T>,
+    _ids: PhantomData<I>,
+}
+
+impl<I: EntityId, T> Arena<I, T> {
+    pub fn new() -> Self {
+        Self { items: Vec::new(), _ids: PhantomData }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { items: Vec::with_capacity(cap), _ids: PhantomData }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Append an item, returning the id it was stored under.
+    #[inline]
+    pub fn push(&mut self, item: T) -> I {
+        let id = I::new(self.items.len());
+        self.items.push(item);
+        id
+    }
+
+    /// `None` when `id` is beyond the arena (used for counters that may
+    /// lag entity admission, e.g. per-job active-task tallies).
+    #[inline(always)]
+    pub fn get(&self, id: I) -> Option<&T> {
+        self.items.get(id.raw())
+    }
+
+    #[inline(always)]
+    pub fn get_mut(&mut self, id: I) -> Option<&mut T> {
+        self.items.get_mut(id.raw())
+    }
+
+    /// Grow (or shrink) to `len` entries, filling with clones of `fill`.
+    pub fn resize(&mut self, len: usize, fill: T)
+    where
+        T: Clone,
+    {
+        self.items.resize(len, fill);
+    }
+
+    /// All valid ids, in order.
+    pub fn ids(&self) -> impl DoubleEndedIterator<Item = I> + ExactSizeIterator + Clone {
+        (0..self.items.len()).map(I::new)
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.items.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, T> {
+        self.items.iter_mut()
+    }
+
+    /// `(id, &item)` pairs in id order.
+    pub fn enumerate(&self) -> impl Iterator<Item = (I, &T)> {
+        self.items.iter().enumerate().map(|(i, t)| (I::new(i), t))
+    }
+
+    /// Raw slice view (id order).  For O(total) debug walks; typed access
+    /// should index by id.
+    pub fn as_slice(&self) -> &[T] {
+        &self.items
+    }
+}
+
+impl<I: EntityId, T> Index<I> for Arena<I, T> {
+    type Output = T;
+    #[inline(always)]
+    fn index(&self, id: I) -> &T {
+        &self.items[id.raw()]
+    }
+}
+
+impl<I: EntityId, T> IndexMut<I> for Arena<I, T> {
+    #[inline(always)]
+    fn index_mut(&mut self, id: I) -> &mut T {
+        &mut self.items[id.raw()]
+    }
+}
+
+impl<'a, I: EntityId, T> IntoIterator for &'a Arena<I, T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.iter()
+    }
+}
+
+impl<'a, I: EntityId, T> IntoIterator for &'a mut Arena<I, T> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.iter_mut()
+    }
+}
+
+impl<I: EntityId, T> FromIterator<T> for Arena<I, T> {
+    fn from_iter<It: IntoIterator<Item = T>>(iter: It) -> Self {
+        Self { items: iter.into_iter().collect(), _ids: PhantomData }
+    }
+}
+
+/// Always-sorted id set.
+///
+/// Membership mutation keeps the backing vector sorted (binary-search
+/// insert/remove), so `as_slice()` is a zero-cost ordered view — the
+/// query surface (`pending()`, `running()`, `available_vms()`, …)
+/// borrows it directly instead of clone-and-sorting a dense set on every
+/// call.  Sets track *active* entities, which stay small relative to the
+/// arena totals, so the `O(n)` memmove on insert/remove is cheap; id
+/// membership flips dwarf id lookups in no workload we model.
+#[derive(Clone, Debug, Default)]
+pub struct IdSet<I: EntityId> {
+    sorted: Vec<I>,
+}
+
+impl<I: EntityId> IdSet<I> {
+    pub fn new() -> Self {
+        Self { sorted: Vec::new() }
+    }
+
+    /// Insert `id`; no-op when already present.
+    #[inline]
+    pub fn insert(&mut self, id: I) {
+        if let Err(pos) = self.sorted.binary_search(&id) {
+            self.sorted.insert(pos, id);
+        }
+    }
+
+    /// Remove `id`; no-op when absent.
+    #[inline]
+    pub fn remove(&mut self, id: I) {
+        if let Ok(pos) = self.sorted.binary_search(&id) {
+            self.sorted.remove(pos);
+        }
+    }
+
+    #[inline(always)]
+    pub fn contains(&self, id: I) -> bool {
+        self.sorted.binary_search(&id).is_ok()
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.sorted.clear();
+    }
+
+    /// Members in ascending id order, borrowed — the zero-alloc view.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[I] {
+        &self.sorted
+    }
+
+    pub fn iter(&self) -> impl DoubleEndedIterator<Item = I> + ExactSizeIterator + '_ {
+        self.sorted.iter().copied()
+    }
+
+    /// Owned ascending copy — the explicit escape hatch for callers that
+    /// mutate the world while walking the membership snapshot.
+    pub fn to_vec(&self) -> Vec<I> {
+        self.sorted.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_print_as_bare_numbers() {
+        let t = TaskId::new(17);
+        assert_eq!(format!("{t}"), "17");
+        assert_eq!(format!("{t:?}"), "17");
+        assert_eq!(t.raw(), 17);
+        assert_eq!(format!("{:?}", HostId::new(3)), "3");
+    }
+
+    #[test]
+    fn arena_typed_indexing_and_iteration() {
+        let mut a: Arena<VmId, &str> = Arena::new();
+        let v0 = a.push("a");
+        let v1 = a.push("b");
+        assert_eq!(v0, VmId::new(0));
+        assert_eq!(a[v1], "b");
+        a[v0] = "z";
+        assert_eq!(a.get(VmId::new(5)), None);
+        let ids: Vec<VmId> = a.ids().collect();
+        assert_eq!(ids, vec![v0, v1]);
+        let via_ref: Vec<&&str> = (&a).into_iter().collect();
+        assert_eq!(via_ref, vec![&"z", &"b"]);
+        assert_eq!(a.enumerate().map(|(i, _)| i).collect::<Vec<_>>(), ids);
+    }
+
+    #[test]
+    fn idset_stays_sorted_and_dedups() {
+        let mut s: IdSet<TaskId> = IdSet::new();
+        for raw in [5usize, 1, 9, 1, 3, 9] {
+            s.insert(TaskId::new(raw));
+        }
+        assert_eq!(s.len(), 4);
+        let got: Vec<usize> = s.as_slice().iter().map(|t| t.raw()).collect();
+        assert_eq!(got, vec![1, 3, 5, 9]);
+        assert!(s.contains(TaskId::new(3)));
+        s.remove(TaskId::new(3));
+        s.remove(TaskId::new(100)); // absent: no-op
+        assert!(!s.contains(TaskId::new(3)));
+        assert_eq!(s.to_vec(), s.as_slice().to_vec());
+        s.clear();
+        assert!(s.is_empty());
+    }
+}

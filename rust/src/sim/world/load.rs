@@ -1,0 +1,314 @@
+//! Incremental resource-load accounting and the VM-availability index
+//! (DESIGN.md §9).
+//!
+//! Owns two invariants:
+//!
+//! * **Load caches are the reference fold, bit for bit.**  Every VM
+//!   carries a cached demand subtotal ([`ResLoad`]) recomputed from
+//!   scratch with the reference arithmetic whenever its resident task set
+//!   changes (never adjusted by ±delta, which would drift under float
+//!   non-associativity), and every host carries the fold of its VMs'
+//!   subtotals in `host.vms` order — the exact grouping the reference
+//!   scans use.  `host_cpu_util` / `host_ram_util` / `host_disk_util` /
+//!   `host_bw_util` / `host_task_count` are then O(1) reads.
+//!
+//! * **The availability set is exact at every query point.**  Membership
+//!   (`vm_available`: ready and on an up host) is reconciled on every
+//!   readiness/fault transition, and a wake-time min-heap re-admits VMs
+//!   as `now` advances.  Because the set is an always-sorted [`IdSet`],
+//!   `available_vms` borrows it directly — same content and order as the
+//!   reference `0..vms.len()` filter scan, with no per-call allocation.
+
+use crate::sim::types::*;
+use crate::sim::world::ids::{Arena, IdSet};
+use crate::sim::world::rates::EtaKey;
+use crate::sim::world::World;
+use std::borrow::Cow;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Cached resource-demand subtotal for one VM (or the fold of a host's
+/// VMs).  `mips` is the fair-share-capped CPU demand (`vm_demand`);
+/// ram/disk/bw are plain sums of resident task demand.
+#[derive(Clone, Copy, Default, PartialEq, Debug)]
+pub(super) struct ResLoad {
+    pub(super) mips: f64,
+    pub(super) ram_gb: f64,
+    pub(super) disk_gb: f64,
+    pub(super) bw_kbps: f64,
+}
+
+/// Per-VM/per-host load caches + the availability index.
+pub(super) struct LoadIndex {
+    /// Per-VM cached demand subtotals, refreshed whenever the VM's task
+    /// set changes (place/complete/kill/reset/hold-release).
+    pub(super) vm: Arena<VmId, ResLoad>,
+    /// Per-host fold of its VMs' subtotals in `host.vms` order.
+    pub(super) host: Arena<HostId, ResLoad>,
+    /// Per-host resident-task counter (`host_task_count` in O(1)).
+    pub(super) host_tasks: Arena<HostId, usize>,
+    /// VMs currently placeable (`vm_available`): ready and on an up host.
+    /// Always sorted, so it doubles as the candidate list the reference
+    /// `0..vms.len()` filter scan would produce.
+    pub(super) avail: IdSet<VmId>,
+    /// Min-heap of (wake time, vm) for VMs that left the available set:
+    /// wake = max(ready_at, down_until).  Popped as `now` advances.
+    /// Duplicates are allowed (a VM hit by several faults pushes several
+    /// entries); stale pops are filtered against live state.
+    pub(super) suspend_heap: BinaryHeap<Reverse<(EtaKey, VmId)>>,
+}
+
+impl LoadIndex {
+    /// Empty caches for a fresh fleet.  At t = 0 every VM is ready
+    /// (`ready_at == 0.0`) on an up host, so the availability index
+    /// starts full.
+    pub(super) fn new(n_hosts: usize, n_vms: usize) -> LoadIndex {
+        let mut avail = IdSet::new();
+        for v in 0..n_vms {
+            avail.insert(VmId::new(v));
+        }
+        LoadIndex {
+            vm: (0..n_vms).map(|_| ResLoad::default()).collect(),
+            host: (0..n_hosts).map(|_| ResLoad::default()).collect(),
+            host_tasks: (0..n_hosts).map(|_| 0).collect(),
+            avail,
+            suspend_heap: BinaryHeap::new(),
+        }
+    }
+}
+
+impl World {
+    /// Sum of task MIPS demand currently on a VM (capped per task by fair
+    /// share).  O(1) via the cached subtotal; reference mode recomputes.
+    pub(super) fn vm_demand(&self, vm: VmId) -> f64 {
+        if self.reference_scans {
+            let v = &self.vms[vm];
+            let n = v.tasks.len().max(1) as f64;
+            let fair = v.mips / n;
+            return v
+                .tasks
+                .iter()
+                .map(|&t| self.registry.tasks[t].demand.mips.min(fair).max(1.0))
+                .sum();
+        }
+        self.load.vm[vm].mips
+    }
+
+    /// Host CPU utilization in [0, 1] including background + reserved load.
+    /// O(1) via the per-host aggregate; reference mode re-sums per VM.
+    pub fn host_cpu_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        if !h.is_up(self.now) {
+            return 0.0;
+        }
+        let demand: f64 = if self.reference_scans {
+            h.vms.iter().map(|&v| self.vm_demand(v)).sum()
+        } else {
+            self.load.host[host].mips
+        };
+        (demand / h.mips_total + h.background_load + self.reserved_util).min(1.0)
+    }
+
+    /// Host RAM utilization in [0, 1].  Both modes group the sum per VM
+    /// (subtotal-then-fold) so the arithmetic is bitwise shared.
+    pub fn host_ram_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        let used: f64 = if self.reference_scans {
+            // Grouped per VM (not one flat sum over all host tasks) so the
+            // fold order matches the indexed subtotal-then-aggregate path.
+            h.vms
+                .iter()
+                .map(|&v| {
+                    self.vms[v]
+                        .tasks
+                        .iter()
+                        .map(|&t| self.registry.tasks[t].demand.ram_gb)
+                        .sum::<f64>()
+                })
+                .sum()
+        } else {
+            self.load.host[host].ram_gb
+        };
+        (used / h.ram_gb + 0.5 * h.background_load + 0.5 * self.reserved_util).min(1.0)
+    }
+
+    /// Host disk utilization in [0, 1].
+    pub fn host_disk_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        let used: f64 = if self.reference_scans {
+            h.vms
+                .iter()
+                .map(|&v| {
+                    self.vms[v]
+                        .tasks
+                        .iter()
+                        .map(|&t| self.registry.tasks[t].demand.disk_gb)
+                        .sum::<f64>()
+                })
+                .sum()
+        } else {
+            self.load.host[host].disk_gb
+        };
+        (used / h.disk_gb + 0.3 * self.reserved_util).min(1.0)
+    }
+
+    /// Host network utilization in [0, 1].
+    pub fn host_bw_util(&self, host: HostId) -> f64 {
+        let h = &self.hosts[host];
+        let used: f64 = if self.reference_scans {
+            h.vms
+                .iter()
+                .map(|&v| {
+                    self.vms[v]
+                        .tasks
+                        .iter()
+                        .map(|&t| self.registry.tasks[t].demand.bw_kbps)
+                        .sum::<f64>()
+                })
+                .sum()
+        } else {
+            self.load.host[host].bw_kbps
+        };
+        (used / h.bw_kbps.max(1e-9) + 0.3 * self.reserved_util).min(1.0)
+    }
+
+    /// Number of resident tasks on a host (counter-backed).
+    pub fn host_task_count(&self, host: HostId) -> usize {
+        if self.reference_scans {
+            return self.hosts[host].vms.iter().map(|&v| self.vms[v].tasks.len()).sum();
+        }
+        self.load.host_tasks[host]
+    }
+
+    /// Reference-arithmetic demand subtotal of one VM: fair-share-capped
+    /// MIPS plus plain ram/disk/bw sums, folded in `vm.tasks` order.
+    /// This is the **single definition** both modes share — the indexed
+    /// caches are always produced by this exact fold.
+    pub(super) fn compute_vm_load(&self, vm: VmId) -> ResLoad {
+        let v = &self.vms[vm];
+        let n = v.tasks.len().max(1) as f64;
+        let fair = v.mips / n;
+        let mut l = ResLoad::default();
+        for &t in &v.tasks {
+            let d = &self.registry.tasks[t].demand;
+            l.mips += d.mips.min(fair).max(1.0);
+            l.ram_gb += d.ram_gb;
+            l.disk_gb += d.disk_gb;
+            l.bw_kbps += d.bw_kbps;
+        }
+        l
+    }
+
+    /// Refresh one VM's cached subtotal and re-fold its host's aggregate
+    /// (in `host.vms` order, matching the reference grouping bit for bit).
+    /// Called on every task placement/detachment; O(tasks-on-vm +
+    /// vms-on-host), independent of fleet size.
+    pub(super) fn refresh_vm_load(&mut self, vm: VmId) {
+        self.load.vm[vm] = self.compute_vm_load(vm);
+        let host = self.vms[vm].host;
+        let mut agg = ResLoad::default();
+        for &v in &self.hosts[host].vms {
+            let l = &self.load.vm[v];
+            agg.mips += l.mips;
+            agg.ram_gb += l.ram_gb;
+            agg.disk_gb += l.disk_gb;
+            agg.bw_kbps += l.bw_kbps;
+        }
+        self.load.host[host] = agg;
+    }
+
+    // ----------------------------------------------- availability index
+
+    /// Reconcile one VM's membership in the availability index with its
+    /// live state; schedules a wake-up when it is currently unavailable.
+    pub(super) fn refresh_vm_availability(&mut self, vm: VmId) {
+        if self.reference_scans {
+            return;
+        }
+        if self.vm_available(vm) {
+            self.load.avail.insert(vm);
+        } else {
+            self.load.avail.remove(vm);
+            // Wake time is strictly in the future whenever the VM is
+            // unavailable, so re-popping the same entry cannot loop.
+            let wake = self.vm_wake_time(vm);
+            self.load.suspend_heap.push(Reverse((EtaKey(wake), vm)));
+        }
+    }
+
+    /// Pop matured wake-ups as `now` advances and re-admit their VMs.
+    /// Stale entries (VM re-suspended with a later wake, or already
+    /// re-admitted via an earlier duplicate) are filtered by re-checking
+    /// live state.
+    pub(super) fn sync_availability(&mut self) {
+        if self.reference_scans {
+            return;
+        }
+        while let Some(&Reverse((EtaKey(wake), vm))) = self.load.suspend_heap.peek() {
+            if wake > self.now {
+                break;
+            }
+            self.load.suspend_heap.pop();
+            if !self.load.avail.contains(vm) {
+                self.refresh_vm_availability(vm);
+            }
+        }
+    }
+
+    /// Currently placeable VMs in ascending id order — the scheduler
+    /// candidate list.  Indexed mode borrows the always-sorted member set
+    /// (zero-alloc); reference mode materializes the seed's full filter
+    /// scan.  Content and order are identical, so downstream RNG streams
+    /// (Random/A3C sampling) cannot diverge between modes.
+    pub fn available_vms(&self) -> Cow<'_, [VmId]> {
+        if self.reference_scans {
+            let n = self.vms.len();
+            return Cow::Owned(
+                (0..n).map(VmId::new).filter(|&v| self.vm_available(v)).collect(),
+            );
+        }
+        Cow::Borrowed(self.load.avail.as_slice())
+    }
+
+    /// Layer check (§9): load caches must match a from-scratch recount
+    /// **bitwise** — the caches are defined as the reference fold, not an
+    /// approximation of it — and the availability set must equal the
+    /// reference filter scan.  Only meaningful in indexed mode (reference
+    /// mode maintains neither).
+    pub(super) fn assert_loads_consistent(&self) {
+        for v in 0..self.vms.len() {
+            let v = VmId::new(v);
+            let expect = self.compute_vm_load(v);
+            assert!(
+                self.load.vm[v] == expect,
+                "vm {v} load drift: cached {:?} recount {expect:?}",
+                self.load.vm[v]
+            );
+        }
+        for h in self.hosts.iter() {
+            let mut agg = ResLoad::default();
+            let mut ntasks = 0usize;
+            for &v in &h.vms {
+                let l = self.compute_vm_load(v);
+                agg.mips += l.mips;
+                agg.ram_gb += l.ram_gb;
+                agg.disk_gb += l.disk_gb;
+                agg.bw_kbps += l.bw_kbps;
+                ntasks += self.vms[v].tasks.len();
+            }
+            let hid = h.id;
+            assert!(
+                self.load.host[hid] == agg,
+                "host {hid} load drift: cached {:?} recount {agg:?}",
+                self.load.host[hid]
+            );
+            assert_eq!(self.load.host_tasks[hid], ntasks, "host {hid} task-counter drift");
+        }
+        // The availability index is exact whenever `now` last moved
+        // through `advance` (which syncs) — tests that poke `now`
+        // directly must not call this.
+        let avail: Vec<VmId> =
+            (0..self.vms.len()).map(VmId::new).filter(|&v| self.vm_available(v)).collect();
+        assert_eq!(self.load.avail.as_slice(), avail, "availability set drift");
+    }
+}

@@ -1,0 +1,142 @@
+//! The mutable simulation world: entity storage, capacity/contention
+//! math, task placement and exact piecewise-linear progress advancement
+//! — decomposed into typed subsystems (DESIGN.md §13).
+//!
+//! `World` is a facade over four layers, each owning one family of
+//! invariants (and the layer's slice of `assert_consistent`):
+//!
+//! * [`ids`] — `#[repr(transparent)]` entity-id newtypes
+//!   (`HostId`/`VmId`/`TaskId`/`JobId`), typed arenas, and always-sorted
+//!   id sets.  The only module where ids and raw `usize` interconvert.
+//! * [`registry`] — task/job arenas, `pending`/`running`/`held`/
+//!   `active_jobs` membership sets, per-job counters, the
+//!   speculative-clone map, and all lifecycle transitions (§3).
+//! * [`topology`] — host/VM fleet construction and fault-state
+//!   transitions (`set_host_down`, `set_vm_ready_at`,
+//!   `set_background_load`).
+//! * [`load`] — per-VM/per-host `ResLoad` demand subtotals and the
+//!   VM-availability index (§9).
+//! * [`rates`] — dirty-host rate maintenance, the generation-stamped
+//!   finish heap, and `advance` (§11).
+//!
+//! Queries (`pending()`, `running()`, `held()`, `active_jobs()`,
+//! `available_vms()`) are **zero-alloc borrowed views** over the sorted
+//! membership sets; `active_tasks(job)` is a borrowing iterator.  All
+//! state transitions go through world methods so the indexes can never
+//! drift from entity state.  `SimConfig::reference_scans` flips every
+//! query back to the pre-index O(total)/O(fleet) full scans — the
+//! golden-parity test and the `scale`/`placement`/`rates` benchmarks run
+//! both modes and compare bitwise.
+
+pub mod ids;
+mod load;
+mod rates;
+mod registry;
+mod topology;
+
+#[cfg(test)]
+mod tests;
+
+use crate::config::SimConfig;
+use crate::sim::trace::{Event, TraceSink};
+use crate::sim::types::*;
+
+use ids::Arena;
+use load::LoadIndex;
+use rates::RateIndex;
+use registry::Registry;
+
+/// Entity storage + derived execution rates (facade over the layer
+/// subsystems; see the module docs for the layer map).
+pub struct World {
+    pub now: f64,
+    pub hosts: Arena<HostId, Host>,
+    pub vms: Arena<VmId, Vm>,
+    /// Reserved-utilization knob (Fig. 6/8 sweep).
+    pub reserved_util: f64,
+    /// Latest raw M_H snapshot (set by the coordinator's feature extractor
+    /// each interval; consumed by job-submission generative sampling).
+    pub latest_m_h: Vec<f32>,
+    /// Completed-task log for metrics: (task, completion_time).
+    pub completed_log: Vec<TaskId>,
+    /// Parity/debug mode: answer queries via the seed engine's O(total)
+    /// full scans instead of the indexes.
+    pub(crate) reference_scans: bool,
+    /// Entity registry layer (§3): arenas + state membership indexes.
+    pub(crate) registry: Registry,
+    /// Load-accounting + availability layer (§9).
+    pub(crate) load: LoadIndex,
+    /// Rate-maintenance layer (§11).
+    pub(crate) rates: RateIndex,
+    /// Structured event sink (sim/trace.rs): every state transition
+    /// records through it.  Off by default — one predicted branch per
+    /// site; install with [`World::set_trace`].
+    pub(crate) trace: TraceSink,
+}
+
+impl World {
+    /// Build the PM fleet + VMs from config.
+    pub fn new(cfg: &SimConfig) -> World {
+        let (hosts, vms) = topology::build_fleet(cfg);
+        let (n_hosts, n_vms) = (hosts.len(), vms.len());
+        World {
+            now: 0.0,
+            hosts,
+            vms,
+            reserved_util: cfg.reserved_util,
+            latest_m_h: Vec::new(),
+            completed_log: Vec::new(),
+            reference_scans: cfg.reference_scans,
+            registry: Registry::new(),
+            load: LoadIndex::new(n_hosts, n_vms),
+            rates: RateIndex::new(),
+            trace: TraceSink::default(),
+        }
+    }
+
+    // -------------------------------------------------------- observability
+
+    /// Install an event sink; subsequent state transitions are recorded.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// Remove and return the sink (leaves tracing off).
+    pub fn take_trace(&mut self) -> TraceSink {
+        std::mem::take(&mut self.trace)
+    }
+
+    /// Events collected so far (in-memory sinks; empty otherwise).
+    pub fn trace_events(&self) -> &[Event] {
+        self.trace.events()
+    }
+
+    /// Record an event through the sink.  The closure runs only when
+    /// tracing is enabled; it may capture any non-`World` state (the
+    /// engine records decision events through this without borrowing the
+    /// rest of the world).
+    #[inline(always)]
+    pub fn trace_record(&mut self, f: impl FnOnce() -> Event) {
+        self.trace.record(f);
+    }
+
+    // ---------------------------------------------------------- invariants
+
+    /// Cross-check every incremental index against a from-scratch O(total)
+    /// recount, layer by layer (each layer's check lives next to the state
+    /// it guards).  Panics (with a description) on any drift.  Test/debug
+    /// only — this is intentionally the full scan the indexes replace.
+    pub fn assert_consistent(&self) {
+        // §3: membership sets, per-job counters, clone map, placement
+        // residency.
+        self.assert_registry_consistent();
+        // §11: finish-heap coverage, down_stale parking, bitwise rate
+        // recount (skipped while dirty / in reference mode).
+        self.assert_rates_consistent();
+        // §9: load caches bitwise, host task counters, availability set
+        // (maintained only in indexed mode).
+        if !self.reference_scans {
+            self.assert_loads_consistent();
+        }
+    }
+}

@@ -1,0 +1,482 @@
+//! Lazy execution-rate maintenance (DESIGN.md §11): dirty-host sets,
+//! epoch-stamped per-task rates, the generation-stamped finish-time heap,
+//! and exact piecewise-linear time advancement.
+//!
+//! Owns the invariant that **every maintained rate equals a from-scratch
+//! reference recompute, bitwise**: each task's rate is
+//! `nominal * scale / slowdown` where `nominal = min(demand, fair_share)
+//! .max(1.0)` and `scale = (capacity / demand).min(1.0)` over host-local
+//! state only, so re-rating just the dirty hosts writes the same bits a
+//! full pass would.  `reference_scans` mode keeps the seed's global
+//! recompute alive as the parity oracle.
+
+use crate::sim::types::*;
+use crate::sim::world::ids::{Arena, IdSet};
+use crate::sim::world::World;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Total-ordered f64 wrapper for heap keys (etas are never NaN).
+#[derive(Clone, Copy, PartialEq)]
+pub(super) struct EtaKey(pub(super) f64);
+
+impl Eq for EtaKey {}
+
+impl PartialOrd for EtaKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EtaKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Per-task execution rates + the staleness machinery that keeps them
+/// lazily correct.
+pub(super) struct RateIndex {
+    /// Per-task execution rate in MI/s (slowdown already applied);
+    /// recomputed lazily from the dirty-host set.  Entries are valid only
+    /// when their stamp matches the current epoch — this avoids the
+    /// O(total) zero-fill the seed engine paid on every recompute.  In
+    /// indexed mode the epoch never moves (host-local recompute stamps
+    /// the current epoch and invalidates by writing stamp 0, which is
+    /// below the initial epoch); only the reference full pass bumps it.
+    pub(super) rate: Arena<TaskId, f64>,
+    pub(super) stamp: Arena<TaskId, u64>,
+    pub(super) epoch: u64,
+    /// Hosts whose resident rates are stale (DESIGN.md §11): every
+    /// rate-affecting mutation marks only the host(s) it touched, and
+    /// `recompute_dirty_hosts` re-runs the exact reference arithmetic for
+    /// just those hosts.  `all_dirty` is the coarse fallback
+    /// (`mark_rates_dirty`, and the only flavor reference mode uses — it
+    /// keeps the seed's global recompute alive as the oracle).
+    pub(super) dirty_hosts: IdSet<HostId>,
+    pub(super) all_dirty: bool,
+    /// Hosts that were down at their last recompute: their residents
+    /// carry no rate.  Matching the seed semantics — where recovery alone
+    /// never triggers a recompute — they are re-rated only when the
+    /// *next* recompute (caused by some other dirty event) observes them
+    /// up.
+    pub(super) down_stale: IdSet<HostId>,
+    /// Min-heap of (projected absolute finish time, task, generation)
+    /// over running tasks with positive rate.  Never cleared wholesale:
+    /// each host-local recompute pushes fresh entries (with a bumped
+    /// per-task generation stamp) for the tasks it re-rated, and
+    /// consumers pop-and-discard entries whose stamp no longer matches
+    /// `heap_gen` — the same lazy-invalidation discipline as the §9
+    /// availability wake heap.  Etas are time-invariant under constant
+    /// rates, and are always re-derived from live task state at the peek
+    /// site.
+    pub(super) finish_heap: BinaryHeap<Reverse<(EtaKey, TaskId, u64)>>,
+    /// Current finish-heap generation per task; bumped on every re-rate
+    /// and on unplacement, so older heap entries become stale.
+    pub(super) heap_gen: Arena<TaskId, u64>,
+}
+
+impl RateIndex {
+    pub(super) fn new() -> RateIndex {
+        RateIndex {
+            rate: Arena::new(),
+            stamp: Arena::new(),
+            epoch: 1,
+            dirty_hosts: IdSet::new(),
+            all_dirty: true,
+            down_stale: IdSet::new(),
+            finish_heap: BinaryHeap::new(),
+            heap_gen: Arena::new(),
+        }
+    }
+}
+
+impl World {
+    /// Whether any rate is stale (the old single `rates_dirty` bit).
+    /// `down_stale` alone does **not** count: host recovery never
+    /// triggers a recompute (seed semantics) — recovered hosts are swept
+    /// up by the next recompute some other dirty event causes.
+    fn rates_dirty(&self) -> bool {
+        self.rates.all_dirty || !self.rates.dirty_hosts.is_empty()
+    }
+
+    /// Mark one host's resident rates stale.  Reference mode collapses to
+    /// the seed's single dirty bit (global recompute).
+    pub(super) fn mark_host_rates_dirty(&mut self, host: HostId) {
+        if self.reference_scans {
+            self.rates.all_dirty = true;
+        } else {
+            self.rates.dirty_hosts.insert(host);
+        }
+    }
+
+    /// Recompute stale rates before a rate-dependent query.  Reference
+    /// mode runs the seed-faithful global pass; indexed mode re-rates
+    /// only the dirty hosts.
+    fn recompute_if_dirty(&mut self) {
+        if !self.rates_dirty() {
+            return;
+        }
+        if self.reference_scans {
+            self.recompute_rates_reference();
+        } else {
+            self.recompute_dirty_hosts();
+        }
+    }
+
+    /// Seed-faithful global recompute (reference mode only): O(total)
+    /// zero-fill plus a full-fleet pass in host/VM/task order, bumping
+    /// the validity epoch so every stamp from earlier passes goes stale.
+    ///
+    /// Model: each task's fair demand on its VM is
+    /// `min(demand.mips, vm.mips / n_tasks)`; a host whose aggregate VM
+    /// demand exceeds its effective capacity (after background + reserved
+    /// load) scales every resident task proportionally — this is the
+    /// resource-contention mechanism (Eq. 9's "overloaded" condition).
+    // Index loops are deliberate: they split borrows across `hosts`/
+    // `vms`/`tasks`/`rates` fields, which iterator chains cannot.
+    #[allow(clippy::needless_range_loop)]
+    fn recompute_rates_reference(&mut self) {
+        self.rates.epoch += 1;
+        let epoch = self.rates.epoch;
+        // Seed-faithful O(total) zero-fill; the indexed path instead
+        // invalidates by stamp so dead tasks cost nothing.
+        for r in self.rates.rate.iter_mut() {
+            *r = 0.0;
+        }
+        // Reference mode answers `next_finish_time` by full scan, so it
+        // must not pay (or rely on) heap upkeep.
+        self.rates.finish_heap.clear();
+        for hi in 0..self.hosts.len() {
+            let h = HostId::new(hi);
+            let host = &self.hosts[h];
+            if !host.is_up(self.now) {
+                continue;
+            }
+            let demand: f64 = host.vms.iter().map(|&v| self.vm_demand(v)).sum();
+            if demand <= 0.0 {
+                continue;
+            }
+            let capacity = host.effective_mips(self.reserved_util);
+            let scale = (capacity / demand).min(1.0);
+            for vi in 0..self.hosts[h].vms.len() {
+                let v = self.hosts[h].vms[vi];
+                let vm = &self.vms[v];
+                let n = vm.tasks.len().max(1) as f64;
+                let fair = vm.mips / n;
+                for ti in 0..self.vms[v].tasks.len() {
+                    let t = self.vms[v].tasks[ti];
+                    let nominal = self.registry.tasks[t].demand.mips.min(fair).max(1.0);
+                    let rate = nominal * scale / self.registry.tasks[t].slowdown;
+                    self.rates.rate[t] = rate;
+                    self.rates.stamp[t] = epoch;
+                }
+            }
+        }
+        self.rates.all_dirty = false;
+        self.rates.dirty_hosts.clear();
+    }
+
+    /// Host-local recompute (DESIGN.md §11): re-run the reference
+    /// arithmetic for exactly the dirty hosts — plus recovered
+    /// `down_stale` hosts — and push fresh generation-stamped finish-heap
+    /// entries for their running residents.  Rates on untouched hosts
+    /// (and their live heap entries) are left as the previous pass wrote
+    /// them, which is bit-identical to what a full pass would write: the
+    /// rate arithmetic reads only host-local state, and the §9
+    /// `host_load` demand aggregate is maintained bitwise equal to the
+    /// reference per-VM fold.
+    fn recompute_dirty_hosts(&mut self) {
+        if self.rates.all_dirty {
+            for hi in 0..self.hosts.len() {
+                self.recompute_host(HostId::new(hi));
+            }
+        } else {
+            // Dirty hosts plus recovered hosts whose residents still
+            // carry stale zero rates; ascending id — the full-pass host
+            // order.
+            let mut targets = self.rates.dirty_hosts.to_vec();
+            for i in 0..self.rates.down_stale.len() {
+                let h = self.rates.down_stale.as_slice()[i];
+                if self.hosts[h].is_up(self.now) && !self.rates.dirty_hosts.contains(h) {
+                    targets.push(h);
+                }
+            }
+            targets.sort_unstable();
+            for h in targets {
+                self.recompute_host(h);
+            }
+        }
+        self.rates.all_dirty = false;
+        self.rates.dirty_hosts.clear();
+        self.compact_finish_heap();
+    }
+
+    /// Re-rate one host with the exact reference arithmetic (same
+    /// expressions, same `host.vms`/`vm.tasks` fold order).  Down hosts
+    /// contribute no rate: their residents' stamps are invalidated and
+    /// the host parks in `down_stale` until a later recompute sees it up.
+    #[allow(clippy::needless_range_loop)]
+    fn recompute_host(&mut self, h: HostId) {
+        if !self.hosts[h].is_up(self.now) {
+            for vi in 0..self.hosts[h].vms.len() {
+                let v = self.hosts[h].vms[vi];
+                for ti in 0..self.vms[v].tasks.len() {
+                    let t = self.vms[v].tasks[ti];
+                    self.rates.stamp[t] = 0;
+                    self.rates.heap_gen[t] += 1;
+                }
+            }
+            self.rates.down_stale.insert(h);
+            return;
+        }
+        self.rates.down_stale.remove(h);
+        // §9 aggregate: bitwise equal to the reference per-VM demand fold.
+        let demand = self.load.host[h].mips;
+        if demand <= 0.0 {
+            // No residents (every resident demands >= 1 MIPS), so there is
+            // nothing to re-rate or invalidate.
+            return;
+        }
+        let capacity = self.hosts[h].effective_mips(self.reserved_util);
+        let scale = (capacity / demand).min(1.0);
+        let now = self.now;
+        let epoch = self.rates.epoch;
+        for vi in 0..self.hosts[h].vms.len() {
+            let v = self.hosts[h].vms[vi];
+            let n = self.vms[v].tasks.len().max(1) as f64;
+            let fair = self.vms[v].mips / n;
+            for ti in 0..self.vms[v].tasks.len() {
+                let t = self.vms[v].tasks[ti];
+                let nominal = self.registry.tasks[t].demand.mips.min(fair).max(1.0);
+                let rate = nominal * scale / self.registry.tasks[t].slowdown;
+                self.rates.rate[t] = rate;
+                self.rates.stamp[t] = epoch;
+                if rate > 0.0 && self.registry.tasks[t].is_running() {
+                    self.rates.heap_gen[t] += 1;
+                    let gen = self.rates.heap_gen[t];
+                    let eta = now + self.registry.tasks[t].remaining_mi / rate;
+                    self.rates.finish_heap.push(Reverse((EtaKey(eta), t, gen)));
+                }
+            }
+        }
+    }
+
+    /// Deterministic size bound on the lazily-invalidated finish heap:
+    /// when stale entries outnumber live ones ~4:1, rebuild from the live
+    /// set (stored etas kept verbatim).  Triggered by sim state only —
+    /// never wall clock — so replays and the parity contract are
+    /// unaffected.
+    fn compact_finish_heap(&mut self) {
+        if self.rates.finish_heap.len() <= 64 + 4 * self.registry.running.len() {
+            return;
+        }
+        let live: Vec<_> = std::mem::take(&mut self.rates.finish_heap)
+            .into_vec()
+            .into_iter()
+            .filter(|&Reverse((_, t, gen))| {
+                self.rates.heap_gen[t] == gen
+                    && self.registry.tasks[t].is_running()
+                    && self.rate_of(t) > 0.0
+            })
+            .collect();
+        self.rates.finish_heap = BinaryHeap::from(live);
+    }
+
+    /// Rate of a task under the current epoch (0 if not computed = idle,
+    /// dead, or on a down host).
+    pub(super) fn rate_of(&self, task: TaskId) -> f64 {
+        match self.rates.stamp.get(task) {
+            Some(&s) if s == self.rates.epoch => self.rates.rate[task],
+            _ => 0.0,
+        }
+    }
+
+    /// Force a full rate recomputation on next use.  The typed mutators
+    /// self-mark the hosts they touch, so this coarse fallback is only
+    /// for callers that mutated rate inputs outside the typed surface.
+    pub fn mark_rates_dirty(&mut self) {
+        self.rates.all_dirty = true;
+    }
+
+    /// Current rate of a task (MI/s).
+    pub fn task_rate(&mut self, task: TaskId) -> f64 {
+        self.recompute_if_dirty();
+        self.rate_of(task)
+    }
+
+    /// Earliest projected completion time among running tasks.
+    ///
+    /// Indexed mode peeks the lazy finish-time heap (O(1) when rates are
+    /// clean); the returned eta is always re-derived from the task's live
+    /// remaining work so both modes share one arithmetic definition (and
+    /// `advance` is guaranteed to make progress — a cached value could
+    /// land an ulp short of the completion threshold and stall the loop).
+    ///
+    /// Caveat: the heap orders by etas cached at recompute time.  Etas
+    /// are time-invariant under clean rates in exact arithmetic, but if
+    /// time advanced since the rebuild (fault events that do not touch
+    /// rates), two etas within a few ulps of each other could rank
+    /// differently than a fresh scan.  Candidate etas derive from
+    /// independent continuous draws (Pareto slowdowns, normal task
+    /// sizes), so such near-ties have effectively zero measure; the
+    /// parity suite runs both modes across seeds/fault-rates to back this
+    /// empirically.
+    pub fn next_finish_time(&mut self) -> Option<f64> {
+        self.recompute_if_dirty();
+        if self.reference_scans {
+            let now = self.now;
+            let mut best: Option<f64> = None;
+            for ti in 0..self.registry.tasks.len() {
+                let t = TaskId::new(ti);
+                if self.registry.tasks[t].is_running() {
+                    let rate = self.rate_of(t);
+                    if rate > 0.0 {
+                        let eta = now + self.registry.tasks[t].remaining_mi / rate;
+                        best = Some(match best {
+                            Some(b) => b.min(eta),
+                            None => eta,
+                        });
+                    }
+                }
+            }
+            return best;
+        }
+        // Lazy invalidation: discard entries whose generation stamp is
+        // stale (task re-rated, unplaced, or its host went down since the
+        // push); the first live entry is the minimum.
+        while let Some(&Reverse((_, t, gen))) = self.rates.finish_heap.peek() {
+            if self.rates.heap_gen[t] == gen && self.registry.tasks[t].is_running() {
+                let rate = self.rate_of(t);
+                if rate > 0.0 {
+                    return Some(self.now + self.registry.tasks[t].remaining_mi / rate);
+                }
+            }
+            self.rates.finish_heap.pop();
+        }
+        None
+    }
+
+    /// Advance simulated time to `to`, consuming work on all running
+    /// tasks.  Returns tasks whose remaining work reached zero, in
+    /// ascending id order.
+    #[allow(clippy::needless_range_loop)]
+    pub fn advance(&mut self, to: f64) -> Vec<TaskId> {
+        debug_assert!(to >= self.now - 1e-9, "time must be monotone");
+        self.recompute_if_dirty();
+        let dt = (to - self.now).max(0.0);
+        self.now = to;
+        // Re-admit VMs whose ready/recovery time has now passed.  `now`
+        // only moves here, so the availability index is exact at every
+        // query point.
+        self.sync_availability();
+        if dt == 0.0 {
+            return Vec::new();
+        }
+        let mut done = Vec::new();
+        if self.reference_scans {
+            for ti in 0..self.registry.tasks.len() {
+                let t = TaskId::new(ti);
+                if self.registry.tasks[t].is_running() {
+                    let rate = self.rate_of(t);
+                    if rate > 0.0 {
+                        self.registry.tasks[t].remaining_mi -= rate * dt;
+                        if self.registry.tasks[t].remaining_mi <= 1e-6 {
+                            done.push(t);
+                        }
+                    }
+                }
+            }
+        } else {
+            // The running set iterates in ascending id order (it is kept
+            // sorted), and per-task updates are independent, so `done`
+            // comes out ascending with no post-sort — same order the
+            // reference scan produces.
+            for i in 0..self.registry.running.len() {
+                let t = self.registry.running.as_slice()[i];
+                let rate = self.rate_of(t);
+                if rate > 0.0 {
+                    self.registry.tasks[t].remaining_mi -= rate * dt;
+                    if self.registry.tasks[t].remaining_mi <= 1e-6 {
+                        done.push(t);
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    /// Layer check (§11): live finish-heap entries must cover exactly the
+    /// running-with-rate set, down hosts must be parked in `down_stale`
+    /// with unrated residents, and every maintained rate must equal a
+    /// from-scratch reference recompute **bitwise**.  Skipped while rates
+    /// are dirty (they are lazily recomputed at the next rate query) and
+    /// in reference mode (no maintained state to check).
+    pub(super) fn assert_rates_consistent(&self) {
+        if self.rates_dirty() || self.reference_scans {
+            return;
+        }
+        // Live heap entries (generation stamp current) must cover
+        // exactly the running-with-rate set, with no duplicates.
+        let mut heap_ids: Vec<TaskId> = self
+            .rates
+            .finish_heap
+            .iter()
+            .filter(|Reverse((_, t, gen))| self.rates.heap_gen[*t] == *gen)
+            .map(|Reverse((_, t, _))| *t)
+            .collect();
+        heap_ids.sort_unstable();
+        assert!(
+            heap_ids.windows(2).all(|p| p[0] != p[1]),
+            "duplicate live finish-heap entries"
+        );
+        let expect: Vec<TaskId> =
+            self.registry.running.iter().filter(|&t| self.rate_of(t) > 0.0).collect();
+        assert_eq!(heap_ids, expect, "finish-heap membership drift");
+        // Tentpole invariant (§11): every maintained rate must equal a
+        // from-scratch reference recompute, bitwise.  Hosts parked in
+        // `down_stale` (down, or recovered but not yet re-rated) instead
+        // carry no rate at all.
+        for hi in 0..self.hosts.len() {
+            let h = HostId::new(hi);
+            if !self.hosts[h].is_up(self.now) {
+                assert!(
+                    self.rates.down_stale.contains(h),
+                    "down host {h} missing from down_stale"
+                );
+            }
+            if self.rates.down_stale.contains(h) {
+                for &v in &self.hosts[h].vms {
+                    for &t in &self.vms[v].tasks {
+                        assert_eq!(
+                            self.rate_of(t),
+                            0.0,
+                            "stale-down host {h}: task {t} still rated"
+                        );
+                    }
+                }
+                continue;
+            }
+            let demand: f64 =
+                self.hosts[h].vms.iter().map(|&v| self.compute_vm_load(v).mips).sum();
+            if demand <= 0.0 {
+                continue;
+            }
+            let capacity = self.hosts[h].effective_mips(self.reserved_util);
+            let scale = (capacity / demand).min(1.0);
+            for &v in &self.hosts[h].vms {
+                let n = self.vms[v].tasks.len().max(1) as f64;
+                let fair = self.vms[v].mips / n;
+                for &t in &self.vms[v].tasks {
+                    let nominal = self.registry.tasks[t].demand.mips.min(fair).max(1.0);
+                    let expect_rate = nominal * scale / self.registry.tasks[t].slowdown;
+                    assert!(
+                        self.rate_of(t).to_bits() == expect_rate.to_bits(),
+                        "host {h} task {t} rate drift: cached {} recount {expect_rate}",
+                        self.rate_of(t)
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,591 @@
+//! The index-maintained entity registry (DESIGN.md §3): task/job arenas,
+//! state-membership sets, per-job active counters, the speculative-clone
+//! map, and every task lifecycle transition.
+//!
+//! Owns the invariant that **membership indexes never drift from task
+//! state**: the arenas are private and every state change funnels through
+//! `set_task_state`, which keeps `pending`/`running`/`held`, the per-job
+//! active-task counters, and the clone map in lockstep.  Queries
+//! (`pending()`, `running()`, `held()`, `active_jobs()`) borrow the
+//! always-sorted sets directly — O(1), zero-alloc — while
+//! `reference_scans` mode re-derives each answer with the seed's O(total)
+//! full scan as the parity oracle.
+
+use crate::sim::trace::{Event, LifeState};
+use crate::sim::types::*;
+use crate::sim::world::ids::{Arena, IdSet};
+use crate::sim::world::World;
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+/// Entity arenas + state-membership indexes.
+pub(super) struct Registry {
+    pub(super) tasks: Arena<TaskId, Task>,
+    pub(super) jobs: Arena<JobId, Job>,
+    pub(super) pending: IdSet<TaskId>,
+    pub(super) running: IdSet<TaskId>,
+    pub(super) held: IdSet<TaskId>,
+    pub(super) active_jobs: IdSet<JobId>,
+    /// Tasks in an active state (pending/running/held) per job.
+    pub(super) job_active_tasks: Arena<JobId, usize>,
+    /// Active speculative copies, fleet-wide.
+    pub(super) live_clones: usize,
+    /// original task → its (single) live speculative clone.
+    pub(super) active_clone: HashMap<TaskId, TaskId>,
+}
+
+impl Registry {
+    pub(super) fn new() -> Registry {
+        Registry {
+            tasks: Arena::new(),
+            jobs: Arena::new(),
+            pending: IdSet::new(),
+            running: IdSet::new(),
+            held: IdSet::new(),
+            active_jobs: IdSet::new(),
+            job_active_tasks: Arena::new(),
+            live_clones: 0,
+            active_clone: HashMap::new(),
+        }
+    }
+}
+
+impl World {
+    /// Register a new task (id must be `n_tasks()`); indexes it by state.
+    pub fn add_task(&mut self, t: Task) -> TaskId {
+        let id = TaskId::new(self.registry.tasks.len());
+        debug_assert_eq!(t.id, id, "task ids are dense");
+        if t.job.raw() >= self.registry.job_active_tasks.len() {
+            self.registry.job_active_tasks.resize(t.job.raw() + 1, 0);
+        }
+        let job = t.job;
+        let active = t.is_active();
+        let spec_of = t.speculative_of;
+        let now = self.now;
+        let submit_t = t.submit_t;
+        let life = match t.state {
+            TaskState::Pending => LifeState::Pending,
+            TaskState::Running => LifeState::Running,
+            TaskState::Held { .. } => LifeState::Held,
+            TaskState::Completed { .. } | TaskState::Killed => LifeState::Done,
+        };
+        self.trace.record(|| Event::TaskAdmit {
+            t: now,
+            task: id,
+            job,
+            submit_t,
+            speculative_of: spec_of,
+            state: life,
+        });
+        self.registry.tasks.push(t);
+        // Per-task rate/heap bookkeeping stays dense with the arena, so
+        // targeted invalidation never has to bounds-check or resize.
+        self.rates.rate.push(0.0);
+        self.rates.stamp.push(0);
+        self.rates.heap_gen.push(0);
+        if active {
+            self.registry.job_active_tasks[job] += 1;
+            if let Some(orig) = spec_of {
+                debug_assert!(
+                    !self.registry.active_clone.contains_key(&orig),
+                    "task {orig} already has a live clone"
+                );
+                self.registry.live_clones += 1;
+                self.registry.active_clone.insert(orig, id);
+            }
+        }
+        self.index_enter_state(id);
+        id
+    }
+
+    /// Register a new job (id must be `n_jobs()`).
+    pub fn add_job(&mut self, j: Job) -> JobId {
+        let id = JobId::new(self.registry.jobs.len());
+        debug_assert_eq!(j.id, id, "job ids are dense");
+        if id.raw() >= self.registry.job_active_tasks.len() {
+            self.registry.job_active_tasks.resize(id.raw() + 1, 0);
+        }
+        let active = j.is_active();
+        let now = self.now;
+        self.trace.record(|| Event::JobAdmit {
+            t: now,
+            job: id,
+            tasks: j.tasks.clone(),
+            deadline_driven: j.deadline_driven,
+            sla_weight: j.sla_weight,
+        });
+        self.registry.jobs.push(j);
+        if active {
+            self.registry.active_jobs.insert(id);
+        }
+        id
+    }
+
+    /// Mark a job done at the current time (all tasks completed).
+    pub fn finish_job(&mut self, job: JobId) {
+        if self.registry.jobs[job].is_active() {
+            self.registry.jobs[job].state = JobState::Done { t: self.now };
+            self.registry.active_jobs.remove(job);
+            let now = self.now;
+            self.trace.record(|| Event::JobDone { t: now, job });
+        }
+    }
+
+    /// Record a mitigation action against a task (prediction scoring).
+    pub fn mark_mitigated(&mut self, task: TaskId) {
+        self.registry.tasks[task].mitigated = true;
+    }
+
+    /// Set the ground-truth Pareto parameters sampled at submission.
+    pub fn set_job_ground_truth(&mut self, job: JobId, alpha: f64, beta: f64) {
+        self.registry.jobs[job].true_alpha = alpha;
+        self.registry.jobs[job].true_beta = beta;
+    }
+
+    /// Set a job's absolute SLA deadline.
+    pub fn set_job_sla_deadline(&mut self, job: JobId, deadline: f64) {
+        self.registry.jobs[job].sla_deadline = deadline;
+        let now = self.now;
+        self.trace.record(|| Event::JobSla { t: now, job, deadline });
+    }
+
+    fn index_enter_state(&mut self, id: TaskId) {
+        match self.registry.tasks[id].state {
+            TaskState::Pending => {
+                self.registry.pending.insert(id);
+            }
+            TaskState::Running => {
+                self.registry.running.insert(id);
+            }
+            TaskState::Held { .. } => {
+                self.registry.held.insert(id);
+            }
+            _ => {}
+        }
+    }
+
+    fn index_leave_state(&mut self, id: TaskId) {
+        match self.registry.tasks[id].state {
+            TaskState::Pending => {
+                self.registry.pending.remove(id);
+            }
+            TaskState::Running => {
+                self.registry.running.remove(id);
+            }
+            TaskState::Held { .. } => {
+                self.registry.held.remove(id);
+            }
+            _ => {}
+        }
+    }
+
+    /// The single choke point for task state changes: keeps the membership
+    /// sets, per-job counters and clone map consistent.
+    fn set_task_state(&mut self, id: TaskId, state: TaskState) {
+        let was_active = self.registry.tasks[id].is_active();
+        self.index_leave_state(id);
+        self.registry.tasks[id].state = state;
+        self.index_enter_state(id);
+        let is_active = self.registry.tasks[id].is_active();
+        if was_active == is_active {
+            return;
+        }
+        let job = self.registry.tasks[id].job;
+        if is_active {
+            self.registry.job_active_tasks[job] += 1;
+        } else {
+            self.registry.job_active_tasks[job] -= 1;
+        }
+        if let Some(orig) = self.registry.tasks[id].speculative_of {
+            if is_active {
+                debug_assert!(!self.registry.active_clone.contains_key(&orig));
+                self.registry.live_clones += 1;
+                self.registry.active_clone.insert(orig, id);
+            } else {
+                self.registry.live_clones -= 1;
+                if self.registry.active_clone.get(&orig) == Some(&id) {
+                    self.registry.active_clone.remove(&orig);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Read a task.
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.registry.tasks[id]
+    }
+
+    /// Read a job.
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.registry.jobs[id]
+    }
+
+    /// Total tasks ever created (dense id space).
+    pub fn n_tasks(&self) -> usize {
+        self.registry.tasks.len()
+    }
+
+    /// Total jobs ever created (dense id space).
+    pub fn n_jobs(&self) -> usize {
+        self.registry.jobs.len()
+    }
+
+    /// Pending tasks, ascending id (the placement queue).  Borrows the
+    /// membership set — callers that mutate the world mid-walk own a
+    /// snapshot first via `.to_vec()`/`.into_owned()`.
+    pub fn pending(&self) -> Cow<'_, [TaskId]> {
+        if self.reference_scans {
+            return Cow::Owned(
+                self.registry
+                    .tasks
+                    .iter()
+                    .filter(|t| t.state == TaskState::Pending)
+                    .map(|t| t.id)
+                    .collect(),
+            );
+        }
+        Cow::Borrowed(self.registry.pending.as_slice())
+    }
+
+    /// Running tasks, ascending id.
+    pub fn running(&self) -> Cow<'_, [TaskId]> {
+        if self.reference_scans {
+            return Cow::Owned(
+                self.registry.tasks.iter().filter(|t| t.is_running()).map(|t| t.id).collect(),
+            );
+        }
+        Cow::Borrowed(self.registry.running.as_slice())
+    }
+
+    /// Held (Wrangler-delayed) tasks, ascending id.
+    pub fn held(&self) -> Cow<'_, [TaskId]> {
+        if self.reference_scans {
+            return Cow::Owned(
+                self.registry
+                    .tasks
+                    .iter()
+                    .filter(|t| matches!(t.state, TaskState::Held { .. }))
+                    .map(|t| t.id)
+                    .collect(),
+            );
+        }
+        Cow::Borrowed(self.registry.held.as_slice())
+    }
+
+    /// Jobs still active, ascending id.
+    pub fn active_jobs(&self) -> Cow<'_, [JobId]> {
+        if self.reference_scans {
+            return Cow::Owned(
+                self.registry.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect(),
+            );
+        }
+        Cow::Borrowed(self.registry.active_jobs.as_slice())
+    }
+
+    /// Whether any job is still active (the drain-loop check).
+    pub fn has_active_jobs(&self) -> bool {
+        if self.reference_scans {
+            return self.registry.jobs.iter().any(|j| j.is_active());
+        }
+        !self.registry.active_jobs.is_empty()
+    }
+
+    /// Number of active jobs.
+    pub fn active_job_count(&self) -> usize {
+        if self.reference_scans {
+            return self.registry.jobs.iter().filter(|j| j.is_active()).count();
+        }
+        self.registry.active_jobs.len()
+    }
+
+    /// Number of tasks in an active state (pending/running/held).
+    pub fn active_task_count(&self) -> usize {
+        if self.reference_scans {
+            return self.registry.tasks.iter().filter(|t| t.is_active()).count();
+        }
+        self.registry.pending.len() + self.registry.running.len() + self.registry.held.len()
+    }
+
+    /// Active tasks of one job (counter-backed fast path for emptiness).
+    /// Counts every task carrying the job id — **including live
+    /// speculative clones** — unlike `active_tasks`, which walks the
+    /// job's original task list only.
+    pub fn job_active_count(&self, job: JobId) -> usize {
+        self.registry.job_active_tasks.get(job).copied().unwrap_or(0)
+    }
+
+    /// Live speculative copies fleet-wide (the baselines' clone budgets).
+    pub fn live_clone_count(&self) -> usize {
+        if self.reference_scans {
+            return self
+                .registry
+                .tasks
+                .iter()
+                .filter(|t| t.speculative_of.is_some() && t.is_active())
+                .count();
+        }
+        self.registry.live_clones
+    }
+
+    /// The live speculative clone of `task`, if any.
+    pub fn clone_of(&self, task: TaskId) -> Option<TaskId> {
+        if self.reference_scans {
+            // Clones are appended after their original; scan backwards.
+            return self
+                .registry
+                .tasks
+                .iter()
+                .rev()
+                .find(|t| t.speculative_of == Some(task) && t.is_active())
+                .map(|t| t.id);
+        }
+        self.registry.active_clone.get(&task).copied()
+    }
+
+    /// All tasks, including dead ones.  O(total) — **test/debug escape
+    /// hatch only** (conservation recounts, invariant checks); hot-path
+    /// code must use the set accessors above, which this deliberately
+    /// bypasses.
+    pub fn debug_tasks(&self) -> &[Task] {
+        self.registry.tasks.as_slice()
+    }
+
+    /// All jobs.  O(total) — **test/debug escape hatch only**; see
+    /// `debug_tasks`.
+    pub fn debug_jobs(&self) -> &[Job] {
+        self.registry.jobs.as_slice()
+    }
+
+    /// Active (pending/running/held) tasks of a job — **originals only**
+    /// (speculative clones are not in `Job::tasks`); see
+    /// `job_active_count` for the clone-inclusive counter.  Borrowing
+    /// iterator; collect if you need ownership across mutation.
+    pub fn active_tasks(&self, job: JobId) -> impl Iterator<Item = TaskId> + '_ {
+        self.registry.jobs[job]
+            .tasks
+            .iter()
+            .copied()
+            .filter(move |&t| self.registry.tasks[t].is_active())
+    }
+
+    /// Completed tasks of a job (non-speculative originals count once).
+    pub fn completed_tasks(&self, job: JobId) -> usize {
+        self.registry.jobs[job]
+            .tasks
+            .iter()
+            .filter(|&&t| matches!(self.registry.tasks[t].state, TaskState::Completed { .. }))
+            .count()
+    }
+
+    // --------------------------------------------------------- placement
+
+    /// Start (or restart) a task on a VM.  `slowdown` is the Pareto
+    /// duration multiplier sampled by the caller from the job's
+    /// ground-truth distribution.
+    pub fn start_task(&mut self, task: TaskId, vm: VmId, slowdown: f64) {
+        debug_assert!(self.registry.tasks[task].vm.is_none(), "task already placed");
+        self.set_task_state(task, TaskState::Running);
+        let now = self.now;
+        let t = &mut self.registry.tasks[task];
+        t.vm = Some(vm);
+        t.last_vm = Some(vm);
+        t.slowdown = slowdown.max(1e-3);
+        if t.first_start_t.is_none() {
+            t.first_start_t = Some(now);
+        }
+        self.vms[vm].tasks.push(task);
+        self.mark_host_rates_dirty(self.vms[vm].host);
+        if !self.reference_scans {
+            self.load.host_tasks[self.vms[vm].host] += 1;
+            self.refresh_vm_load(vm);
+        }
+        let sd = self.registry.tasks[task].slowdown;
+        self.trace.record(|| Event::TaskStart { t: now, task, vm, slowdown: sd });
+    }
+
+    /// Remove a task from its VM (completion, kill, restart).
+    pub fn unplace_task(&mut self, task: TaskId) {
+        if let Some(vm) = self.registry.tasks[task].vm.take() {
+            self.vms[vm].tasks.retain(|&t| t != task);
+            self.mark_host_rates_dirty(self.vms[vm].host);
+            // The detached task is no longer rated: the host-local
+            // recompute will not revisit it, so invalidate its stamp here
+            // and retire any finish-heap entry it still has.
+            self.rates.stamp[task] = 0;
+            self.rates.heap_gen[task] += 1;
+            if !self.reference_scans {
+                self.load.host_tasks[self.vms[vm].host] -= 1;
+                self.refresh_vm_load(vm);
+            }
+        }
+    }
+
+    /// Mark a task completed now and detach it.
+    pub fn complete_task(&mut self, task: TaskId) {
+        self.unplace_task(task);
+        self.set_task_state(task, TaskState::Completed { t: self.now });
+        self.registry.tasks[task].remaining_mi = 0.0;
+        self.completed_log.push(task);
+        let now = self.now;
+        self.trace.record(|| Event::TaskComplete { t: now, task });
+    }
+
+    /// Complete a task whose result arrived via its speculative clone: the
+    /// logical task is done but this execution did not itself finish (it
+    /// keeps its residual work and is not appended to the completion log).
+    pub fn complete_superseded(&mut self, task: TaskId) {
+        self.unplace_task(task);
+        self.set_task_state(task, TaskState::Completed { t: self.now });
+        let now = self.now;
+        self.trace.record(|| Event::TaskSuperseded { t: now, task });
+    }
+
+    /// Kill a task (lost race / superseded) and detach it.
+    pub fn kill_task(&mut self, task: TaskId) {
+        self.unplace_task(task);
+        self.set_task_state(task, TaskState::Killed);
+        let now = self.now;
+        self.trace.record(|| Event::TaskKill { t: now, task });
+    }
+
+    /// Reset a task to pending with full work (restart after fault/rerun);
+    /// accumulates restart bookkeeping.
+    pub fn reset_task(&mut self, task: TaskId, restart_penalty_s: f64) {
+        self.unplace_task(task);
+        self.set_task_state(task, TaskState::Pending);
+        let t = &mut self.registry.tasks[task];
+        t.remaining_mi = t.length_mi;
+        t.restarts += 1;
+        t.restart_time += restart_penalty_s;
+        let now = self.now;
+        self.trace.record(|| Event::TaskReset { t: now, task, penalty_s: restart_penalty_s });
+    }
+
+    /// Put a pending task on hold until `until` (Wrangler-style delaying).
+    pub fn hold_task(&mut self, task: TaskId, until: f64) -> bool {
+        if self.registry.tasks[task].state == TaskState::Pending {
+            self.set_task_state(task, TaskState::Held { until });
+            let now = self.now;
+            self.trace.record(|| Event::TaskHold { t: now, task, until });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release held tasks whose hold expired (back to Pending).
+    pub fn release_expired_holds(&mut self) -> usize {
+        let now = self.now;
+        // Both modes share one expiry predicate; only the candidate id
+        // source differs (full scan vs held set), so the parity contract
+        // cannot drift if the epsilon or the Held match ever changes.
+        let is_expired = |t: &Task| match t.state {
+            TaskState::Held { until } => now + 1e-9 >= until,
+            _ => false,
+        };
+        let expired: Vec<TaskId> = if self.reference_scans {
+            self.registry
+                .tasks
+                .enumerate()
+                .filter(|(_, t)| is_expired(t))
+                .map(|(id, _)| id)
+                .collect()
+        } else {
+            self.registry
+                .held
+                .iter()
+                .filter(|&t| is_expired(&self.registry.tasks[t]))
+                .collect()
+        };
+        for &t in &expired {
+            self.set_task_state(t, TaskState::Pending);
+            self.trace.record(|| Event::TaskRelease { t: now, task: t });
+        }
+        expired.len()
+    }
+
+    /// Layer check (§3): recount every membership set, per-job counter,
+    /// and the clone map from a full task scan, and verify placement
+    /// residency (a running task sits on exactly one VM; anything else is
+    /// unplaced and unrated).
+    pub(super) fn assert_registry_consistent(&self) {
+        let mut pend = Vec::new();
+        let mut run = Vec::new();
+        let mut held = Vec::new();
+        let mut job_active = vec![0usize; self.registry.job_active_tasks.len()];
+        let mut clones = 0usize;
+        let mut clone_map: HashMap<TaskId, TaskId> = HashMap::new();
+        for t in self.registry.tasks.iter() {
+            match t.state {
+                TaskState::Pending => pend.push(t.id),
+                TaskState::Running => run.push(t.id),
+                TaskState::Held { .. } => held.push(t.id),
+                _ => {}
+            }
+            if t.is_active() {
+                if t.job.raw() >= job_active.len() {
+                    job_active.resize(t.job.raw() + 1, 0);
+                }
+                job_active[t.job.raw()] += 1;
+                if let Some(orig) = t.speculative_of {
+                    clones += 1;
+                    let prev = clone_map.insert(orig, t.id);
+                    assert!(prev.is_none(), "two live clones of task {orig}");
+                }
+            }
+        }
+        assert_eq!(self.registry.pending.as_slice(), pend, "pending set drift");
+        assert_eq!(self.registry.running.as_slice(), run, "running set drift");
+        assert_eq!(self.registry.held.as_slice(), held, "held set drift");
+        assert_eq!(self.registry.live_clones, clones, "live-clone counter drift");
+        assert_eq!(self.registry.active_clone.len(), clone_map.len(), "clone map size drift");
+        for (orig, clone) in &clone_map {
+            assert_eq!(
+                self.registry.active_clone.get(orig),
+                Some(clone),
+                "clone map drift for task {orig}"
+            );
+        }
+        for (j, &n) in job_active.iter().enumerate() {
+            assert_eq!(
+                self.registry.job_active_tasks.get(JobId::new(j)).copied().unwrap_or(0),
+                n,
+                "active-task counter drift for job {j}"
+            );
+        }
+        let active_jobs: Vec<JobId> =
+            self.registry.jobs.iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+        assert_eq!(self.registry.active_jobs.as_slice(), active_jobs, "active-job set drift");
+        for t in self.registry.tasks.iter() {
+            match t.state {
+                TaskState::Running => {
+                    let vm = t.vm.expect("running task must be placed");
+                    assert_eq!(
+                        self.vms[vm].tasks.iter().filter(|&&x| x == t.id).count(),
+                        1,
+                        "task {} not resident exactly once on vm {vm}",
+                        t.id
+                    );
+                }
+                _ => {
+                    assert!(t.vm.is_none(), "non-running task {} still placed", t.id);
+                    assert_eq!(self.rate_of(t.id), 0.0, "unplaced task {} still rated", t.id);
+                }
+            }
+        }
+        // Membership sets must contain only live states.
+        for t in self.registry.tasks.iter() {
+            if !t.is_active() {
+                assert!(
+                    !self.registry.pending.contains(t.id)
+                        && !self.registry.running.contains(t.id)
+                        && !self.registry.held.contains(t.id),
+                    "dead task {} still indexed",
+                    t.id
+                );
+            }
+        }
+    }
+}

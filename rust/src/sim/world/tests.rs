@@ -1,0 +1,791 @@
+//! World unit + property tests: rate arithmetic, lifecycle indexes,
+//! availability, load aggregates, and the indexed-vs-reference parity
+//! arms (mirror worlds driven through identical op sequences).
+
+use super::*;
+use crate::config::SimConfig;
+use crate::sim::types::{TaskDemand, TaskState};
+use crate::util::ptest;
+
+fn world() -> World {
+    World::new(&SimConfig::test_defaults())
+}
+
+fn vm(n: usize) -> VmId {
+    VmId::new(n)
+}
+
+fn host(n: usize) -> HostId {
+    HostId::new(n)
+}
+
+fn job(n: usize) -> JobId {
+    JobId::new(n)
+}
+
+fn add_task(w: &mut World, job_n: usize, length: f64, mips: f64) -> TaskId {
+    let id = TaskId::new(w.n_tasks());
+    w.add_task(Task {
+        id,
+        job: JobId::new(job_n),
+        length_mi: length,
+        demand: TaskDemand { mips, ram_gb: 0.1, disk_gb: 1.0, bw_kbps: 0.1 },
+        state: TaskState::Pending,
+        vm: None,
+        last_vm: None,
+        remaining_mi: length,
+        submit_t: 0.0,
+        first_start_t: None,
+        restart_time: 0.0,
+        restarts: 0,
+        slowdown: 1.0,
+        speculative_of: None,
+        mitigated: false,
+    })
+}
+
+fn mk_job(n: usize, tasks: Vec<TaskId>, deadline_driven: bool) -> Job {
+    Job {
+        id: JobId::new(n),
+        tasks,
+        submit_t: 0.0,
+        deadline_driven,
+        sla_deadline: 1e9,
+        sla_weight: 1.0,
+        state: JobState::Active,
+        true_alpha: 2.0,
+        true_beta: 1.0,
+    }
+}
+
+#[test]
+fn fleet_construction_matches_config() {
+    let cfg = SimConfig::test_defaults();
+    let w = World::new(&cfg);
+    assert_eq!(w.hosts.len(), cfg.total_pms());
+    assert_eq!(w.vms.len(), cfg.total_vms());
+    // every VM belongs to its host's list exactly once
+    for v in &w.vms {
+        assert!(w.hosts[v.host].vms.contains(&v.id));
+    }
+}
+
+#[test]
+fn uncontended_task_runs_at_demand_rate() {
+    let mut w = world();
+    let t = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(t, vm(0), 1.0);
+    let rate = w.task_rate(t);
+    assert!((rate - 100.0).abs() < 1e-9, "rate {rate}");
+    let done = w.advance(10.0);
+    assert_eq!(done, vec![t]);
+}
+
+#[test]
+fn slowdown_divides_rate() {
+    let mut w = world();
+    let t = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(t, vm(0), 4.0);
+    assert!((w.task_rate(t) - 25.0).abs() < 1e-9);
+}
+
+#[test]
+fn vm_fair_share_caps_rate() {
+    let mut w = world();
+    let vm_mips = w.vms[vm(0)].mips;
+    let t1 = add_task(&mut w, 0, 1e6, 1e9);
+    let t2 = add_task(&mut w, 0, 1e6, 1e9);
+    w.start_task(t1, vm(0), 1.0);
+    w.start_task(t2, vm(0), 1.0);
+    let r1 = w.task_rate(t1);
+    assert!((r1 - vm_mips / 2.0).abs() < 1e-6, "r1 {r1} vm {vm_mips}");
+}
+
+#[test]
+fn host_contention_scales_down() {
+    let mut w = world();
+    let h = host(0);
+    // Saturate every VM on host 0 with one huge-demand task.
+    let vms: Vec<_> = w.hosts[h].vms.clone();
+    let mut tasks = Vec::new();
+    for &v in &vms {
+        let t = add_task(&mut w, 0, 1e9, 1e9);
+        w.start_task(t, v, 1.0);
+        tasks.push(t);
+    }
+    // Also background load to force capacity below demand.
+    w.set_background_load(h, 0.5);
+    let total_rate: f64 = tasks.iter().map(|&t| w.task_rate(t)).sum();
+    let cap = w.hosts[h].effective_mips(0.0);
+    assert!(total_rate <= cap * 1.001, "total {total_rate} cap {cap}");
+    assert!(w.host_cpu_util(h) >= 0.99);
+}
+
+#[test]
+fn advance_is_exact_piecewise() {
+    let mut w = world();
+    let t = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(t, vm(0), 1.0);
+    w.advance(3.0);
+    assert!((w.task(t).remaining_mi - 700.0).abs() < 1e-9);
+    assert!((w.task(t).progress() - 0.3).abs() < 1e-9);
+    let eta = w.next_finish_time().unwrap();
+    assert!((eta - 10.0).abs() < 1e-9);
+}
+
+#[test]
+fn down_host_contributes_no_rate() {
+    let mut w = world();
+    let t = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(t, vm(0), 1.0);
+    let h = w.vms[vm(0)].host;
+    // `set_host_down` self-marks the host dirty — no manual
+    // `mark_rates_dirty` needed.
+    w.set_host_down(h, 1e9);
+    assert_eq!(w.task_rate(t), 0.0);
+    assert!(w.next_finish_time().is_none());
+    w.assert_consistent();
+}
+
+#[test]
+fn availability_index_tracks_downtime_and_readiness() {
+    let mut w = world();
+    let n = w.vms.len();
+    assert_eq!(w.available_vms().len(), n, "all VMs available at t=0");
+
+    // Host goes down: its VMs leave the candidate list immediately.
+    let h = w.vms[vm(0)].host;
+    let on_host = w.hosts[h].vms.len();
+    w.set_host_down(h, 40.0);
+    assert_eq!(w.available_vms().len(), n - on_host);
+    assert!(!w.vm_available(vm(0)));
+    w.assert_consistent();
+
+    // A VM elsewhere becomes unready.
+    let other = *w.hosts[host(h.raw() + 1)].vms.first().unwrap();
+    w.set_vm_ready_at(other, 25.0);
+    assert_eq!(w.available_vms().len(), n - on_host - 1);
+    w.assert_consistent();
+
+    // Advancing past the wake times re-admits, in ascending id order.
+    w.advance(30.0);
+    assert!(w.vm_available(other));
+    assert_eq!(w.available_vms().len(), n - on_host);
+    w.advance(45.0);
+    let avail = w.available_vms().into_owned();
+    assert_eq!(avail.len(), n);
+    assert!(avail.windows(2).all(|p| p[0] < p[1]), "ascending order");
+    w.assert_consistent();
+}
+
+#[test]
+fn overlapping_host_faults_keep_latest_recovery() {
+    let mut w = world();
+    let h = w.vms[vm(0)].host;
+    // Second fault extends the outage; the first wake entry is stale.
+    w.set_host_down(h, 20.0);
+    w.set_host_down(h, 60.0);
+    w.advance(25.0);
+    assert!(!w.vm_available(vm(0)), "stale wake must not re-admit");
+    w.assert_consistent();
+    // And a shortened outage re-admits at the earlier time.
+    w.set_host_down(h, 30.0);
+    w.advance(31.0);
+    assert!(w.vm_available(vm(0)));
+    w.assert_consistent();
+}
+
+#[test]
+fn load_aggregates_match_reference_arithmetic() {
+    let mut w = world();
+    let mut r = world();
+    r.reference_scans = true;
+    for (i, v) in [(0usize, 0usize), (1, 0), (2, 1), (3, 4)] {
+        let len = 1000.0 + 7.0 * i as f64;
+        let mips = 90.0 + 13.0 * i as f64;
+        let a = add_task(&mut w, 0, len, mips);
+        let b = add_task(&mut r, 0, len, mips);
+        assert_eq!(a, b);
+        w.start_task(a, vm(v), 1.0);
+        r.start_task(b, vm(v), 1.0);
+    }
+    for hi in 0..w.hosts.len() {
+        let h = host(hi);
+        assert_eq!(w.host_cpu_util(h), r.host_cpu_util(h), "cpu host {h}");
+        assert_eq!(w.host_ram_util(h), r.host_ram_util(h), "ram host {h}");
+        assert_eq!(w.host_disk_util(h), r.host_disk_util(h), "disk host {h}");
+        assert_eq!(w.host_bw_util(h), r.host_bw_util(h), "bw host {h}");
+        assert_eq!(w.host_task_count(h), r.host_task_count(h), "count host {h}");
+    }
+    // Detach one and re-check: subtotals are recomputed, not drifted.
+    w.complete_task(TaskId::new(1));
+    r.complete_task(TaskId::new(1));
+    for hi in 0..w.hosts.len() {
+        let h = host(hi);
+        assert_eq!(w.host_cpu_util(h), r.host_cpu_util(h), "cpu after detach {h}");
+        assert_eq!(w.host_ram_util(h), r.host_ram_util(h), "ram after detach {h}");
+    }
+    w.assert_consistent();
+}
+
+#[test]
+fn reset_task_restores_work_and_counts_restart() {
+    let mut w = world();
+    let t = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(t, vm(0), 1.0);
+    w.advance(5.0);
+    w.reset_task(t, 30.0);
+    assert_eq!(w.task(t).state, TaskState::Pending);
+    assert_eq!(w.task(t).remaining_mi, 1000.0);
+    assert_eq!(w.task(t).restarts, 1);
+    assert_eq!(w.task(t).restart_time, 30.0);
+    assert!(w.vms[vm(0)].tasks.is_empty());
+    w.assert_consistent();
+}
+
+#[test]
+fn complete_and_kill_detach_from_vm() {
+    let mut w = world();
+    let t1 = add_task(&mut w, 0, 1000.0, 100.0);
+    let t2 = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(t1, vm(0), 1.0);
+    w.start_task(t2, vm(0), 1.0);
+    w.advance(1.0);
+    w.complete_task(t1);
+    w.kill_task(t2);
+    assert!(matches!(w.task(t1).state, TaskState::Completed { .. }));
+    assert_eq!(w.task(t2).state, TaskState::Killed);
+    assert!(w.vms[vm(0)].tasks.is_empty());
+    assert_eq!(w.completed_log, vec![t1]);
+    w.assert_consistent();
+}
+
+#[test]
+fn best_mitigation_vm_prefers_low_straggler_ema() {
+    let mut w = world();
+    for h in &mut w.hosts {
+        h.straggler_ema = 0.9;
+    }
+    let target_host = host(3);
+    w.hosts[target_host].straggler_ema = 0.0;
+    let v = w.best_mitigation_vm(None).unwrap();
+    assert_eq!(w.vms[v].host, target_host);
+    // excluding that host picks another one
+    let v2 = w.best_mitigation_vm(Some(target_host)).unwrap();
+    assert_ne!(w.vms[v2].host, target_host);
+}
+
+#[test]
+fn straggler_ema_updates() {
+    let mut w = world();
+    w.note_straggler(host(0), true);
+    assert!((w.hosts[host(0)].straggler_ema - 0.2).abs() < 1e-12);
+    w.note_straggler(host(0), false);
+    assert!((w.hosts[host(0)].straggler_ema - 0.16).abs() < 1e-12);
+}
+
+// ------------------------------------------------- index registry
+
+#[test]
+fn sets_track_lifecycle() {
+    let mut w = world();
+    let t1 = add_task(&mut w, 0, 1000.0, 100.0);
+    let t2 = add_task(&mut w, 0, 1000.0, 100.0);
+    assert_eq!(w.pending(), vec![t1, t2]);
+    assert!(w.running().is_empty());
+    assert_eq!(w.active_task_count(), 2);
+    assert_eq!(w.job_active_count(job(0)), 2);
+
+    w.start_task(t1, vm(0), 1.0);
+    assert_eq!(w.pending(), vec![t2]);
+    assert_eq!(w.running(), vec![t1]);
+
+    assert!(w.hold_task(t2, 50.0));
+    assert_eq!(w.held(), vec![t2]);
+    assert!(w.pending().is_empty());
+    assert_eq!(w.release_expired_holds(), 0);
+    w.advance(50.0);
+    assert_eq!(w.release_expired_holds(), 1);
+    assert_eq!(w.pending(), vec![t2]);
+
+    w.complete_task(t1);
+    assert!(w.running().is_empty());
+    assert_eq!(w.job_active_count(job(0)), 1);
+    w.kill_task(t2);
+    assert_eq!(w.active_task_count(), 0);
+    assert_eq!(w.job_active_count(job(0)), 0);
+    w.assert_consistent();
+}
+
+#[test]
+fn active_job_set_follows_finish_job() {
+    let mut w = world();
+    let t = add_task(&mut w, 0, 1000.0, 100.0);
+    w.add_job(mk_job(0, vec![t], false));
+    assert!(w.has_active_jobs());
+    assert_eq!(w.active_jobs(), vec![job(0)]);
+    w.start_task(t, vm(0), 1.0);
+    w.advance(10.0);
+    w.complete_task(t);
+    w.finish_job(job(0));
+    assert!(!w.has_active_jobs());
+    assert_eq!(w.active_job_count(), 0);
+    assert!(matches!(w.job(job(0)).state, JobState::Done { .. }));
+    w.assert_consistent();
+}
+
+#[test]
+fn clone_map_tracks_single_live_clone() {
+    let mut w = world();
+    let orig = add_task(&mut w, 0, 1000.0, 100.0);
+    w.start_task(orig, vm(0), 4.0);
+    let clone_id = TaskId::new(w.n_tasks());
+    w.add_task(Task {
+        id: clone_id,
+        job: job(0),
+        length_mi: 1000.0,
+        demand: w.task(orig).demand,
+        state: TaskState::Pending,
+        vm: None,
+        last_vm: None,
+        remaining_mi: 1000.0,
+        submit_t: 0.0,
+        first_start_t: None,
+        restart_time: 0.0,
+        restarts: 0,
+        slowdown: 1.0,
+        speculative_of: Some(orig),
+        mitigated: true,
+    });
+    assert_eq!(w.clone_of(orig), Some(clone_id));
+    assert_eq!(w.live_clone_count(), 1);
+    w.kill_task(clone_id);
+    assert_eq!(w.clone_of(orig), None);
+    assert_eq!(w.live_clone_count(), 0);
+    w.assert_consistent();
+}
+
+#[test]
+fn finish_heap_matches_scan_minimum() {
+    let mut w = world();
+    let mut r = world();
+    // Mirror worlds: identical ops, one indexed, one reference.
+    r.reference_scans = true;
+    for (len, mips, v, slow) in
+        [(1000.0, 100.0, 0usize, 1.0), (4000.0, 200.0, 1, 2.0), (900.0, 50.0, 2, 1.0)]
+    {
+        let a = add_task(&mut w, 0, len, mips);
+        let b = add_task(&mut r, 0, len, mips);
+        assert_eq!(a, b);
+        w.start_task(a, vm(v), slow);
+        r.start_task(b, vm(v), slow);
+    }
+    let fast = w.next_finish_time();
+    let slow = r.next_finish_time();
+    assert_eq!(fast, slow, "heap vs scan minimum");
+    // Advance both to the first finish and compare again.
+    let te = fast.unwrap();
+    assert_eq!(w.advance(te), r.advance(te));
+    w.assert_consistent();
+}
+
+/// Satellite (§11): rate-consistency arm — an indexed world and a
+/// reference world driven through identical random op sequences must
+/// agree **bitwise** on every task rate and on `next_finish_time`
+/// after every op, while `assert_consistent` recounts the maintained
+/// rates (and the heap's live-entry coverage) against a from-scratch
+/// reference pass.
+#[test]
+fn prop_rates_bitwise_match_reference_under_random_ops() {
+    ptest::check("world-rate-consistency", 20, |rng| {
+        let mut w = world();
+        let mut r = world();
+        r.reference_scans = true;
+        let n_jobs = 2 + rng.below(3);
+        for j in 0..n_jobs {
+            let q = 1 + rng.below(5);
+            let mut tasks = Vec::new();
+            for _ in 0..q {
+                let len = rng.range(500.0, 5000.0);
+                let mips = rng.range(80.0, 400.0);
+                let a = add_task(&mut w, j, len, mips);
+                let b = add_task(&mut r, j, len, mips);
+                assert_eq!(a, b);
+                tasks.push(a);
+            }
+            for world in [&mut w, &mut r] {
+                world.add_job(mk_job(j, tasks.clone(), false));
+            }
+        }
+        for _ in 0..120 {
+            match rng.below(8) {
+                0 => {
+                    let t = w.pending().first().copied();
+                    if let Some(t) = t {
+                        let v = vm(rng.below(w.vms.len()));
+                        if w.vm_available(v) {
+                            let slow = rng.range(1.0, 6.0);
+                            w.start_task(t, v, slow);
+                            r.start_task(t, v, slow);
+                        }
+                    }
+                }
+                1 => {
+                    let t = pick(&mut w, rng, Which::Running);
+                    if let Some(t) = t {
+                        w.complete_task(t);
+                        r.complete_task(t);
+                    }
+                }
+                2 => {
+                    let t = pick(&mut w, rng, Which::Running);
+                    if let Some(t) = t {
+                        w.kill_task(t);
+                        r.kill_task(t);
+                    }
+                }
+                3 => {
+                    let t = pick(&mut w, rng, Which::Running);
+                    if let Some(t) = t {
+                        w.reset_task(t, 30.0);
+                        r.reset_task(t, 30.0);
+                    }
+                }
+                4 => {
+                    let to = w.now + rng.range(0.1, 60.0);
+                    let dw = w.advance(to);
+                    let dr = r.advance(to);
+                    if dw != dr {
+                        return Err(format!("advance divergence: {dw:?} vs {dr:?}"));
+                    }
+                    for t in dw {
+                        w.complete_task(t);
+                        r.complete_task(t);
+                    }
+                }
+                5 => {
+                    let h = host(rng.below(w.hosts.len()));
+                    let until = w.now + rng.range(1.0, 80.0);
+                    w.set_host_down(h, until);
+                    r.set_host_down(h, until);
+                }
+                6 => {
+                    let h = host(rng.below(w.hosts.len()));
+                    let load = rng.range(0.0, 0.6);
+                    w.set_background_load(h, load);
+                    r.set_background_load(h, load);
+                }
+                _ => {
+                    let v = vm(rng.below(w.vms.len()));
+                    let at = w.now + rng.range(1.0, 50.0);
+                    w.set_vm_ready_at(v, at);
+                    r.set_vm_ready_at(v, at);
+                }
+            }
+            // Bitwise rate agreement for every task ever created.
+            for ti in 0..w.n_tasks() {
+                let t = TaskId::new(ti);
+                let a = w.task_rate(t);
+                let b = r.task_rate(t);
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("task {t} rate drift: indexed {a} reference {b}"));
+                }
+            }
+            let (fa, fb) = (w.next_finish_time(), r.next_finish_time());
+            if fa.map(f64::to_bits) != fb.map(f64::to_bits) {
+                return Err(format!("next_finish_time drift: {fa:?} vs {fb:?}"));
+            }
+            w.assert_consistent();
+        }
+        Ok(())
+    });
+}
+
+/// Which membership view to draw a random member from.
+enum Which {
+    Pending,
+    Running,
+}
+
+/// Random member of a borrowed view, copied out before any mutation (the
+/// explicit escape-hatch pattern the zero-alloc getters require).
+fn pick(w: &mut World, rng: &mut crate::util::rng::Rng, which: Which) -> Option<TaskId> {
+    let view = match which {
+        Which::Pending => w.pending(),
+        Which::Running => w.running(),
+    };
+    if view.is_empty() {
+        None
+    } else {
+        Some(view[rng.below(view.len())])
+    }
+}
+
+/// Satellite: property-style invariant check — pending/running/held and
+/// per-job counters stay consistent with task states under random
+/// place/hold/kill/complete/reset/speculate sequences.
+#[test]
+fn prop_indexes_consistent_under_random_ops() {
+    ptest::check("world-index-consistency", 30, |rng| {
+        let mut w = world();
+        // Trace-consistency arm: record every transition and check,
+        // after each random op, that the event stream recounts to the
+        // same live sets as the world's indexes.
+        #[cfg(feature = "sim-trace")]
+        w.set_trace(TraceSink::mem());
+        // 2–4 jobs with 1–5 tasks each.
+        let n_jobs = 2 + rng.below(3);
+        for j in 0..n_jobs {
+            let q = 1 + rng.below(5);
+            let mut tasks = Vec::new();
+            for _ in 0..q {
+                tasks.push(add_task(&mut w, j, rng.range(500.0, 5000.0), rng.range(80.0, 400.0)));
+            }
+            let dd = rng.chance(0.5);
+            w.add_job(mk_job(j, tasks, dd));
+        }
+        for _ in 0..150 {
+            match rng.below(11) {
+                0 => {
+                    // place a pending task
+                    let t = w.pending().first().copied();
+                    if let Some(t) = t {
+                        let v = vm(rng.below(w.vms.len()));
+                        if w.vm_available(v) {
+                            w.start_task(t, v, rng.range(1.0, 6.0));
+                        }
+                    }
+                }
+                1 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Running) {
+                        w.complete_task(t);
+                    }
+                }
+                2 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Running) {
+                        w.kill_task(t);
+                    }
+                }
+                3 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Running) {
+                        w.reset_task(t, 30.0);
+                    }
+                }
+                4 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Pending) {
+                        let until = w.now + rng.range(1.0, 100.0);
+                        w.hold_task(t, until);
+                    }
+                }
+                5 => {
+                    let dt = rng.range(0.1, 60.0);
+                    let to = w.now + dt;
+                    for t in w.advance(to) {
+                        w.complete_task(t);
+                    }
+                    w.release_expired_holds();
+                }
+                6 => {
+                    // speculate a running original via the mitigation path
+                    let orig = w
+                        .running()
+                        .iter()
+                        .copied()
+                        .find(|&t| w.task(t).speculative_of.is_none() && w.clone_of(t).is_none());
+                    if let Some(t) = orig {
+                        let _ = crate::mitigation::speculate(&mut w, t, rng.range(1.0, 3.0));
+                    }
+                }
+                7 => {
+                    // close out jobs whose tasks are all inactive
+                    let jobs = w.active_jobs().into_owned();
+                    for j in jobs {
+                        if w.job_active_count(j) == 0 {
+                            w.finish_job(j);
+                        }
+                    }
+                }
+                8 => {
+                    // host fault (possibly overlapping a live outage)
+                    let h = host(rng.below(w.hosts.len()));
+                    let until = w.now + rng.range(1.0, 80.0);
+                    w.set_host_down(h, until);
+                }
+                9 => {
+                    // VM readiness delay (VmCreation-style fault)
+                    let v = vm(rng.below(w.vms.len()));
+                    let at = w.now + rng.range(1.0, 50.0);
+                    w.set_vm_ready_at(v, at);
+                }
+                _ => {
+                    // background-load shift (rate-change event)
+                    let h = host(rng.below(w.hosts.len()));
+                    let load = rng.range(0.0, 0.6);
+                    w.set_background_load(h, load);
+                }
+            }
+            w.assert_consistent();
+            #[cfg(feature = "sim-trace")]
+            {
+                let rc = crate::sim::trace::recount(w.trace_events());
+                if rc.pending.as_slice() != w.pending().as_ref()
+                    || rc.running.as_slice() != w.running().as_ref()
+                    || rc.held.as_slice() != w.held().as_ref()
+                    || rc.active_jobs.as_slice() != w.active_jobs().as_ref()
+                {
+                    return Err(format!(
+                        "event recount disagrees with live sets: {rc:?} vs \
+                         pending={:?} running={:?} held={:?} jobs={:?}",
+                        w.pending(),
+                        w.running(),
+                        w.held(),
+                        w.active_jobs()
+                    ));
+                }
+            }
+        }
+        // Accessors agree with a forced reference re-scan — including
+        // the load aggregates and the availability index, bitwise.
+        let pend = w.pending().into_owned();
+        let run = w.running().into_owned();
+        let held = w.held().into_owned();
+        let jobs = w.active_jobs().into_owned();
+        let avail = w.available_vms().into_owned();
+        let utils: Vec<(f64, f64, f64, f64, usize)> = (0..w.hosts.len())
+            .map(|hi| {
+                let h = host(hi);
+                (
+                    w.host_cpu_util(h),
+                    w.host_ram_util(h),
+                    w.host_disk_util(h),
+                    w.host_bw_util(h),
+                    w.host_task_count(h),
+                )
+            })
+            .collect();
+        w.reference_scans = true;
+        if pend != w.pending().into_owned()
+            || run != w.running().into_owned()
+            || held != w.held().into_owned()
+            || jobs != w.active_jobs().into_owned()
+        {
+            return Err("indexed accessors disagree with reference scans".into());
+        }
+        if avail != w.available_vms().into_owned() {
+            return Err("availability index disagrees with reference scan".into());
+        }
+        for (hi, &(cpu, ram, disk, bw, n)) in utils.iter().enumerate() {
+            let h = host(hi);
+            let refer =
+                (w.host_cpu_util(h), w.host_ram_util(h), w.host_disk_util(h), w.host_bw_util(h));
+            if (cpu, ram, disk, bw) != refer {
+                return Err(format!(
+                    "host {h} aggregates disagree: indexed {:?} reference {refer:?}",
+                    (cpu, ram, disk, bw)
+                ));
+            }
+            if n != w.host_task_count(h) {
+                return Err(format!("host {h} task count disagrees"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite (ids): the borrowed-view getters — the zero-alloc slices the
+/// tentpole introduced — must stay sorted, duplicate-free, and equal to a
+/// from-scratch recount over `debug_tasks`/`debug_jobs` after every
+/// random op, and `active_tasks(job)` must enumerate exactly the active
+/// originals of each job's task list.
+#[test]
+fn prop_borrowed_views_match_reference_recount() {
+    ptest::check("world-borrowed-views", 20, |rng| {
+        let mut w = world();
+        let n_jobs = 2 + rng.below(3);
+        for j in 0..n_jobs {
+            let q = 1 + rng.below(5);
+            let mut tasks = Vec::new();
+            for _ in 0..q {
+                tasks.push(add_task(&mut w, j, rng.range(500.0, 5000.0), rng.range(80.0, 400.0)));
+            }
+            w.add_job(mk_job(j, tasks, false));
+        }
+        for _ in 0..80 {
+            match rng.below(6) {
+                0 => {
+                    let t = w.pending().first().copied();
+                    if let Some(t) = t {
+                        let v = vm(rng.below(w.vms.len()));
+                        if w.vm_available(v) {
+                            w.start_task(t, v, rng.range(1.0, 6.0));
+                        }
+                    }
+                }
+                1 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Running) {
+                        w.complete_task(t);
+                    }
+                }
+                2 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Running) {
+                        w.reset_task(t, 30.0);
+                    }
+                }
+                3 => {
+                    if let Some(t) = pick(&mut w, rng, Which::Pending) {
+                        let until = w.now + rng.range(1.0, 50.0);
+                        w.hold_task(t, until);
+                    }
+                }
+                4 => {
+                    let to = w.now + rng.range(0.1, 40.0);
+                    for t in w.advance(to) {
+                        w.complete_task(t);
+                    }
+                    w.release_expired_holds();
+                }
+                _ => {
+                    let h = host(rng.below(w.hosts.len()));
+                    w.set_background_load(h, rng.range(0.0, 0.6));
+                }
+            }
+            // Recount every view from the O(total) debug walk.
+            let recount = |pred: &dyn Fn(&Task) -> bool| -> Vec<TaskId> {
+                w.debug_tasks().iter().filter(|t| pred(t)).map(|t| t.id).collect()
+            };
+            let pend = recount(&|t| t.state == TaskState::Pending);
+            let run = recount(&|t| t.is_running());
+            let held = recount(&|t| matches!(t.state, TaskState::Held { .. }));
+            for (name, view, expect) in [
+                ("pending", w.pending(), &pend),
+                ("running", w.running(), &run),
+                ("held", w.held(), &held),
+            ] {
+                if view.as_ref() != expect.as_slice() {
+                    return Err(format!("{name} view drift: {view:?} vs {expect:?}"));
+                }
+                if !view.windows(2).all(|p| p[0] < p[1]) {
+                    return Err(format!("{name} view not strictly ascending"));
+                }
+            }
+            let jobs: Vec<JobId> =
+                w.debug_jobs().iter().filter(|j| j.is_active()).map(|j| j.id).collect();
+            if w.active_jobs().as_ref() != jobs.as_slice() {
+                return Err("active_jobs view drift".into());
+            }
+            for j in w.debug_jobs() {
+                let expect: Vec<TaskId> = j
+                    .tasks
+                    .iter()
+                    .copied()
+                    .filter(|&t| w.task(t).is_active())
+                    .collect();
+                let got: Vec<TaskId> = w.active_tasks(j.id).collect();
+                if got != expect {
+                    return Err(format!("active_tasks({}) drift: {got:?} vs {expect:?}", j.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,151 @@
+//! Fleet topology: physical-host / VM construction and host- and
+//! VM-level state transitions (faults, background load, readiness).
+//!
+//! Owns the invariant that **all host up/down and VM-readiness changes go
+//! through world methods** (`set_host_down`, `set_vm_ready_at`,
+//! `set_background_load`) — never by writing `down_until` /
+//! `background_load` / `ready_at` directly — so the availability index
+//! (`load.rs`) and the dirty-host rate set (`rates.rs`) can never miss a
+//! transition.
+
+use crate::config::SimConfig;
+use crate::sim::types::*;
+use crate::sim::world::ids::Arena;
+use crate::sim::world::World;
+
+/// Build the PM fleet + VMs from config (Table 3 PM types).
+pub(super) fn build_fleet(cfg: &SimConfig) -> (Arena<HostId, Host>, Arena<VmId, Vm>) {
+    let mut hosts: Arena<HostId, Host> = Arena::new();
+    let mut vms: Arena<VmId, Vm> = Arena::new();
+    for (type_idx, (&count, ty)) in cfg.pm_counts.iter().zip(&cfg.pm_types).enumerate() {
+        for _ in 0..count {
+            let hid = HostId::new(hosts.len());
+            let mut host = Host {
+                id: hid,
+                type_idx,
+                mips_total: ty.mips_per_core * ty.cores as f64,
+                ram_gb: ty.ram_gb,
+                disk_gb: ty.disk_gb,
+                bw_kbps: ty.bw_kbps,
+                power_idle_w: ty.power_idle_w,
+                power_peak_w: ty.power_peak_w,
+                cost_per_interval: ty.cost_per_interval,
+                vms: Vec::new(),
+                down_until: None,
+                straggler_ema: 0.0,
+                background_load: 0.0,
+            };
+            for _ in 0..ty.vms_per_pm {
+                let vid = VmId::new(vms.len());
+                host.vms.push(vid);
+                vms.push(Vm {
+                    id: vid,
+                    host: hid,
+                    mips: host.mips_total / ty.vms_per_pm as f64,
+                    ram_gb: ty.ram_gb / ty.vms_per_pm as f64,
+                    tasks: Vec::new(),
+                    ready_at: 0.0,
+                });
+            }
+            hosts.push(host);
+        }
+    }
+    (hosts, vms)
+}
+
+impl World {
+    /// Whether a VM can currently accept work.
+    pub fn vm_available(&self, vm: VmId) -> bool {
+        let v = &self.vms[vm];
+        v.ready_at <= self.now && self.hosts[v.host].is_up(self.now)
+    }
+
+    /// Absolute time at which a VM (re)enters the available set: the later
+    /// of its readiness and its host's recovery.  `<= now` iff available.
+    pub(super) fn vm_wake_time(&self, vm: VmId) -> f64 {
+        let v = &self.vms[vm];
+        v.ready_at.max(self.hosts[v.host].down_until.unwrap_or(f64::NEG_INFINITY))
+    }
+
+    /// Take a host down until `until`, updating the availability index.
+    /// All host up/down transitions must go through here (not by writing
+    /// `down_until` directly) so the index cannot drift.
+    pub fn set_host_down(&mut self, host: HostId, until: f64) {
+        self.hosts[host].down_until = Some(until);
+        self.mark_host_rates_dirty(host);
+        if !self.reference_scans {
+            // Index loop splits the borrow of `hosts[host].vms` from the
+            // `&mut self` availability refresh, as in `recompute_host`.
+            for vi in 0..self.hosts[host].vms.len() {
+                let vm = self.hosts[host].vms[vi];
+                self.refresh_vm_availability(vm);
+            }
+        }
+    }
+
+    /// Set a host's background load (the per-interval trace refresh),
+    /// dirtying its rates only when the value actually changed (bitwise).
+    /// All background-load writes must go through here so the dirty-host
+    /// set cannot miss a rate change.
+    pub fn set_background_load(&mut self, host: HostId, load: f64) {
+        if self.hosts[host].background_load.to_bits() != load.to_bits() {
+            self.hosts[host].background_load = load;
+            self.mark_host_rates_dirty(host);
+        }
+    }
+
+    /// Set a VM's readiness time, updating the availability index.
+    pub fn set_vm_ready_at(&mut self, vm: VmId, ready_at: f64) {
+        self.vms[vm].ready_at = ready_at;
+        if !self.reference_scans {
+            self.refresh_vm_availability(vm);
+        }
+    }
+
+    /// Update the per-host straggler moving average (Alg. 1's node-choice
+    /// signal): called when a task is classified at completion.
+    pub fn note_straggler(&mut self, host: HostId, was_straggler: bool) {
+        let h = &mut self.hosts[host];
+        let x = if was_straggler { 1.0 } else { 0.0 };
+        h.straggler_ema = 0.8 * h.straggler_ema + 0.2 * x;
+    }
+
+    /// Pick the up-VM on the host with the lowest straggler moving average
+    /// (the paper's mitigation target choice), breaking ties toward
+    /// unloaded hosts so mitigation does not itself create contention.
+    /// Candidates come from the availability index (ascending id — the
+    /// order the pre-index `0..vms.len()` filter produced), and the
+    /// per-host key reads the O(1) aggregates.
+    pub fn best_mitigation_vm(&self, exclude_host: Option<HostId>) -> Option<VmId> {
+        let mut best: Option<((i64, i64, usize), VmId)> = None;
+        for &v in self.available_vms().iter() {
+            let host = self.vms[v].host;
+            if Some(host) == exclude_host {
+                continue;
+            }
+            // Quantized straggler EMA first (the paper's signal), then
+            // host CPU utilization, then VM queue depth.
+            let key = (
+                (self.hosts[host].straggler_ema * 10.0) as i64,
+                (self.host_cpu_util(host) * 20.0) as i64,
+                self.vms[v].tasks.len(),
+            );
+            if best.map(|(b, _)| key < b).unwrap_or(true) {
+                best = Some((key, v));
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+
+    /// Fleet-wide maxima used for feature normalization.
+    pub fn fleet_max(&self) -> (f64, f64, f64, f64) {
+        let mut m = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for h in &self.hosts {
+            m.0 = m.0.max(h.mips_total);
+            m.1 = m.1.max(h.ram_gb);
+            m.2 = m.2.max(h.disk_gb);
+            m.3 = m.3.max(h.bw_kbps);
+        }
+        m
+    }
+}

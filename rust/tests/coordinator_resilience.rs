@@ -313,6 +313,86 @@ fn kill_mid_batch_then_resume_is_bit_identical() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Kill → compact → resume bit-identity: after an interrupted run leaves
+/// the journal with a superseded duplicate record (a retry re-append)
+/// and a torn final line, `journal::compact` must preserve exactly the
+/// resume view, and a resumed batch over the compacted journal (with
+/// post-batch `--compact` hygiene on) must be bit-identical to an
+/// uninterrupted reference batch.
+#[test]
+fn kill_compact_resume_is_bit_identical() {
+    let dir = tmp_dir("compact_resume");
+    let journal_path = dir.join("results.jsonl");
+    let seeds = [1u64, 2, 3, 4, 5, 6];
+    let healthy: ManagerFactory =
+        Arc::new(|_: &SimConfig| Ok(Box::new(NullManager) as Box<dyn Manager>));
+
+    // Reference: uninterrupted batch, no journal.
+    let reference =
+        run_many_cells(cells_for(&seeds), 2, PathBuf::from("unused"), chaos_opts(0, healthy))
+            .unwrap();
+
+    // "Interrupted" run: only seeds 1–3 complete and get journaled.
+    let crashy: ManagerFactory = Arc::new(|cfg: &SimConfig| {
+        if cfg.seed > 3 {
+            anyhow::bail!("simulated crash before completion");
+        }
+        Ok(Box::new(NullManager) as Box<dyn Manager>)
+    });
+    let mut opts = chaos_opts(0, crashy);
+    opts.journal = Some(journal_path.clone());
+    run_many_cells(cells_for(&seeds), 2, PathBuf::from("unused"), opts).unwrap();
+
+    // Crash aftermath: one record duplicated byte-for-byte (a cell
+    // re-appended after a crash-window retry) plus a torn final line.
+    {
+        use std::io::Write as _;
+        let text = std::fs::read_to_string(&journal_path).unwrap();
+        let first = text.lines().next().unwrap().to_string();
+        let mut f = std::fs::OpenOptions::new().append(true).open(&journal_path).unwrap();
+        writeln!(f, "{first}").unwrap();
+        write!(f, "{{\"cell\":\"torn\",\"cfg\":\"00").unwrap();
+    }
+    let before = journal::load_map(&journal_path).unwrap();
+    assert_eq!(before.len(), 3);
+
+    // Compaction drops the superseded duplicate and the torn line but
+    // leaves the resume view untouched.
+    let (kept, dropped) = journal::compact(&journal_path).unwrap();
+    assert_eq!((kept, dropped), (3, 2));
+    let after = journal::load_map(&journal_path).unwrap();
+    assert_eq!(after.len(), before.len());
+    for (key, m) in &before {
+        assert!(m.diff_deterministic(&after[key]).is_none(), "{key:?}");
+    }
+
+    // Resume over the compacted journal, with post-batch compaction on.
+    let built = Arc::new(AtomicUsize::new(0));
+    let counting: ManagerFactory = {
+        let built = Arc::clone(&built);
+        Arc::new(move |_: &SimConfig| {
+            built.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(NullManager) as Box<dyn Manager>)
+        })
+    };
+    let mut opts = chaos_opts(0, counting);
+    opts.journal = Some(journal_path.clone());
+    opts.resume = true;
+    opts.compact = true;
+    let resumed = run_many_cells(cells_for(&seeds), 2, PathBuf::from("unused"), opts).unwrap();
+    assert_eq!(built.load(Ordering::SeqCst), 3, "resume must only run the missing cells");
+    for (o, r) in resumed.iter().zip(&reference) {
+        assert_eq!(o.label, r.label);
+        let (got, want) = (o.result.as_ref().unwrap(), r.result.as_ref().unwrap());
+        got.assert_deterministic_eq(want, &o.label);
+    }
+    // Post-run hygiene: one line per cell, still resume-complete.
+    let text = std::fs::read_to_string(&journal_path).unwrap();
+    assert_eq!(text.lines().count(), seeds.len());
+    assert_eq!(journal::load_map(&journal_path).unwrap().len(), seeds.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn changed_config_invalidates_journaled_cell() {
     let dir = tmp_dir("digest");
